@@ -1,0 +1,113 @@
+"""Analytic FLOPs / bytes model for the roofline (v5e target).
+
+``cost_analysis()`` does not multiply while-loop bodies by trip count, so the
+roofline probe (benchmarks/roofline.py) lowers 1- and 2-layer *unrolled*
+variants and extrapolates linearly in L. This module supplies the
+independent first-principles cross-check:
+
+* MODEL_FLOPS = 6 N D (train) / 2 N D (prefill) / 2 N_active per token
+  (decode), with N_active for MoE counting shared + top-k experts only,
+  plus the standard attention term.
+* HBM bytes: weight reads + activation traffic + KV-cache reads (decode).
+
+The MODEL_FLOPS / HLO_FLOPs ratio in EXPERIMENTS.md §Roofline uses these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+
+def _param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    """Total and active parameter counts (analytic, matches init_params)."""
+    d, f, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    per_layer_attn = d * H * hd + 2 * d * KV * hd + H * hd * d
+    if cfg.block_type == "rwkv6":
+        per_layer = 5 * d * d + d * cfg.d_ff * 2 + d * d  # time+channel mix
+        per_layer_active = per_layer
+    else:
+        if cfg.moe is not None:
+            fe = cfg.moe.d_expert or f
+            routed = cfg.moe.n_experts * 3 * d * fe
+            shared = (3 * d * fe * cfg.moe.n_shared) if cfg.moe.n_shared else 0
+            active = (cfg.moe.top_k * 3 * d * fe) + shared
+            ffn_total, ffn_active = routed + shared, active
+        else:
+            n_mats = 3 if cfg.act == "silu_glu" else 2
+            ffn_total = ffn_active = n_mats * d * f
+        mamba = 0
+        if cfg.block_type == "hybrid":
+            di, N = cfg.ssm_expand * d, cfg.ssm_state
+            mamba = d * 2 * di + di * 2 * N + di * d + di * max(8, d // 16) * 2
+        per_layer = per_layer_attn + ffn_total + mamba
+        per_layer_active = per_layer_attn + ffn_active + mamba
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+    n_total = L * per_layer + embed
+    n_active = L * per_layer_active + embed
+    if cfg.is_encdec:
+        enc = cfg.encoder.n_layers * (per_layer_attn + 2 * d * f)
+        cross = L * (per_layer_attn)
+        n_total += enc + cross
+        n_active += enc + cross
+    return {"total": float(n_total), "active": float(n_active)}
+
+
+@dataclasses.dataclass
+class RooflineEstimate:
+    model_flops_global: float        # useful FLOPs for the whole step
+    hbm_bytes_per_device: float      # analytic min HBM traffic per chip
+    n_total: float
+    n_active: float
+
+
+def estimate(cfg: ModelConfig, shape: InputShape, chips: int = 256,
+             remat_factor: float = 1.0) -> RooflineEstimate:
+    """remat_factor deliberately defaults to 1.0: MODEL_FLOPS is the *pure*
+    useful-compute count, so MODEL_FLOPS / HLO_FLOPs directly exposes remat
+    recompute and redundancy in the compiled program."""
+    counts = _param_counts(cfg)
+    N, Na = counts["total"], counts["active"]
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    d, L, hd, H = cfg.d_model, cfg.n_layers, cfg.head_dim, cfg.n_heads
+
+    # attention matmul flops (qk + pv), causal halves it; windows cap it
+    if cfg.block_type == "rwkv6":
+        attn_fl_train = tokens * L * (cfg.d_model * cfg.rwkv_head_size * 4)
+        attn_fl_tok = L * cfg.d_model * cfg.rwkv_head_size * 4
+    else:
+        ctx = S if cfg.sliding_window is None else min(S, cfg.sliding_window)
+        attn_fl_train = 4 * L * H * hd * tokens * ctx / 2
+        attn_fl_tok = 4 * L * H * hd * ctx        # decode: 1 query vs cache
+
+    emb_bytes = 2.0  # bf16
+    if shape.kind == "train":
+        mf = 6.0 * Na * tokens * remat_factor + 3.0 * attn_fl_train * remat_factor
+        # per device: weights(+grad+momentum traffic) + activations
+        hbm = (N * emb_bytes * 3 / chips) + tokens / chips * d * L * 2 * emb_bytes
+    elif shape.kind == "prefill":
+        mf = 2.0 * Na * tokens + attn_fl_train
+        hbm = N * emb_bytes / chips + tokens / chips * d * L * emb_bytes
+    else:  # decode: one token per sequence
+        mf = (2.0 * Na + attn_fl_tok) * B
+        kv_bytes = (2 * L * cfg.n_kv_heads * hd * emb_bytes *
+                    (S if cfg.sliding_window is None else
+                     min(S, cfg.sliding_window)))
+        if cfg.block_type == "rwkv6":
+            kv_bytes = L * cfg.n_rwkv_heads * cfg.rwkv_head_size ** 2 * 4
+        hbm = N * emb_bytes / chips + B * kv_bytes / chips
+    return RooflineEstimate(mf, hbm, N, Na)
+
+
+if __name__ == "__main__":
+    from repro.configs import ARCH_IDS, get_config
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        c = _param_counts(cfg)
+        print(f"{a:24s} N={c['total']/1e9:7.2f}B  active={c['active']/1e9:7.2f}B")

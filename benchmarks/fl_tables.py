@@ -1,0 +1,458 @@
+"""One benchmark per paper table/figure (Wang & Gao, AAAI 2025).
+
+Every function reproduces the *shape* of one paper artifact at CPU scale
+(synthetic data, small cohorts) and returns (rows, derived) where ``derived``
+is the headline comparison the paper's claim rests on. benchmarks/run.py
+prints them as CSV; EXPERIMENTS.md §Paper-claims records the full tables.
+
+Scale knobs default to quick settings; the EXPERIMENTS run uses
+``scale=2`` for tighter trends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compensation
+from repro.core.client import LocalProgram, make_local_update
+from repro.core.disparity import cosine_distance, l1_disparity, tree_sub
+from repro.core.gradient_inversion import GIConfig, GradientInverter
+from repro.core.server import FLConfig, Server
+from repro.core.sparsify import topk_mask
+from repro.core.uniqueness import is_unique
+from repro.data.partition import (client_label_histograms, dirichlet_partition,
+                                  pad_client_shards)
+from repro.data.staleness import intertwined_schedule
+from repro.data.synthetic import (make_feature_dataset, make_image_dataset,
+                                  make_timeseries_dataset)
+from repro.data.variant import VariantDataStream
+from repro.models.small import cnn1d, lenet, mlp3
+
+KEY = jax.random.PRNGKey(0)
+
+
+@dataclasses.dataclass
+class Scale:
+    n_classes: int = 5
+    hw: int = 16
+    n_per_class: int = 100
+    clients: int = 12
+    m: int = 24
+    n_slow: int = 3
+    rounds: int = 30          # slow clients deliver from round tau on; too
+    local_steps: int = 5      # few rounds and strategies don't differentiate
+    lr: float = 0.1
+    gi_iters: int = 30
+    gi_nrec: int = 12
+    target: int = 2
+
+    @classmethod
+    def of(cls, scale: int = 1) -> "Scale":
+        if scale >= 2:
+            return cls(n_per_class=100, clients=12, rounds=45, gi_iters=40)
+        return cls()
+
+
+def _setting(sc: Scale, alpha=0.1, tau=10, seed=0, style=0):
+    x, y = make_image_dataset(sc.n_per_class, n_classes=sc.n_classes,
+                              hw=sc.hw, seed=seed, style=style)
+    tx, ty = make_image_dataset(30, n_classes=sc.n_classes, hw=sc.hw,
+                                seed=seed + 99, style=style)
+    idx = dirichlet_partition(y, sc.clients, alpha=alpha, seed=seed)
+    cx, cy, cm = pad_client_shards(x, y, idx, m=sc.m)
+    hist = client_label_histograms(y, idx, sc.n_classes)
+    sched = intertwined_schedule(hist, target_class=sc.target,
+                                 n_slow=sc.n_slow, tau=tau)
+    return cx, cy, cm, hist, sched, tx, ty
+
+
+def _run(sc: Scale, strategy, cx, cy, cm, sched, tx, ty, variant=None,
+         rounds=None, switching=True, gi_keep=1.0, seed=0):
+    model = lenet(n_classes=sc.n_classes, in_hw=sc.hw)
+    prog = LocalProgram(steps=sc.local_steps, lr=sc.lr, momentum=0.5)
+    cfg = FLConfig(strategy=strategy, rounds=rounds or sc.rounds,
+                   gi=GIConfig(n_rec=sc.gi_nrec, iters=sc.gi_iters, lr=0.1,
+                               keep_fraction=gi_keep),
+                   switching=switching, eval_every=rounds or sc.rounds,
+                   seed=seed)
+    srv = Server(model, prog, cfg, cx, cy, cm, sched, tx, ty,
+                 variant_stream=variant)
+    srv.run()
+    final = [m for m in srv.metrics if "acc" in m][-1]
+    return final, srv
+
+
+# --------------------------------------------------------------------------- #
+# A staleness "lab": one client's stale update vs the truth at tau
+# --------------------------------------------------------------------------- #
+
+
+def _staleness_lab(tau_steps: int, seed=0):
+    """Returns (w0, w_now, client (x, y), w_stale, w_true, program, model)."""
+    model = mlp3(n_features=12, n_classes=4, hidden=24)
+    program = LocalProgram(steps=5, lr=0.1, momentum=0.5)
+    w0 = model.init(jax.random.PRNGKey(seed))
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed + 1), 4)
+    means = jax.random.normal(k1, (4, 12)) * 2
+    y = jax.random.randint(k2, (24,), 0, 4)
+    x = means[y] + 0.3 * jax.random.normal(k3, (24, 12))
+    oy = jax.random.randint(k4, (24,), 0, 4)
+    ox = means[oy] + 0.6 * jax.random.normal(k3, (24, 12))
+    lu = make_local_update(model.apply, program)
+    w_stale, _ = lu(w0, x, y)
+    w_now = w0
+    for _ in range(tau_steps):
+        w_now, _ = lu(w_now, ox, oy)
+    w_true, _ = lu(w_now, x, y)
+    return model, program, w0, w_now, (x, y), w_stale, w_true
+
+
+def table1_taylor_error(taus=(5, 10, 20, 50)) -> Tuple[List[Dict], float]:
+    """Table 1: error of 1st-order Taylor compensation grows with staleness."""
+    rows = []
+    for tau in taus:
+        _, _, w0, w_now, _, w_stale, w_true = _staleness_lab(tau)
+        comp = compensation.first_order(tree_sub(w_stale, w0), w_now, w0)
+        true_delta = tree_sub(w_true, w_now)
+        rows.append({"staleness": tau,
+                     "cos_err": float(cosine_distance(comp, true_delta)),
+                     "l1_err": float(l1_disparity(comp, true_delta))})
+    growth = rows[-1]["cos_err"] / max(rows[0]["cos_err"], 1e-9)
+    return rows, growth
+
+
+def fig4_gi_vs_first_order(taus=(2, 5, 10, 20), gi_iters=120
+                           ) -> Tuple[List[Dict], float]:
+    """Fig. 4: GI estimation error < 1st-order error, esp. at high tau."""
+    rows = []
+    for tau in taus:
+        model, program, w0, w_now, (x, y), w_stale, w_true = _staleness_lab(tau)
+        true_delta = tree_sub(w_true, w_now)
+        fo = compensation.first_order(tree_sub(w_stale, w0), w_now, w0)
+        inv = GradientInverter(model.apply, model.input_shape, model.n_classes,
+                               program, GIConfig(n_rec=12, iters=gi_iters, lr=0.1))
+        drec, _ = inv.invert(w0, w_stale, jax.random.PRNGKey(tau))
+        w_hat = inv.estimate_unstale(w_now, drec)
+        rows.append({
+            "staleness": tau,
+            "gi_err": float(l1_disparity(tree_sub(w_hat, w_now), true_delta)),
+            "fo_err": float(l1_disparity(fo, true_delta)),
+        })
+    last = rows[-1]
+    return rows, last["gi_err"] / max(last["fo_err"], 1e-9)
+
+
+def table4_sparsification(keeps=(1.0, 0.10, 0.05, 0.01), gi_iters=80
+                          ) -> Tuple[List[Dict], float]:
+    """Table 4: top-K sparsification cuts GI compute with small error cost.
+
+    Compute proxy: iterations needed to reach the dense run's halfway loss;
+    the paper counts GI iterations the same way.
+    """
+    model, program, w0, w_now, (x, y), w_stale, w_true = _staleness_lab(8)
+    true_delta = tree_sub(w_true, w_now)
+    stale_delta = tree_sub(w_stale, w0)
+    rows = []
+    dense_target = None
+    for keep in keeps:
+        mask = None if keep >= 1.0 else topk_mask(stale_delta, keep)
+        inv = GradientInverter(model.apply, model.input_shape, model.n_classes,
+                               program,
+                               GIConfig(n_rec=12, iters=gi_iters, lr=0.1,
+                                        keep_fraction=keep))
+        drec, info = inv.invert(w0, w_stale, KEY, mask=mask)
+        w_hat = inv.estimate_unstale(w_now, drec)
+        err = float(l1_disparity(tree_sub(w_hat, w_now), true_delta))
+        losses = info["losses"]
+        if dense_target is None:
+            dense_target = losses[len(losses) // 2]
+        # iterations (in units of 10) until below the dense halfway loss
+        it_needed = next((i * 10 for i, l in enumerate(losses)
+                          if l <= dense_target), gi_iters)
+        rows.append({"keep_fraction": keep, "est_error": err,
+                     "iters_to_target": it_needed,
+                     "final_gi_loss": losses[-1]})
+    i05 = min(2, len(rows) - 1)
+    err_increase = rows[i05]["est_error"] / max(rows[0]["est_error"], 1e-9)
+    return rows, err_increase
+
+
+def table5_warm_start(change_fracs=(0.0, 0.05, 0.20, 0.50), gi_iters=60
+                      ) -> Tuple[List[Dict], float]:
+    """Table 5: warm-starting D_rec saves iterations when data is ~fixed."""
+    model, program, w0, w_now, (x, y), w_stale, _ = _staleness_lab(4)
+    inv = GradientInverter(model.apply, model.input_shape, model.n_classes,
+                           program, GIConfig(n_rec=12, iters=gi_iters, lr=0.1))
+    drec_prev, info_cold = inv.invert(w0, w_stale, KEY)
+    cold_final = info_cold["losses"][-1]
+    lu = make_local_update(model.apply, program)
+    rows = []
+    for frac in change_fracs:
+        # client data changes by frac; new stale update from changed data
+        n_change = int(frac * x.shape[0])
+        kx = jax.random.PRNGKey(int(frac * 100) + 7)
+        x2 = x.at[:n_change].set(jax.random.normal(kx, (n_change, x.shape[1])))
+        w_stale2, _ = lu(w0, x2, y)
+        # iterations for warm start to reach the cold run's final loss
+        drec, info = inv.invert(w0, w_stale2, KEY, init=drec_prev,
+                                iters=gi_iters)
+        losses = info["losses"]
+        it_needed = next((i * 10 for i, l in enumerate(losses)
+                          if l <= cold_final), gi_iters)
+        rows.append({"change_frac": frac, "iters_to_cold_final": it_needed,
+                     "warm_first_loss": losses[0]})
+    saved = 1.0 - rows[0]["iters_to_cold_final"] / gi_iters
+    return rows, saved
+
+
+def table9_fixed_data(sc: Scale, tau=10, strategies=None
+                      ) -> Tuple[List[Dict], float]:
+    """Table 9: accuracy per strategy, fixed-data scenario."""
+    strategies = strategies or ["unweighted", "weighted", "first_order",
+                                "w_pred", "asyn_tiers", "ours", "unstale"]
+    cx, cy, cm, hist, sched, tx, ty = _setting(sc, tau=tau)
+    rows = []
+    accs = {}
+    for s in strategies:
+        final, _ = _run(sc, s, cx, cy, cm, sched, tx, ty)
+        rows.append({"strategy": s, "acc": final["acc"],
+                     "acc_target": final.get(f"acc_class_{sc.target}", 0.0)})
+        accs[s] = final["acc"]
+    best_base = max(v for k, v in accs.items() if k not in ("ours", "unstale"))
+    return rows, accs.get("ours", 0.0) - best_base
+
+
+def table10_alpha(sc: Scale, alphas=(1.0, 0.1, 0.01),
+                  strategies=("unweighted", "weighted", "ours")
+                  ) -> Tuple[List[Dict], float]:
+    rows = []
+    gaps = []
+    for a in alphas:
+        cx, cy, cm, hist, sched, tx, ty = _setting(sc, alpha=a)
+        accs = {}
+        for s in strategies:
+            final, _ = _run(sc, s, cx, cy, cm, sched, tx, ty)
+            accs[s] = final["acc"]
+            rows.append({"alpha": a, "strategy": s, "acc": final["acc"]})
+        gaps.append(accs["ours"] - accs["unweighted"])
+    return rows, gaps[-1]
+
+
+def table11_staleness(sc: Scale, taus=(5, 10, 20),
+                      strategies=("unweighted", "weighted", "ours")
+                      ) -> Tuple[List[Dict], float]:
+    rows = []
+    gaps = []
+    for tau in taus:
+        cx, cy, cm, hist, sched, tx, ty = _setting(sc, tau=tau)
+        accs = {}
+        for s in strategies:
+            final, _ = _run(sc, s, cx, cy, cm, sched, tx, ty)
+            accs[s] = final["acc"]
+            rows.append({"staleness": tau, "strategy": s, "acc": final["acc"]})
+        gaps.append(accs["ours"] - accs["unweighted"])
+    return rows, gaps[-1]
+
+
+def tables12_13_variant(sc: Scale, tau=8, rates=(0.5, 1.0, 2.0),
+                        strategies=("unweighted", "ours")
+                        ) -> Tuple[List[Dict], float]:
+    """Tables 12/13: variant-data scenario (style drift), rate sweep."""
+    rows = []
+    gaps = []
+    for rate in rates:
+        cx, cy, cm, hist, sched, tx, ty = _setting(sc, tau=tau)
+        px, py = make_image_dataset(sc.n_per_class, n_classes=sc.n_classes,
+                                    hw=sc.hw, style=1, seed=1)
+        accs = {}
+        for s in strategies:
+            stream = VariantDataStream(cx.copy(), cy, cm, px, py, rate=rate,
+                                       seed=0)
+            final, _ = _run(sc, s, cx, cy, cm, sched, tx, ty, variant=stream)
+            accs[s] = final["acc"]
+            rows.append({"rate": rate, "strategy": s, "acc": final["acc"]})
+        gaps.append(accs["ours"] - accs["unweighted"])
+    return rows, float(np.mean(gaps))
+
+
+def table14_modalities(sc: Scale, taus=(2, 5, 10)) -> Tuple[List[Dict], float]:
+    """Appendix A: MLP / 1D-CNN on tabular and time-series data."""
+    rows = []
+    final_gap = 0.0
+    for modality in ("tabular", "timeseries"):
+        if modality == "tabular":
+            x, y = make_feature_dataset(40, n_classes=6, n_features=16)
+            tx, ty = make_feature_dataset(15, n_classes=6, n_features=16,
+                                          seed=5)
+            model = mlp3(n_features=16, n_classes=6, hidden=32)
+        else:
+            x, y = make_timeseries_dataset(40, n_classes=5, seq=32, channels=4)
+            tx, ty = make_timeseries_dataset(15, n_classes=5, seq=32,
+                                             channels=4, seed=5)
+            model = cnn1d(seq=32, channels=4, n_classes=5)
+        idx = dirichlet_partition(y, sc.clients, alpha=0.1, seed=0)
+        cx, cy, cm = pad_client_shards(x, y, idx, m=sc.m)
+        hist = client_label_histograms(y, idx, model.n_classes)
+        for tau in taus:
+            sched = intertwined_schedule(hist, 1, sc.n_slow, tau)
+            accs = {}
+            for s in ("unweighted", "ours"):
+                prog = LocalProgram(steps=sc.local_steps, lr=sc.lr,
+                                    momentum=0.5)
+                cfg = FLConfig(strategy=s, rounds=sc.rounds,
+                               gi=GIConfig(n_rec=12, iters=sc.gi_iters, lr=0.1),
+                               eval_every=sc.rounds, seed=0)
+                srv = Server(model, prog, cfg, cx, cy, cm, sched,
+                             jnp.asarray(tx), jnp.asarray(ty))
+                srv.run()
+                final = [m for m in srv.metrics if "acc" in m][-1]
+                accs[s] = final["acc"]
+            rows.append({"modality": modality, "staleness": tau,
+                         "acc_unweighted": accs["unweighted"],
+                         "acc_ours": accs["ours"],
+                         "rel_improvement": accs["ours"] - accs["unweighted"]})
+            final_gap = rows[-1]["rel_improvement"]
+    return rows, final_gap
+
+
+def table15_weighting_tradeoff(sc: Scale, tau=10) -> Tuple[List[Dict], float]:
+    """Table 15: increased weights help stale clients but hurt overall."""
+    cx, cy, cm, hist, sched, tx, ty = _setting(sc, tau=tau)
+    rows = []
+    results = {}
+    for label, a, b in (("reduced", 0.25, 10.0), ("none", 0.0, 0.0),
+                        ("increased", -0.25, 10.0)):
+        model = lenet(n_classes=sc.n_classes, in_hw=sc.hw)
+        prog = LocalProgram(steps=sc.local_steps, lr=sc.lr, momentum=0.5)
+        cfg = FLConfig(strategy="weighted" if label != "none" else "unweighted",
+                       weighted_a=a, weighted_b=b, rounds=sc.rounds,
+                       eval_every=sc.rounds, seed=0)
+        srv = Server(model, prog, cfg, cx, cy, cm, sched, tx, ty)
+        srv.run()
+        final = [m for m in srv.metrics if "acc" in m][-1]
+        rows.append({"weighting": label, "acc_all": final["acc"],
+                     "acc_stale_class": final.get(f"acc_class_{sc.target}", 0)})
+        results[label] = final
+    trade = (results["increased"][f"acc_class_{sc.target}"]
+             - results["none"][f"acc_class_{sc.target}"])
+    return rows, trade
+
+
+def tables19_20_local_programs(taus=8) -> Tuple[List[Dict], float]:
+    """Tables 19/20: GI vs 1st-order error across local steps / optimizers."""
+    rows = []
+    for steps in (1, 5, 10):
+        model = mlp3(n_features=12, n_classes=4, hidden=24)
+        program = LocalProgram(steps=steps, lr=0.1, momentum=0.5)
+        w0 = model.init(KEY)
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+        means = jax.random.normal(k1, (4, 12)) * 2
+        y = jax.random.randint(k2, (24,), 0, 4)
+        x = means[y] + 0.3 * jax.random.normal(k3, (24, 12))
+        lu = make_local_update(model.apply, program)
+        w_stale, _ = lu(w0, x, y)
+        w_now = w0
+        oy = jax.random.randint(k3, (24,), 0, 4)
+        for _ in range(taus):
+            w_now, _ = lu(w_now, means[oy] + jax.random.normal(k3, (24, 12)),
+                          oy)
+        w_true, _ = lu(w_now, x, y)
+        true_delta = tree_sub(w_true, w_now)
+        inv = GradientInverter(model.apply, model.input_shape, model.n_classes,
+                               program, GIConfig(n_rec=12, iters=80, lr=0.1))
+        drec, _ = inv.invert(w0, w_stale, KEY)
+        w_hat = inv.estimate_unstale(w_now, drec)
+        fo = compensation.first_order(tree_sub(w_stale, w0), w_now, w0)
+        rows.append({"local_steps": steps, "optimizer": "sgdm",
+                     "gi_err": float(l1_disparity(tree_sub(w_hat, w_now), true_delta)),
+                     "fo_err": float(l1_disparity(fo, true_delta))})
+    for opt in ("sgd", "sgdm", "adam", "fedprox"):
+        model = mlp3(n_features=12, n_classes=4, hidden=24)
+        program = LocalProgram(steps=5, lr=0.05 if opt == "adam" else 0.1,
+                               optimizer=opt)
+        w0 = model.init(KEY)
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+        means = jax.random.normal(k1, (4, 12)) * 2
+        y = jax.random.randint(k2, (24,), 0, 4)
+        x = means[y] + 0.3 * jax.random.normal(k3, (24, 12))
+        lu = make_local_update(model.apply, program)
+        w_stale, _ = lu(w0, x, y)
+        w_now = w0
+        oy = jax.random.randint(k3, (24,), 0, 4)
+        for _ in range(taus):
+            w_now, _ = lu(w_now, means[oy] + jax.random.normal(k3, (24, 12)), oy)
+        w_true, _ = lu(w_now, x, y)
+        true_delta = tree_sub(w_true, w_now)
+        inv = GradientInverter(model.apply, model.input_shape, model.n_classes,
+                               program, GIConfig(n_rec=12, iters=80, lr=0.1))
+        drec, _ = inv.invert(w0, w_stale, KEY)
+        w_hat = inv.estimate_unstale(w_now, drec)
+        fo = compensation.first_order(tree_sub(w_stale, w0), w_now, w0)
+        rows.append({"local_steps": 5, "optimizer": opt,
+                     "gi_err": float(l1_disparity(tree_sub(w_hat, w_now), true_delta)),
+                     "fo_err": float(l1_disparity(fo, true_delta))})
+    sgdm = [r for r in rows if r["optimizer"] == "sgdm"][0]
+    return rows, sgdm["gi_err"] / max(sgdm["fo_err"], 1e-9)
+
+
+def fig9_uniqueness_accuracy(sc: Scale, rounds=12) -> Tuple[List[Dict], float]:
+    """Fig. 9 / Table 8: uniqueness detection accuracy during training."""
+    cx, cy, cm, hist, sched, tx, ty = _setting(sc, alpha=0.02, tau=4)
+    model = lenet(n_classes=sc.n_classes, in_hw=sc.hw)
+    prog = LocalProgram(steps=sc.local_steps, lr=sc.lr, momentum=0.5)
+    cfg = FLConfig(strategy="unweighted", rounds=rounds, eval_every=rounds)
+    srv = Server(model, prog, cfg, cx, cy, cm, sched, tx, ty)
+    # ground truth: a stale client is unique iff its dominant class is held
+    # (mostly) by slow clients only
+    dominant = hist.argmax(1)
+    rows = []
+    correct = total = 0
+    for t in range(rounds):
+        srv.round(t)
+        if t < 4:
+            continue
+        fast_updates = []
+        lu = srv._local_update
+        for i in sched.fast_clients[:6]:
+            x, y, m = srv._client_shard(i)
+            w = lu(srv.global_params, x, y, m)[0]
+            fast_updates.append(tree_sub(w, srv.global_params))
+        for i in sched.slow_clients:
+            x, y, m = srv._client_shard(i)
+            w = lu(srv.global_params, x, y, m)[0]
+            upd = tree_sub(w, srv.global_params)
+            pred_unique, _ = is_unique(upd, fast_updates)
+            truly_unique = dominant[i] not in dominant[sched.fast_clients]
+            correct += int(pred_unique == truly_unique)
+            total += 1
+        rows.append({"round": t, "cum_accuracy": correct / max(total, 1)})
+    return rows, correct / max(total, 1)
+
+
+def switching_tables_2_3(sc: Scale, tau=6, rounds=24) -> Tuple[List[Dict], float]:
+    """Tables 2/3 + Fig. 5: E1/E2 crossover and gamma-decay smoothing."""
+    cx, cy, cm, hist, sched, tx, ty = _setting(sc, tau=tau)
+    rows = []
+    accs = {}
+    for decay in (0.0, 0.05, 0.10, 0.20):
+        model = lenet(n_classes=sc.n_classes, in_hw=sc.hw)
+        prog = LocalProgram(steps=sc.local_steps, lr=sc.lr, momentum=0.5)
+        cfg = FLConfig(strategy="ours", rounds=rounds,
+                       gi=GIConfig(n_rec=sc.gi_nrec, iters=sc.gi_iters, lr=0.1),
+                       switching=True, switch_check_every=2,
+                       eval_every=rounds, seed=0)
+        srv = Server(model, prog, cfg, cx, cy, cm, sched, tx, ty)
+        srv.monitor.decay_fraction = decay
+        srv.run()
+        final = [m for m in srv.metrics if "acc" in m][-1]
+        rows.append({"decay_fraction": decay, "acc": final["acc"],
+                     "switched_at": srv.monitor.switched_at,
+                     "n_observations": len(srv.monitor.history)})
+        accs[decay] = final["acc"]
+    return rows, accs[0.10] - accs[0.0]

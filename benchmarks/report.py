@@ -1,0 +1,74 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from saved
+artifacts (benchmarks/artifacts/{dryrun,roofline}/*.json).
+
+Usage: PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def _fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(mesh_filter: str) -> str:
+    files = sorted(glob.glob(os.path.join(HERE, "artifacts", "dryrun", "*.json")))
+    rows = []
+    for f in files:
+        r = json.load(open(f))
+        if r["mesh"] != mesh_filter:
+            continue
+        c = r["collectives"]["bytes_by_kind"]
+        coll_parts = " ".join(
+            f"{k.replace('collective-','c-')}:{v/2**20:.0f}M"
+            for k, v in sorted(c.items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} | {r['mode']} | "
+            f"{_fmt_bytes(r['memory']['peak_per_device'])} | "
+            f"{r['cost']['flops']:.3g} | "
+            f"{r['collectives']['total_bytes']/2**20:.0f} | "
+            f"{coll_parts or '—'} | {r['compile_s']}s |")
+    hdr = ("| arch | shape | variant | mode | peak GiB/chip | HLO flops/chip"
+           " (scan-bodies-once) | coll MiB/chip | collective mix | compile |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table(tag: str = "") -> str:
+    pat = os.path.join(HERE, "artifacts", "roofline", f"*{tag}.json")
+    files = sorted(glob.glob(pat))
+    rows = []
+    for f in files:
+        if tag == "" and "__opt" in f:
+            continue
+        r = json.load(open(f))
+        t = r["terms_s"]
+        dom = r["bottleneck"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} | {r['mode']} | "
+            f"{t['compute']*1e3:.2f} | {t['memory']*1e3:.2f} | "
+            f"{t['collective']*1e3:.2f} | **{dom}** | "
+            f"{r['model_flops_global']:.3g} | {r['useful_ratio']:.2f} |")
+    hdr = ("| arch | shape | variant | mode | compute ms | memory ms | "
+           "collective ms | bottleneck | MODEL_FLOPS | useful ratio |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def main():
+    print("### Dry-run 16x16 (single pod)\n")
+    print(dryrun_table("16x16"))
+    print("\n### Dry-run 2x16x16 (multi-pod)\n")
+    print(dryrun_table("2x16x16"))
+    print("\n### Roofline (single-pod, L-extrapolated probe)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Roofline analysis (§Roofline of EXPERIMENTS.md).
+
+For each (arch x shape) on the single-pod 16x16 mesh:
+
+  compute term    = HLO_FLOPs_per_chip / 197e12          (bf16 peak, v5e)
+  memory term     = HLO_bytes_per_chip / 819e9           (HBM bw)
+  collective term = collective_bytes_per_chip / 50e9     (ICI link bw)
+
+``cost_analysis()`` counts while-loop bodies ONCE, so numbers from the full
+scan-over-layers dry-run undercount by ~L. This probe therefore lowers
+1-layer and 2-layer UNROLLED variants of the same (arch, shape, sharding)
+and extrapolates linearly: term(L) = t2 + (L-2) * (t2 - t1). The per-layer
+delta also captures per-layer collectives that the full dry-run's while
+body hides. RWKV/Mamba time scans stay scanned (their in-scan FLOPs are
+added from benchmarks/analytic.py, noted per row).
+
+Run (needs the 512-device env, so invoke as a module like the dry-run):
+  PYTHONPATH=src python -m benchmarks.roofline [--arch A --shape S] [--all]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "roofline")
+
+
+def probe(arch: str, shape_name: str, mode: Optional[str] = None,
+          overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Lower 1/2-layer unrolled variants, extrapolate to full depth."""
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_one
+    from repro.models.config import INPUT_SHAPES
+    from benchmarks.analytic import estimate
+
+    cfg_full = get_config(arch)
+    L = cfg_full.n_layers
+    shape = INPUT_SHAPES[shape_name]
+
+    if mode is None:
+        # force the FULL model's production mode (1/2-layer probes would
+        # otherwise auto-select plain tp and measure the wrong sharding)
+        from repro.launch.dryrun import DEFAULT_FSDP_THRESHOLD, _param_count
+        n_params = _param_count(cfg_full)
+        if shape.kind == "train":
+            mode = "fsdp_tp" if n_params > DEFAULT_FSDP_THRESHOLD else "tp"
+        else:
+            mode = "tp2" if n_params * 2 / 16 > 8e9 else "tp"
+
+    recs = {}
+    base_over = dict(overrides or {})
+    for nl in (1, 2):
+        over = dict(base_over)
+        over.update(n_layers=nl, probe_unroll=True)
+        if shape.kind == "decode" and shape.seq_len > 65536:
+            over["attn_chunk"] = 16384
+        recs[nl] = lower_one(arch, shape_name, mode=mode, n_micro=1,
+                             overrides=over)
+
+    def term(field, sub=None):
+        def get(r):
+            v = r[field]
+            return v[sub] if sub else v
+        t1, t2 = get(recs[1]), get(recs[2])
+        return t2 + (L - 2) * (t2 - t1), t2 - t1
+
+    flops, flops_per_layer = term("cost", "flops")
+    bytes_, bytes_per_layer = term("cost", "bytes_accessed")
+    coll, coll_per_layer = term("collectives", "total_bytes")
+
+    # microbatch correction: probe ran n_micro=1; the real step does the
+    # same work per token either way (flops/bytes scale with tokens which
+    # are identical) -> no correction needed.
+    est = estimate(get_config(arch), shape, chips=CHIPS)
+    scan_extra = 0.0
+    if cfg_full.block_type in ("rwkv6", "hybrid") and shape.kind != "decode":
+        # recurrent time-scan flops not visible to the unrolled probe
+        scan_extra = est.model_flops_global * 0.05  # bounded note, see doc
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": "16x16",
+        "mode": recs[2]["mode"], "variant": recs[2]["variant"],
+        "n_layers": L,
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_,
+        "coll_bytes_per_chip": coll,
+        "per_layer": {"flops": flops_per_layer, "bytes": bytes_per_layer,
+                      "coll": coll_per_layer},
+        "terms_s": {
+            "compute": flops / PEAK_FLOPS,
+            "memory": bytes_ / HBM_BW,
+            "collective": coll / ICI_BW,
+        },
+        "model_flops_global": est.model_flops_global,
+        "n_total": est.n_total, "n_active": est.n_active,
+        "useful_ratio": est.model_flops_global / max(flops * CHIPS, 1.0),
+        "collectives_by_kind_2l": recs[2]["collectives"]["bytes_by_kind"],
+        "scan_extra_note": scan_extra,
+    }
+    rec["bottleneck"] = max(rec["terms_s"], key=rec["terms_s"].get)
+    return rec
+
+
+def save(rec, out_dir=ART_DIR, tag=""):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}{tag}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mode")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides key=value (true/false/int/float)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("true", "false"):
+            v = v == "true"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+    from repro.configs import ARCH_IDS
+    from repro.models.config import INPUT_SHAPES
+
+    combos = ([(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    for arch, shp in combos:
+        try:
+            rec = probe(arch, shp, mode=args.mode, overrides=overrides or None)
+            save(rec, tag=args.tag)
+            t = rec["terms_s"]
+            print(f"{arch:24s} {shp:12s} compute={t['compute']*1e3:9.3f}ms "
+                  f"memory={t['memory']*1e3:9.3f}ms "
+                  f"coll={t['collective']*1e3:9.3f}ms "
+                  f"bottleneck={rec['bottleneck']:10s} "
+                  f"useful={rec['useful_ratio']:.2f}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL {arch} {shp}: {repr(e)[:160]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Gradient inversion for TOKEN models — the paper's Appendix A path.
+
+For text, D_rec cannot be discrete tokens; the paper prescribes estimating
+data in the *continuous embedding space*. This example runs the full
+mechanism on a tiny causal LM:
+
+  1. a "client" fine-tunes the LM on its private token stream (LocalUpdate);
+  2. the server, holding only the stale weights, optimizes soft EMBEDDING
+     sequences + soft next-token targets so that retraining reproduces the
+     stale update (Eq. 6 with L1 disparity);
+  3. the unstale estimate LocalUpdate(w_now; D_rec) is compared against the
+     true unstale update and against 1st-order Taylor compensation.
+
+Run:  PYTHONPATH=src python examples/fl_llm_embedding_gi.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compensation
+from repro.core.client import LocalProgram, make_local_update
+from repro.core.disparity import cosine_distance, l1_disparity, tree_sub
+from repro.core.gradient_inversion import GIConfig, GradientInverter
+
+V, D, S, N = 64, 32, 12, 16      # vocab, embed dim, seq len, |D_rec|
+KEY = jax.random.PRNGKey(0)
+
+
+# --- a tiny causal LM operating on (soft) embeddings ----------------------- #
+def init_lm(key):
+    ks = jax.random.split(key, 4)
+    s = lambda k, i, o: jax.random.normal(k, (i, o)) / jnp.sqrt(i)
+    return {"embed": jax.random.normal(ks[0], (V, D)) * 0.1,
+            "w1": s(ks[1], D, 64), "w2": s(ks[2], 64, D),
+            "head": s(ks[3], D, V)}
+
+
+def apply_embeds(params, x_embeds):
+    """x_embeds (n, S, D) -> next-token logits (n, S, V); causal via a
+    shifted cumulative-mean context mixer (cheap but order-sensitive)."""
+    csum = jnp.cumsum(x_embeds, axis=1)
+    denom = jnp.arange(1, x_embeds.shape[1] + 1)[None, :, None]
+    ctx = csum / denom
+    h = jax.nn.gelu(ctx @ params["w1"]) @ params["w2"] + x_embeds
+    return h @ params["head"]
+
+
+def embed(params, tokens):
+    return params["embed"][tokens]
+
+
+# --- client data: a skewed token distribution ------------------------------ #
+k1, k2, k3 = jax.random.split(KEY, 3)
+client_tokens = jax.random.randint(k1, (N, S + 1), 0, V // 4)      # "dialect"
+other_tokens = jax.random.randint(k2, (N, S + 1), V // 4, V)
+
+w0 = init_lm(k3)
+program = LocalProgram(steps=5, lr=0.2, momentum=0.5)
+
+# LocalUpdate over embedding inputs with soft targets (n, S, V):
+lu = make_local_update(apply_embeds, program)
+
+
+def client_update(params, tokens):
+    x = embed(params, tokens[:, :-1])
+    y = jax.nn.one_hot(tokens[:, 1:], V) * 50.0    # peaked soft targets
+    return lu(params, x, y)[0]
+
+
+w_stale = client_update(w0, client_tokens)
+
+# staleness: global model advances tau rounds on other clients' data
+w_now = w0
+for _ in range(8):
+    w_now = client_update(w_now, other_tokens)
+w_true = client_update(w_now, client_tokens)
+true_delta = tree_sub(w_true, w_now)
+
+# --- GI in embedding space -------------------------------------------------- #
+inv = GradientInverter(apply_embeds, input_shape=(S, D), n_classes=V,
+                       program=program,
+                       cfg=GIConfig(n_rec=N, iters=250, lr=0.05))
+# D_rec: soft embeddings (N, S, D) + soft per-position targets (N, S, V)
+kx, ky = jax.random.split(jax.random.PRNGKey(7))
+init_drec = (jax.random.normal(kx, (N, S, D)) * 0.1,
+             jax.random.normal(ky, (N, S, V)) * 0.1)
+drec, info = inv.invert(w0, w_stale, jax.random.PRNGKey(1), init=init_drec)
+w_hat = inv.estimate_unstale(w_now, drec)
+
+e_gi = float(l1_disparity(tree_sub(w_hat, w_now), true_delta))
+e_stale = float(l1_disparity(tree_sub(w_stale, w0), true_delta))
+fo = compensation.first_order(tree_sub(w_stale, w0), w_now, w0)
+e_fo = float(l1_disparity(fo, true_delta))
+
+print(f"GI loss: {info['losses'][0]:.4f} -> {info['losses'][-1]:.4f} "
+      f"({info['iters_used']} iters)")
+print(f"L1 error vs true unstale update:")
+print(f"  raw stale update : {e_stale:.5f}")
+print(f"  1st-order Taylor : {e_fo:.5f}")
+print(f"  GI (embeddings)  : {e_gi:.5f}")
+assert info["losses"][-1] < info["losses"][0], "GI failed to optimize"
+assert e_gi < e_stale, "GI estimate should beat the raw stale update"
+print("OK: embedding-space GI (paper Appendix A) beats raw staleness"
+      + (" and 1st-order" if e_gi < e_fo else ""))
+
+# privacy check: recovered embeddings are not near any true token embedding
+true_emb = embed(w0, client_tokens[:, :-1])
+d_cross = float(jnp.min(jnp.linalg.norm(
+    drec[0][:, :, None, :] - true_emb[:, None, :, :], axis=-1)))
+print(f"min distance recovered-embedding <-> true token embedding: "
+      f"{d_cross:.3f} (distribution-level recovery only)")

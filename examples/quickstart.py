@@ -1,0 +1,47 @@
+"""Quickstart: the paper's technique in ~60 lines.
+
+Builds a tiny FL cohort with intertwined data/device heterogeneity, runs the
+GI-based stale-update conversion against the unweighted baseline, and prints
+the accuracy on the staleness-affected class.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.client import LocalProgram
+from repro.core.gradient_inversion import GIConfig
+from repro.core.server import FLConfig, Server
+from repro.data.partition import (client_label_histograms, dirichlet_partition,
+                                  pad_client_shards)
+from repro.data.staleness import intertwined_schedule
+from repro.data.synthetic import make_image_dataset
+from repro.models.small import lenet
+
+N_CLASSES, HW, TARGET, TAU = 5, 16, 2, 10
+
+# 1. data: Dirichlet(0.1) non-iid shards over 12 clients
+x, y = make_image_dataset(100, n_classes=N_CLASSES, hw=HW)
+tx, ty = make_image_dataset(30, n_classes=N_CLASSES, hw=HW, seed=99)
+idx = dirichlet_partition(y, 12, alpha=0.1, seed=0)
+cx, cy, cm = pad_client_shards(x, y, idx, m=24)
+hist = client_label_histograms(y, idx, N_CLASSES)
+
+# 2. intertwined heterogeneity: the 3 biggest holders of class TARGET are
+#    slow by TAU rounds — exactly the paper's hazard-rescue setting
+sched = intertwined_schedule(hist, target_class=TARGET, n_slow=3, tau=TAU)
+
+# 3. the paper's local program: 5 epochs of SGD(momentum=0.5)
+prog = LocalProgram(steps=5, lr=0.1, momentum=0.5)
+
+for strategy in ("unweighted", "ours"):
+    cfg = FLConfig(strategy=strategy, rounds=30,
+                   gi=GIConfig(n_rec=12, iters=30, lr=0.1),
+                   eval_every=10)
+    server = Server(lenet(n_classes=N_CLASSES, in_hw=HW), prog, cfg,
+                    cx, cy, cm, sched, tx, ty)
+    metrics = server.run()
+    final = [m for m in metrics if "acc" in m][-1]
+    print(f"{strategy:11s}  overall={final['acc']:.3f}  "
+          f"stale-class={final[f'acc_class_{TARGET}']:.3f}")

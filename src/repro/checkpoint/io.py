@@ -1,0 +1,57 @@
+"""Pytree checkpointing (npz-based; the container has no orbax).
+
+Saves any pytree of arrays by flattening with ``jax.tree_util`` key paths as
+npz keys. Server state (round counter, metrics, switch monitor) rides along
+as a JSON sidecar.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_key_str(kp): np.asarray(v) for kp, v in flat}
+    np.savez(path, **arrays)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in flat:
+        arr = data[_key_str(kp)]
+        assert arr.shape == tuple(leaf.shape), (_key_str(kp), arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: str) -> Optional[Dict]:
+    mp = path + ".meta.json"
+    if os.path.exists(mp):
+        with open(mp) as f:
+            return json.load(f)
+    return None

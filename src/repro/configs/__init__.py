@@ -1,0 +1,51 @@
+"""Config registry: one module per assigned architecture (+ paper-scale ones).
+
+``get_config(name)`` returns the full production ModelConfig;
+``get_config(name, reduced=True)`` returns the CPU smoke-test variant
+(2 layers, d_model<=256, <=4 experts) of the same family.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "rwkv6_1_6b",
+    "starcoder2_15b",
+    "qwen1_5_0_5b",
+    "whisper_tiny",
+    "deepseek_moe_16b",
+    "qwen3_1_7b",
+    "hymba_1_5b",
+    "h2o_danube_1_8b",
+    "qwen2_vl_7b",
+    "llama4_scout_17b_a16e",
+]
+
+# public ids (dashes) -> module names
+ALIASES: Dict[str, str] = {
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "starcoder2-15b": "starcoder2_15b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "whisper-tiny": "whisper_tiny",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "hymba-1.5b": "hymba_1_5b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+}
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg: ModelConfig = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,20 @@
+"""DeepSeekMoE-16B [arXiv:2401.06066]: 28L d_model=2048 16H (kv=16)
+fine-grained MoE: 64 routed experts top-6 + 2 shared, d_expert=1408,
+vocab=102400."""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,                     # per-expert hidden width (fine-grained)
+    vocab_size=102400,
+    rope="rope",
+    norm="rmsnorm",
+    act="silu_glu",
+    moe=MoEConfig(n_experts=64, top_k=6, n_shared=2, d_expert=1408),
+)

@@ -1,0 +1,20 @@
+"""H2O-Danube-1.8B [arXiv:2401.16818]: 24L d_model=2560 32H GQA(kv=8)
+d_ff=6912 vocab=32000; llama+mistral mix with sliding-window attention
+(w=4096) — long_500k runs natively through the window."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6912,
+    vocab_size=32000,
+    rope="rope",
+    sliding_window=4096,
+    norm="rmsnorm",
+    act="silu_glu",
+)

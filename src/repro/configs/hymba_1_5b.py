@@ -1,0 +1,24 @@
+"""Hymba-1.5B [arXiv:2411.13676]: 32L d_model=1600 25H GQA(kv=5) d_ff=5504
+vocab=32001 ssm_state=16 — hybrid heads: attention and Mamba/S6 run in
+PARALLEL within every layer and are averaged. Hymba itself uses sliding-
+window attention in all but three layers; we use SWA(1024) uniformly."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    block_type="hybrid",
+    rope="rope",
+    sliding_window=1024,
+    ssm_state=16,
+    ssm_expand=2,
+    norm="rmsnorm",
+    act="silu_glu",
+)

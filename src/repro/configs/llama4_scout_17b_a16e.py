@@ -1,0 +1,22 @@
+"""Llama-4-Scout-17B-16E [hf:meta-llama/Llama-4-Scout-17B-16E]: 48L
+d_model=5120 40H GQA(kv=8) d_ff=8192 vocab=202048; MoE 16 experts top-1
+(+1 shared, Llama-4 style); early-fusion multimodal (vision stubbed —
+text backbone here)."""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,                    # per-expert hidden width
+    vocab_size=202048,
+    rope="rope",
+    rope_theta=500_000.0,
+    norm="rmsnorm",
+    act="silu_glu",
+    moe=MoEConfig(n_experts=16, top_k=1, n_shared=1, d_expert=8192),
+)

@@ -1,0 +1,22 @@
+"""Qwen2-VL-7B [arXiv:2409.12191]: 28L d_model=3584 28H GQA(kv=4) d_ff=18944
+vocab=152064; M-RoPE (t/h/w rotary sections), dynamic-resolution vision tower
+STUBBED — input_specs provides merged text+patch embeddings."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    rope="mrope",
+    mrope_sections=(16, 24, 24),
+    attn_bias=True,
+    norm="rmsnorm",
+    act="silu_glu",
+    frontend="vision",
+)

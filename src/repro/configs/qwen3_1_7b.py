@@ -1,0 +1,22 @@
+"""Qwen3-1.7B [hf:Qwen/Qwen3-8B family]: 28L d_model=2048 16H GQA(kv=8)
+d_ff=6144 vocab=151936; qk_norm; head_dim=128."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=6144,
+    vocab_size=151936,
+    rope="rope",
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    tie_embeddings=True,
+    norm="rmsnorm",
+    act="silu_glu",
+)

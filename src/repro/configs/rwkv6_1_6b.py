@@ -1,0 +1,20 @@
+"""RWKV6 "Finch" 1.6B — attention-free SSM with data-dependent decay
+[arXiv:2404.05892]. 24L d_model=2048 d_ff=7168 vocab=65536; head size 64."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,            # = d_model / rwkv_head_size (bookkeeping only)
+    n_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+    block_type="rwkv6",
+    rope="none",
+    norm="layernorm",      # RWKV uses LayerNorm
+    act="silu_glu",
+    rwkv_head_size=64,
+)

@@ -1,0 +1,21 @@
+"""StarCoder2-15B [arXiv:2402.19173]: 40L d_model=6144 48H GQA(kv=4)
+d_ff=24576 vocab=49152; GQA + RoPE; gelu MLP (non-gated), learned biases.
+long_500k runs only as an explicit sliding-window VARIANT (see DESIGN.md)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    rope="rope",
+    rope_theta=100_000.0,
+    attn_bias=True,
+    norm="layernorm",
+    act="gelu",
+)

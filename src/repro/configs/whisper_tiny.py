@@ -1,0 +1,22 @@
+"""Whisper-tiny [arXiv:2212.04356]: enc-dec, 4L each, d_model=384 6H
+d_ff=1536 vocab=51865. Mel+conv frontend is a STUB (precomputed frame
+embeddings, 1500 frames); this config is the transformer backbone."""
+
+from repro.models.config import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    rope="none",            # sinusoidal positions
+    attn_bias=True,
+    norm="layernorm",
+    act="gelu",
+    encoder=EncoderConfig(n_layers=4, n_ctx=1500),
+    frontend="audio",
+)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: server-side conversion of stale FL model
+# updates into unstale ones via gradient inversion (Wang & Gao, AAAI 2025).
+from repro.core.disparity import cosine_distance, l1_disparity, tree_to_vector  # noqa: F401
+from repro.core.client import LocalProgram, make_local_update  # noqa: F401
+from repro.core.gradient_inversion import GIConfig, GradientInverter  # noqa: F401
+from repro.core.server import FLConfig, Server  # noqa: F401

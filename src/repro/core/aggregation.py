@@ -1,0 +1,48 @@
+"""Server-side aggregation (FedAvg and weighted variants).
+
+FedAvg weights every update by the client's sample count; strategy weights
+(staleness decay, gamma smoothing, tier size) multiply on top (paper §4,
+footnote 3). Aggregation operates on *updates* (deltas from the current
+global model), which is equivalent to weight averaging under equal bases and
+is what makes stale-update conversion composable.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(updates: List[Any], weights: Optional[Sequence[float]] = None) -> Any:
+    """Weighted mean of update pytrees."""
+    assert updates, "no updates to aggregate"
+    if weights is None:
+        weights = [1.0] * len(updates)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def combine(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        return jnp.tensordot(w, stacked, axes=1).astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(combine, *updates)
+
+
+def apply_update(global_params: Any, update: Any, server_lr: float = 1.0) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + server_lr * u.astype(jnp.float32)).astype(p.dtype),
+        global_params, update)
+
+
+def cohort_mean_update(stacked_updates: Any, weights: jax.Array) -> Any:
+    """Vectorized FedAvg over a stacked cohort axis (axis 0) — the form the
+    distributed runtime uses (the leading axis is sharded over the mesh and
+    this mean lowers to an all-reduce)."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def mean(leaf):
+        return jnp.tensordot(w, leaf.astype(jnp.float32), axes=1)
+
+    return jax.tree_util.tree_map(mean, stacked_updates)

@@ -1,0 +1,112 @@
+"""Client-side LocalUpdate (paper Eq. 4/5).
+
+``LocalUpdate(w_global; D_i)`` runs a multi-step local training program and
+returns the locally-trained weights. Two requirements shape the design:
+
+1. The FL runtime vmaps it over the whole cohort (clients are vectorized —
+   this is what shards over the ``data``/``pod`` mesh axes at scale).
+2. Gradient inversion differentiates *through* it w.r.t. the training data
+   (x, y_soft), so it is written as a ``jax.lax.scan`` of optimizer steps —
+   one fused differentiable program, the TPU-native re-expression of the
+   paper's torch loop (DESIGN.md §3).
+
+Labels may be hard ints (real clients) or soft distributions (D_rec), both
+routed through the same soft-label cross entropy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, adam, apply_updates, fedprox_wrap, sgd
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalProgram:
+    """The client's local training program (paper §4.1: 5 epochs of SGD,
+    lr=0.01, momentum=0.5; Appendix E varies steps and optimizer)."""
+
+    steps: int = 5
+    lr: float = 0.01
+    momentum: float = 0.5
+    optimizer: str = "sgdm"         # sgd | sgdm | adam | fedprox
+    fedprox_mu: float = 0.01
+
+    def make(self, global_params=None) -> Optimizer:
+        if self.optimizer == "sgd":
+            return sgd(self.lr)
+        if self.optimizer == "sgdm":
+            return sgd(self.lr, momentum=self.momentum)
+        if self.optimizer == "adam":
+            return adam(self.lr)
+        if self.optimizer == "fedprox":
+            assert global_params is not None
+            return fedprox_wrap(sgd(self.lr, momentum=self.momentum),
+                                self.fedprox_mu, global_params)
+        raise ValueError(self.optimizer)
+
+
+def soft_ce_loss(apply_fn: Callable, params: Any, x: jax.Array, y: jax.Array,
+                 sample_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Cross entropy supporting hard int labels or soft label logits.
+
+    y int (n,) -> one-hot targets; y float (n, C) -> softmax(y) targets
+    (D_rec labels are optimized as unconstrained logits).
+    """
+    logits = apply_fn(params, x).astype(jnp.float32)
+    if jnp.issubdtype(y.dtype, jnp.integer):
+        targets = jax.nn.one_hot(y, logits.shape[-1], dtype=jnp.float32)
+    else:
+        targets = jax.nn.softmax(y.astype(jnp.float32), axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.sum(targets * logp, axis=-1)
+    if sample_mask is None:
+        return jnp.mean(nll)
+    m = sample_mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def make_local_update(apply_fn: Callable, program: LocalProgram):
+    """Returns ``local_update(params, x, y, sample_mask=None) -> new_params``.
+
+    Full-batch GD steps scanned ``program.steps`` times; differentiable in
+    (params, x, y). This is the paper's ``LocalUpdate`` operator reused by
+    (a) real clients, (b) GI's inner loop, (c) the unstale-estimate retrain.
+    """
+
+    def local_update(params, x, y, sample_mask=None):
+        opt = program.make(global_params=params)
+        opt_state = opt.init(params)
+
+        def step(carry, _):
+            p, s = carry
+            loss, grads = jax.value_and_grad(
+                lambda pp: soft_ce_loss(apply_fn, pp, x, y, sample_mask))(p)
+            updates, s = opt.update(grads, s, p)
+            return (apply_updates(p, updates), s), loss
+
+        (p, _), losses = jax.lax.scan(step, (params, opt_state), None,
+                                      length=program.steps)
+        return p, losses
+
+    return local_update
+
+
+def make_cohort_update(apply_fn: Callable, program: LocalProgram):
+    """Vectorized LocalUpdate over a stacked cohort: x (N, n, ...), y (N, n),
+    sample_mask (N, n). Broadcasts params; returns stacked client params.
+
+    At production scale the N axis is sharded over the (pod, data) mesh axes
+    (see repro.launch) — FL aggregation then lowers to an all-reduce.
+    """
+    lu = make_local_update(apply_fn, program)
+
+    def cohort_update(params, xs, ys, masks):
+        return jax.vmap(lambda x, y, m: lu(params, x, y, m)[0])(xs, ys, masks)
+
+    return cohort_update

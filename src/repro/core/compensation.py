@@ -1,0 +1,59 @@
+"""Baseline staleness-handling strategies the paper compares against (§4).
+
+* ``staleness_weight``    — Weighted aggregation, w = 1/(1+e^{a(tau-b)})
+                            with a=0.25, b=10 (Shi et al. 2020; paper §4).
+* ``first_order``         — 1st-Order Taylor compensation with the
+                            lambda*g (.) g Hessian approximation
+                            (Zheng et al. 2017; paper Eq. 1-2).
+* ``w_pred``              — future-global-weight prediction (Hakimi et al.
+                            2019): staleness assumed pre-known, the future
+                            global model is linearly extrapolated and the
+                            first-order compensation applied toward it.
+
+All operate on *updates* (deltas) u = w_client - w_global_base.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.disparity import tree_scale, tree_sub
+
+
+def staleness_weight(tau: float, a: float = 0.25, b: float = 10.0) -> float:
+    """Sigmoid-decay aggregation weight for a stale update (paper §4)."""
+    return float(1.0 / (1.0 + jnp.exp(a * (tau - b))))
+
+
+def first_order(update_stale: Any, w_global_now: Any, w_global_stale: Any,
+                lam: float = 1.0) -> Any:
+    """g(w_t) ~= g(w_{t-tau}) + lam * g (.) g (.) (w_t - w_{t-tau}).
+
+    ``update_stale`` plays the role of the (negative-scaled) gradient g; the
+    compensation moves it toward what it would have been at w_t.
+    """
+    dw = tree_sub(w_global_now, w_global_stale)
+    return jax.tree_util.tree_map(
+        lambda g, d: g + lam * g * g * d, update_stale, dw)
+
+
+def predict_future_global(history: List[Any], tau: int) -> Any:
+    """W-Pred: linear extrapolation of the global weights tau rounds ahead
+    from the last two snapshots (staleness assumed pre-known)."""
+    assert len(history) >= 1
+    if len(history) == 1:
+        return history[-1]
+    w_now, w_prev = history[-1], history[-2]
+    step = tree_sub(w_now, w_prev)
+    return jax.tree_util.tree_map(
+        lambda w, s: w + tau * s.astype(w.dtype), w_now, step)
+
+
+def w_pred(update_stale: Any, history: List[Any], w_global_stale: Any,
+           tau: int, lam: float = 1.0) -> Any:
+    """First-order compensation toward the *predicted* future global model."""
+    w_future = predict_future_global(history, tau)
+    return first_order(update_stale, w_future, w_global_stale, lam)

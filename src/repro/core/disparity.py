@@ -1,0 +1,70 @@
+"""Disparity metrics between model updates (paper Eq. 6, Appendix D).
+
+The paper evaluates ``Disparity[LocalUpdate(w_global^{t-tau}; D_rec),
+w_i^{t-tau}]`` with **L1-norm** during gradient inversion (because D_rec is
+large — Appendix D) and uses **cosine distance** for uniqueness detection
+(Eq. 7) and for reporting estimation errors (Table 1, Fig. 4/5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_to_vector(tree: Any) -> jax.Array:
+    """Flatten a pytree of arrays into one float32 vector (stable order)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+
+def vector_to_tree(vec: jax.Array, like: Any) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        n = l.size
+        out.append(vec[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x, y: x + y.astype(x.dtype), a, b)
+
+
+def tree_scale(a: Any, s) -> Any:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def l1_disparity(update_a: Any, update_b: Any, mask: Optional[jax.Array] = None
+                 ) -> jax.Array:
+    """Mean |a - b| over (optionally masked) coordinates.
+
+    ``update_*`` are pytrees (model deltas or weights); ``mask`` is a flat
+    boolean vector from ``repro.core.sparsify.topk_mask`` — this is the
+    paper's sparsified GI objective (§3.3).
+    """
+    d = jnp.abs(tree_to_vector(update_a) - tree_to_vector(update_b))
+    if mask is None:
+        return jnp.mean(d)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(d * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def cosine_distance(a: Any, b: Any) -> jax.Array:
+    """1 - cos(a, b) over flattened pytrees (paper Eq. 7)."""
+    va, vb = tree_to_vector(a), tree_to_vector(b)
+    na = jnp.linalg.norm(va)
+    nb = jnp.linalg.norm(vb)
+    return 1.0 - jnp.dot(va, vb) / jnp.maximum(na * nb, 1e-12)
+
+
+def l2_distance(a: Any, b: Any) -> jax.Array:
+    return jnp.linalg.norm(tree_to_vector(a) - tree_to_vector(b))

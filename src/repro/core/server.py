@@ -1,0 +1,293 @@
+"""Semi-asynchronous FL server (paper §3, Fig. 2).
+
+Simulation model: at round t every client computes
+``LocalUpdate(w_global^{t - tau_i}; D_i)`` — fast clients (tau=0) deliver
+immediately; slow clients' updates arrive tau rounds late, i.e. the server
+receives an update computed from the *outdated* global model. The server
+never sees slow clients' fresh updates early (no oracle leakage): switching
+decisions use w_i^t only when it arrives at t+tau (paper §3.2).
+
+Strategies (paper §4 baselines + ours):
+  unweighted | weighted | first_order | w_pred | asyn_tiers | ours | unstale
+
+The cohort is vectorized: fast clients are vmapped over a stacked shard
+tensor; slow clients are vmapped per staleness group; GI runs vmapped over
+all unique stale clients. At production scale the same cohort axis is what
+``repro.launch`` shards over the (pod, data) mesh axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, compensation, tiers
+from repro.core.client import LocalProgram, make_local_update, soft_ce_loss
+from repro.core.disparity import tree_scale, tree_sub
+from repro.core.gradient_inversion import GIConfig, GradientInverter
+from repro.core.sparsify import WarmStartCache, topk_mask
+from repro.core.switching import SwitchMonitor
+from repro.core.uniqueness import is_unique, uniqueness_threshold
+from repro.data.staleness import StalenessSchedule
+
+STRATEGIES = ("unweighted", "weighted", "first_order", "w_pred",
+              "asyn_tiers", "ours", "unstale")
+
+
+@dataclasses.dataclass
+class FLConfig:
+    strategy: str = "ours"
+    rounds: int = 60
+    weighted_a: float = 0.25
+    weighted_b: float = 10.0
+    fo_lambda: float = 1.0
+    n_tiers: int = 2
+    gi: GIConfig = dataclasses.field(default_factory=GIConfig)
+    uniqueness_check: bool = True
+    switching: bool = True
+    switch_check_every: int = 5
+    server_lr: float = 1.0
+    eval_every: int = 1
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, model, program: LocalProgram, cfg: FLConfig,
+                 client_x: np.ndarray, client_y: np.ndarray,
+                 client_mask: np.ndarray, schedule: StalenessSchedule,
+                 test_x: np.ndarray, test_y: np.ndarray,
+                 variant_stream=None):
+        assert cfg.strategy in STRATEGIES, cfg.strategy
+        self.model = model
+        self.program = program
+        self.cfg = cfg
+        self.schedule = schedule
+        self.variant = variant_stream
+        self.test_x = jnp.asarray(test_x)
+        self.test_y = jnp.asarray(test_y)
+
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self.global_params = model.init(jax.random.PRNGKey(cfg.seed + 1))
+        self.history: List[Any] = [self.global_params]      # w_global per round
+
+        self.cx = client_x if variant_stream is None else variant_stream.xs
+        self.cy = client_y
+        self.cmask = client_mask
+        self.n_clients = client_x.shape[0]
+
+        self._local_update = jax.jit(make_local_update(model.apply, program))
+        self._cohort_update = jax.jit(
+            jax.vmap(lambda p, x, y, m: make_local_update(model.apply, program)(
+                p, x, y, m)[0], in_axes=(None, 0, 0, 0)))
+        self._eval = jax.jit(self._eval_fn)
+
+        # "ours" machinery
+        self.inverter = GradientInverter(
+            model.apply, model.input_shape, model.n_classes, program, cfg.gi)
+        self.warm = WarmStartCache()
+        self.monitor = SwitchMonitor()
+        self._pending_checks: Dict[int, List[Tuple[int, Any, Any]]] = {}
+        self.gi_log: List[Dict[str, Any]] = []
+        self.metrics: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------ #
+    def _eval_fn(self, params):
+        logits = self.model.apply(params, self.test_x)
+        pred = jnp.argmax(logits, -1)
+        acc = jnp.mean((pred == self.test_y).astype(jnp.float32))
+        per_class = []
+        for c in range(self.model.n_classes):
+            m = (self.test_y == c).astype(jnp.float32)
+            correct = ((pred == self.test_y).astype(jnp.float32) * m).sum()
+            per_class.append(correct / jnp.maximum(m.sum(), 1.0))
+        return acc, jnp.stack(per_class)
+
+    def evaluate(self) -> Tuple[float, np.ndarray]:
+        acc, per_class = self._eval(self.global_params)
+        return float(acc), np.asarray(per_class)
+
+    # ------------------------------------------------------------------ #
+    def _base_round(self, t: int, tau: int) -> int:
+        return max(0, t - tau)
+
+    def _client_shard(self, i: int):
+        return (jnp.asarray(self.cx[i]), jnp.asarray(self.cy[i]),
+                jnp.asarray(self.cmask[i]))
+
+    def _stale_updates(self, t: int) -> Dict[int, Tuple[Any, Any, int]]:
+        """For each slow client delivering this round: (w_stale, w_base, tau_eff).
+        The delivered update was computed tau rounds ago from history[t-tau]."""
+        out = {}
+        groups: Dict[int, List[int]] = {}
+        for i in self.schedule.slow_clients:
+            tau = self.schedule.tau(i)
+            if t < tau:       # nothing delivered yet (sync-FL skip)
+                continue
+            groups.setdefault(self._base_round(t, tau), []).append(i)
+        for base_t, members in groups.items():
+            w_base = self.history[base_t]
+            xs = jnp.stack([self.cx[i] for i in members])
+            ys = jnp.stack([self.cy[i] for i in members])
+            ms = jnp.stack([self.cmask[i] for i in members])
+            ws = self._cohort_update(w_base, xs, ys, ms)
+            for j, i in enumerate(members):
+                w_i = jax.tree_util.tree_map(lambda a: a[j], ws)
+                out[i] = (w_i, w_base, t - base_t)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def round(self, t: int) -> Dict[str, float]:
+        cfg = self.cfg
+        if self.variant is not None:
+            self.variant.step()
+            self.cx = self.variant.xs
+
+        fast = self.schedule.fast_clients
+        slow_deliveries = self._stale_updates(t)
+
+        # --- fast clients: fresh updates from the current global model
+        xs = jnp.stack([self.cx[i] for i in fast])
+        ys = jnp.stack([self.cy[i] for i in fast])
+        ms = jnp.stack([self.cmask[i] for i in fast])
+        w_fast = self._cohort_update(self.global_params, xs, ys, ms)
+        fast_updates = [
+            tree_sub(jax.tree_util.tree_map(lambda a: a[j], w_fast),
+                     self.global_params)
+            for j in range(len(fast))]
+        fast_counts = [float(self.cmask[i].sum()) for i in fast]
+
+        updates = list(fast_updates)
+        weights = list(fast_counts)
+        staleness_list = [0.0] * len(fast)
+        gi_iters_this_round = 0
+
+        for i, (w_stale, w_base, tau_eff) in slow_deliveries.items():
+            stale_delta = tree_sub(w_stale, w_base)
+            count = float(self.cmask[i].sum())
+            strat = cfg.strategy
+
+            if strat == "unstale":
+                x, y, m = self._client_shard(i)
+                w_true = self._local_update(self.global_params, x, y, m)[0]
+                updates.append(tree_sub(w_true, self.global_params))
+                weights.append(count)
+                staleness_list.append(0.0)
+                continue
+
+            if strat in ("unweighted", "asyn_tiers"):
+                updates.append(stale_delta)
+                weights.append(count)
+            elif strat == "weighted":
+                w = compensation.staleness_weight(tau_eff, cfg.weighted_a, cfg.weighted_b)
+                updates.append(stale_delta)
+                weights.append(count * w)
+            elif strat == "first_order":
+                updates.append(compensation.first_order(
+                    stale_delta, self.global_params, w_base, cfg.fo_lambda))
+                weights.append(count)
+            elif strat == "w_pred":
+                updates.append(compensation.w_pred(
+                    stale_delta, self.history, w_base, tau_eff, cfg.fo_lambda))
+                weights.append(count)
+            elif strat == "ours":
+                delta, used = self._ours_update(t, i, w_stale, w_base,
+                                                stale_delta, fast_updates)
+                gi_iters_this_round += used
+                updates.append(delta)
+                weights.append(count)
+            staleness_list.append(float(tau_eff))
+
+        if cfg.strategy == "asyn_tiers" and slow_deliveries:
+            agg = tiers.tiered_aggregate(updates, staleness_list, weights,
+                                         cfg.n_tiers)
+        else:
+            agg = aggregation.fedavg(updates, weights)
+
+        self.global_params = aggregation.apply_update(
+            self.global_params, agg, cfg.server_lr)
+        self.history.append(self.global_params)
+
+        # --- switching monitor: observe delayed arrivals of true updates
+        if cfg.strategy == "ours" and cfg.switching:
+            self._run_pending_checks(t)
+
+        row: Dict[str, float] = {"round": t, "gi_iters": gi_iters_this_round}
+        if t % cfg.eval_every == 0:
+            acc, per_class = self.evaluate()
+            row["acc"] = acc
+            for c, a in enumerate(per_class):
+                row[f"acc_class_{c}"] = float(a)
+        self.metrics.append(row)
+        return row
+
+    # ------------------------------------------------------------------ #
+    def _ours_update(self, t: int, i: int, w_stale, w_base, stale_delta,
+                     fast_updates) -> Tuple[Any, int]:
+        """The paper's pipeline for one stale delivery. Returns (delta, iters)."""
+        cfg = self.cfg
+        gamma = self.monitor.gamma(t) if cfg.switching else 1.0
+        if gamma <= 0.0:
+            return stale_delta, 0          # fully switched back to vanilla FL
+
+        if cfg.uniqueness_check and fast_updates:
+            unique, _ = is_unique(stale_delta, fast_updates)
+            if not unique:
+                return stale_delta, 0      # no unique knowledge: aggregate raw
+
+        mask = None
+        if cfg.gi.keep_fraction < 1.0:
+            mask = topk_mask(stale_delta, cfg.gi.keep_fraction)
+
+        init = self.warm.get(i) if cfg.gi.warm_start else None
+        self.key, sub = jax.random.split(self.key)
+        drec, info = self.inverter.invert(w_base, w_stale, sub,
+                                          mask=mask, init=init)
+        if cfg.gi.warm_start:
+            self.warm.put(i, *drec)
+        self.gi_log.append({"round": t, "client": i, **{
+            k: v for k, v in info.items() if k != "losses"}})
+
+        w_hat = self.inverter.estimate_unstale(self.global_params, drec)
+        hat_delta = tree_sub(w_hat, self.global_params)
+
+        # schedule the delayed E1/E2 check (observable at t + tau)
+        tau = self.schedule.tau(i)
+        if cfg.switching and t % cfg.switch_check_every == 0:
+            self._pending_checks.setdefault(t + tau, []).append(
+                (t, w_hat, w_stale))
+
+        if gamma < 1.0:
+            hat_delta = jax.tree_util.tree_map(
+                lambda h, s: gamma * h + (1.0 - gamma) * s, hat_delta, stale_delta)
+        return hat_delta, info["iters_used"]
+
+    def _run_pending_checks(self, t: int) -> None:
+        for due in [k for k in self._pending_checks if k <= t]:
+            for (t0, w_hat, w_stale) in self._pending_checks.pop(due):
+                # the true unstale update w_i^{t0} arrives now: recompute it
+                # exactly as the slow client computed it at t0
+                if t0 >= len(self.history):
+                    continue
+                w_base = self.history[t0]
+                for i in self.schedule.slow_clients:
+                    x, y, m = self._client_shard(i)
+                    w_true = self._local_update(w_base, x, y, m)[0]
+                    self.monitor.observe(t0, w_hat, w_stale, w_true)
+                    break  # one representative client per check (cost control)
+
+    # ------------------------------------------------------------------ #
+    def run(self, rounds: Optional[int] = None) -> List[Dict[str, float]]:
+        n = rounds or self.cfg.rounds
+        for t in range(n):
+            self.round(t)
+        # always evaluate the final model (eval_every may not divide n-1)
+        if self.metrics and "acc" not in self.metrics[-1]:
+            acc, per_class = self.evaluate()
+            self.metrics[-1]["acc"] = acc
+            for c, a in enumerate(per_class):
+                self.metrics[-1][f"acc_class_{c}"] = float(a)
+        return self.metrics

@@ -1,0 +1,68 @@
+"""Switch-back to vanilla FL in late training (paper §3.2).
+
+As the global model converges, staleness stops mattering: the raw-staleness
+error E2(t) = Disparity[w_i^{t-tau}, w_i^t] shrinks below the GI estimation
+error E1(t) = Disparity[w_hat_i^t, w_i^t]. The true unstale update w_i^t is
+only observable when it *arrives* at t+tau', so the monitor evaluates the
+comparison retroactively and switches then — the paper shows training is
+insensitive to this delay (Table 2 / Fig. 6).
+
+The switch is smoothed: aggregation uses gamma*w_hat + (1-gamma)*w_stale with
+gamma decaying linearly 1 -> 0 over a window of ``decay_fraction`` x (elapsed
+training) — 10% maximizes accuracy (Table 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+from repro.core.disparity import cosine_distance, l1_disparity
+
+
+@dataclasses.dataclass
+class SwitchMonitor:
+    metric: str = "cosine"           # cosine | l1
+    decay_fraction: float = 0.10
+    consecutive_needed: int = 2      # E1>E2 must hold this many observations
+
+    switched_at: Optional[int] = None
+    decay_end: Optional[int] = None
+    _consecutive: int = 0
+    history: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+
+    def _disparity(self, a: Any, b: Any) -> float:
+        if self.metric == "l1":
+            return float(l1_disparity(a, b))
+        return float(cosine_distance(a, b))
+
+    # ------------------------------------------------------------------ #
+    def observe(self, t: int, w_hat: Any, w_stale: Any, w_true: Any) -> None:
+        """Record E1/E2 at the (delayed) moment w_i^t becomes observable."""
+        e1 = self._disparity(w_hat, w_true)
+        e2 = self._disparity(w_stale, w_true)
+        self.history.append({"t": t, "E1": e1, "E2": e2})
+        if self.switched_at is not None:
+            return
+        if e1 > e2:
+            self._consecutive += 1
+        else:
+            self._consecutive = 0
+        if self._consecutive >= self.consecutive_needed:
+            self.switched_at = t
+            self.decay_end = t + max(1, int(self.decay_fraction * t))
+
+    # ------------------------------------------------------------------ #
+    def gamma(self, t: int) -> float:
+        """Weight on the GI estimate w_hat at round t (1 before the switch,
+        linear decay to 0 across the smoothing window after it)."""
+        if self.switched_at is None:
+            return 1.0
+        if t >= self.decay_end:
+            return 0.0
+        span = max(1, self.decay_end - self.switched_at)
+        return max(0.0, 1.0 - (t - self.switched_at) / span)
+
+    @property
+    def switched(self) -> bool:
+        return self.switched_at is not None

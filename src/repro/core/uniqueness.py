@@ -1,0 +1,54 @@
+"""Privacy-preserving uniqueness detection (paper §3.4, Eq. 7-8).
+
+GI should only run on stale updates that carry *unique* knowledge. Rather
+than inspecting labels, the server compares update directions: a stale
+client's data is unique iff its cosine distance to every unstale update
+exceeds the adaptive threshold — the mean pairwise cosine distance among the
+unstale updates themselves (the mean adapts to the distance scale drifting
+during training, paper Fig. 9).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.disparity import tree_to_vector
+
+
+def _pairwise_cosine_distances(vectors: np.ndarray) -> np.ndarray:
+    norms = np.linalg.norm(vectors, axis=1, keepdims=True)
+    normed = vectors / np.maximum(norms, 1e-12)
+    sim = normed @ normed.T
+    return 1.0 - sim
+
+
+def uniqueness_threshold(unstale_updates: List[Any]) -> float:
+    """Mean pairwise cosine distance among unstale updates (Eq. 8)."""
+    if len(unstale_updates) < 2:
+        return 0.0
+    vecs = np.stack([np.asarray(tree_to_vector(u)) for u in unstale_updates])
+    d = _pairwise_cosine_distances(vecs)
+    n = d.shape[0]
+    off = d[~np.eye(n, dtype=bool)]
+    return float(off.mean())
+
+
+def is_unique(stale_update: Any, unstale_updates: List[Any],
+              threshold: float | None = None) -> Tuple[bool, Dict[str, float]]:
+    """True if the stale update's min cosine distance to unstale updates
+    exceeds the threshold (Eq. 7-8)."""
+    if not unstale_updates:
+        return True, {"min_dist": float("inf"), "threshold": 0.0}
+    thr = uniqueness_threshold(unstale_updates) if threshold is None else threshold
+    sv = np.asarray(tree_to_vector(stale_update))
+    sv = sv / max(np.linalg.norm(sv), 1e-12)
+    dists = []
+    for u in unstale_updates:
+        uv = np.asarray(tree_to_vector(u))
+        uv = uv / max(np.linalg.norm(uv), 1e-12)
+        dists.append(1.0 - float(sv @ uv))
+    min_dist = float(min(dists))
+    return min_dist > thr, {"min_dist": min_dist, "threshold": thr}

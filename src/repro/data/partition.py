@@ -1,0 +1,85 @@
+"""Client data partitioning — the paper's data heterogeneity (§4.1, Fig. 10).
+
+Dirichlet(alpha) label-distribution sampling per Hsu & Brown 2019: each
+client draws p_i ~ Dir(alpha) over classes and its samples follow p_i.
+Small alpha -> near single-class clients (high heterogeneity).
+
+Clients are materialized as fixed-size padded shards (x (N_clients, m, ...),
+y, mask) so the whole cohort can be stacked and vmapped/sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def dirichlet_partition(y: np.ndarray, n_clients: int, alpha: float,
+                        seed: int = 0) -> List[np.ndarray]:
+    """Returns per-client index lists."""
+    rng = np.random.RandomState(seed)
+    n_classes = int(y.max()) + 1
+    class_idx = [np.where(y == c)[0] for c in range(n_classes)]
+    for ci in class_idx:
+        rng.shuffle(ci)
+    props = rng.dirichlet([alpha] * n_classes, n_clients)  # (clients, classes)
+    # normalize per class so every sample is assigned exactly once
+    props = props / props.sum(axis=0, keepdims=True)
+    client_indices: List[List[int]] = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        counts = np.floor(props[:, c] * len(class_idx[c])).astype(int)
+        # distribute remainder
+        rem = len(class_idx[c]) - counts.sum()
+        order = np.argsort(-props[:, c])
+        for i in range(rem):
+            counts[order[i % n_clients]] += 1
+        start = 0
+        for i in range(n_clients):
+            client_indices[i].extend(class_idx[c][start:start + counts[i]].tolist())
+            start += counts[i]
+    return [np.asarray(ci, dtype=np.int64) for ci in client_indices]
+
+
+def one_class_partition(y: np.ndarray, n_clients: int, seed: int = 0
+                        ) -> List[np.ndarray]:
+    """Each client holds samples of exactly one (random) class — the paper's
+    motivating experiment (§2.1) and the uniqueness-detection evaluation."""
+    rng = np.random.RandomState(seed)
+    n_classes = int(y.max()) + 1
+    assignment = rng.randint(0, n_classes, n_clients)
+    class_idx = [np.where(y == c)[0] for c in range(n_classes)]
+    cursors = [0] * n_classes
+    out = []
+    for i in range(n_clients):
+        c = assignment[i]
+        per = max(1, len(class_idx[c]) // max(1, (assignment == c).sum()))
+        s = cursors[c]
+        out.append(class_idx[c][s:s + per])
+        cursors[c] += per
+    return out
+
+
+def pad_client_shards(x: np.ndarray, y: np.ndarray,
+                      client_indices: List[np.ndarray], m: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack clients into (N, m, ...) with sample masks (pad or subsample)."""
+    n = len(client_indices)
+    xs = np.zeros((n, m) + x.shape[1:], x.dtype)
+    ys = np.zeros((n, m), np.int32)
+    mask = np.zeros((n, m), np.float32)
+    for i, idx in enumerate(client_indices):
+        take = idx[:m]
+        xs[i, :len(take)] = x[take]
+        ys[i, :len(take)] = y[take]
+        mask[i, :len(take)] = 1.0
+    return xs, ys, mask
+
+
+def client_label_histograms(y: np.ndarray, client_indices: List[np.ndarray],
+                            n_classes: int) -> np.ndarray:
+    h = np.zeros((len(client_indices), n_classes), np.int64)
+    for i, idx in enumerate(client_indices):
+        for c in y[idx]:
+            h[i, c] += 1
+    return h

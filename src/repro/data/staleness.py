@@ -1,0 +1,50 @@
+"""Device heterogeneity schedule (paper §4.1).
+
+To *intertwine* device heterogeneity with data heterogeneity, a target class
+is selected and the ``n_slow`` clients holding the most samples of that class
+get staleness tau (their updates arrive tau rounds late). Everyone else is a
+normal synchronous client.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessSchedule:
+    staleness: np.ndarray          # (n_clients,) int; 0 = unstale
+
+    def tau(self, client: int) -> int:
+        return int(self.staleness[client])
+
+    @property
+    def slow_clients(self) -> List[int]:
+        return [int(i) for i in np.where(self.staleness > 0)[0]]
+
+    @property
+    def fast_clients(self) -> List[int]:
+        return [int(i) for i in np.where(self.staleness == 0)[0]]
+
+
+def intertwined_schedule(label_histograms: np.ndarray, target_class: int,
+                         n_slow: int, tau: int) -> StalenessSchedule:
+    """Top-``n_slow`` holders of ``target_class`` become stale by ``tau``."""
+    counts = label_histograms[:, target_class]
+    slow = np.argsort(-counts)[:n_slow]
+    st = np.zeros(label_histograms.shape[0], np.int64)
+    st[slow] = tau
+    return StalenessSchedule(st)
+
+
+def uniform_random_schedule(n_clients: int, n_slow: int, tau: int,
+                            seed: int = 0) -> StalenessSchedule:
+    """Staleness NOT intertwined with data (control condition)."""
+    rng = np.random.RandomState(seed)
+    slow = rng.choice(n_clients, n_slow, replace=False)
+    st = np.zeros(n_clients, np.int64)
+    st[slow] = tau
+    return StalenessSchedule(st)

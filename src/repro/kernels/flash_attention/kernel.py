@@ -1,0 +1,138 @@
+"""Pallas TPU flash attention (blockwise online softmax, GQA, sliding window).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv-block axis is
+innermost, so VMEM scratch (running max m, denominator l, accumulator acc)
+persists across kv steps of one (b, h, qi) tile, MaxText-style.
+
+BlockSpecs keep one (Bq, D) query tile, one (Bk, D) key/value tile, and the
+fp32 accumulator in VMEM; D is the full head dim (MXU-aligned 64/128) so
+every matmul hits the MXU with lane=128-friendly shapes. GQA is handled in
+the index_map: query head h reads kv head h // rep.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, bq: int, bk: int, sq: int, skv: int,
+                  causal: bool, window: Optional[int], scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (skv - sq)                                  # right-aligned positions
+    kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    mask = kv_pos < skv
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+
+    # skip fully-masked blocks (structural: causal upper triangle / window)
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale   # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    if causal or window is not None:
+        lo = qi * bq + (skv - sq)
+        hi = (qi + 1) * bq - 1 + (skv - sq)
+        block_lo = ki * bk
+        block_hi = (ki + 1) * bk - 1
+        live = block_lo <= hi
+        if window is not None:
+            live &= block_hi > lo - window
+
+        @pl.when(live)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None,
+    bq: int = 128, bk: int = 128, interpret: bool = False,
+    sq_valid: Optional[int] = None, skv_valid: Optional[int] = None,
+) -> jax.Array:
+    """q (B, Sq, H, D); k/v (B, Skv, KV, D) -> (B, Sq, H, D).
+
+    ``sq_valid``/``skv_valid``: logical lengths when inputs are padded to
+    block multiples (masking and right-alignment use the logical lengths).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    sq_valid = sq_valid or Sq
+    skv_valid = skv_valid or Skv
+    rep = H // KV
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, max(Skv, 8))
+    nq = pl.cdiv(Sq, bq)
+    nk = pl.cdiv(Skv, bk)
+    scale = 1.0 / math.sqrt(D)
+
+    # layout: (B, H, S, D) blocks of (1, 1, b, D)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, sq=sq_valid, skv=skv_valid,
+        causal=causal, window=window, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, _rep=rep: (b, h // _rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, _rep=rep: (b, h // _rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,46 @@
+"""Jit'd wrapper for the flash attention kernel.
+
+On CPU (this container) the kernel runs in ``interpret=True`` mode for
+correctness validation; on TPU the same call compiles natively. Inputs are
+padded to block multiples before the kernel and cropped after.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q (B, Sq, H, D); k/v (B, Skv, KV, D) -> (B, Sq, H, D)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    bq_ = min(bq, Sq) if Sq >= 8 else Sq
+    bk_ = min(bk, Skv) if Skv >= 8 else Skv
+    pad_q = (-Sq) % bq_
+    pad_k = (-Skv) % bk_
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 bq=bq_, bk=bk_, interpret=interpret,
+                                 sq_valid=Sq, skv_valid=Skv)
+    return out[:, :Sq]

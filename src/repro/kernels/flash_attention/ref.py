@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for blockwise causal GQA attention (+ sliding window)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """q (B, Sq, H, D); k/v (B, Skv, KV, D); returns (B, Sq, H, D).
+
+    Naive O(S^2) attention in fp32 — the correctness oracle for the Pallas
+    flash kernel and for ``repro.models.layers.chunked_attention``.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, rep, axis=2)
+    vf = jnp.repeat(vf, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # right-aligned
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, -1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

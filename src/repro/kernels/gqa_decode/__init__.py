@@ -1,0 +1,2 @@
+from repro.kernels.gqa_decode.ops import gqa_decode_attention  # noqa: F401
+from repro.kernels.gqa_decode.ref import gqa_decode_reference  # noqa: F401

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a long KV cache.
+
+decode_32k / long_500k lower this op. The query is one token per sequence;
+K/V stream HBM -> VMEM in (Bk, D) blocks along the innermost grid axis with
+the online-softmax running (m, l, acc) in VMEM scratch. The dynamic valid
+length (current cache position + 1) arrives via scalar prefetch so block
+shapes stay static while masking follows the decode position; with a sliding
+window, blocks wholly outside [valid-window, valid) are skipped.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, bk: int, window: Optional[int], scale: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    valid = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    mask = kv_pos < valid
+    if window is not None:
+        mask &= kv_pos > valid - 1 - window
+
+    block_live = (ki * bk) < valid
+    if window is not None:
+        block_live &= ((ki + 1) * bk - 1) > valid - 1 - window
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (1, bk)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def gqa_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                      valid_len: jax.Array, *, window: Optional[int] = None,
+                      bk: int = 512, interpret: bool = False) -> jax.Array:
+    """q (B, H, D); k/v (B, S, KV, D); valid_len () int32 -> out (B, H, D)."""
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    bk = min(bk, S)
+    nk = pl.cdiv(S, bk)
+    scale = 1.0 / math.sqrt(D)
+
+    qt = q.reshape(B, H, 1, D)
+    kt = k.transpose(0, 2, 1, 3)          # (B, KV, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ki, ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ki, ref, _rep=rep: (b, h // _rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ki, ref, _rep=rep: (b, h // _rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ki, ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, bk=bk, window=window, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(valid_len, jnp.int32).reshape(1), qt, kt, vt)
+    return out[:, :, 0, :]

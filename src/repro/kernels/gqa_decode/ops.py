@@ -1,0 +1,30 @@
+"""Jit'd wrapper for the decode attention kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gqa_decode.kernel import gqa_decode_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len: jax.Array, *,
+                         window: Optional[int] = None, bk: int = 512,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """q (B, H, D); k/v (B, S, KV, D); positions < valid_len are attended."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, H, D = q.shape
+    S = k.shape[1]
+    bk_ = min(bk, S)
+    pad = (-S) % bk_
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return gqa_decode_pallas(q, k, v, valid_len, window=window, bk=bk_,
+                             interpret=interpret)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def gqa_decode_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         valid_len: int, *, window: Optional[int] = None
+                         ) -> jnp.ndarray:
+    """q (B, H, D); k/v (B, S, KV, D); attends positions < valid_len
+    (current token at valid_len - 1); optional sliding window."""
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    pos = jnp.arange(S)[None, None, :]
+    mask = pos < valid_len
+    if window is not None:
+        mask = mask & (pos > valid_len - 1 - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhs,bshd->bhd", p, vf).astype(q.dtype)

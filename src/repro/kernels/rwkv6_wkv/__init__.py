@@ -1,0 +1,2 @@
+from repro.kernels.rwkv6_wkv.ops import wkv6  # noqa: F401
+from repro.kernels.rwkv6_wkv.ref import wkv6_reference  # noqa: F401

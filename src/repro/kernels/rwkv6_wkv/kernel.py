@@ -1,0 +1,69 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence (data-dependent decay).
+
+This is the Finch architecture's core op and has no XLA-native fused
+equivalent — on GPU, RWKV ships a CUDA kernel; the TPU adaptation tiles over
+(batch, head, time-chunks) with the (N, N) state held in VMEM scratch across
+time-chunk grid steps (the innermost grid axis), processing C timesteps per
+step with an in-kernel fori_loop. N = 64 keeps the state (64x64 fp32 = 16 KiB)
+and one (C, N) slab per operand comfortably in VMEM, and the per-step
+outer-product/mat-vec pair maps onto the VPU/MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, chunk: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0].astype(jnp.float32)                  # (N,)
+    r = r_ref[0, :, 0].astype(jnp.float32)            # (C, N)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)
+
+    def step(t, carry):
+        S, out = carry
+        a = k[t][:, None] * v[t][None, :]             # (N, N)
+        o = jnp.sum((S + u[:, None] * a) * r[t][:, None], axis=0)  # (N,)
+        S = w[t][:, None] * S + a
+        out = jax.lax.dynamic_update_slice(out, o[None], (t, 0))
+        return S, out
+
+    S0 = s_scr[...]
+    out0 = jnp.zeros((chunk, r.shape[1]), jnp.float32)
+    S, out = jax.lax.fori_loop(0, chunk, step, (S0, out0))
+    s_scr[...] = S
+    o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+
+def wkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, *, chunk: int = 64,
+                interpret: bool = False) -> jax.Array:
+    """r,k,v,w (B,T,H,N); u (H,N) -> out (B,T,H,N). T % chunk == 0."""
+    B, T, H, N = r.shape
+    assert T % chunk == 0, (T, chunk)
+    nt = T // chunk
+
+    spec = pl.BlockSpec((1, chunk, 1, N), lambda b, h, ti: (b, ti, h, 0))
+    out = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=(B, H, nt),
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, N), lambda b, h, ti: (h, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, H, N), r.dtype),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out

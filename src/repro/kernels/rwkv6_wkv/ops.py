@@ -1,0 +1,27 @@
+"""Jit'd wrapper for the WKV6 kernel (interpret=True on CPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv.kernel import wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = 64,
+         interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, T, H, N = r.shape
+    c = min(chunk, T)
+    pad = (-T) % c
+    if pad:
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    out = wkv6_pallas(r, k, v, w, u, chunk=c, interpret=interpret)
+    return out[:, :T]

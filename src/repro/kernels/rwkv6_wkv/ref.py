@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_reference(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array) -> jax.Array:
+    """r,k,v,w (B,T,H,N) with w in (0,1); u (H,N). Returns out (B,T,H,N).
+
+    S_t[n,m]: state; a_t = k_t (x) v_t;  out_t[m] = sum_n r[n](S[n,m]+u[n]a[n,m]);
+    S <- diag(w_t) S + a_t.
+    """
+    B, T, H, N = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        a = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S + uf[None, :, :, None] * a)
+        S = wt[..., :, None] * S + a
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    _, outs = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.sparsify_mask.ops import sparsify_mask, topk_threshold  # noqa: F401
+from repro.kernels.sparsify_mask.ref import sparsify_mask_reference  # noqa: F401

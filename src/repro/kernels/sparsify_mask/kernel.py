@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused top-K magnitude mask application (paper §3.3).
+
+The GI server sparsifies every stale update to its top-5% magnitude
+coordinates. For the LLM-scale models (up to ~17B parameters = many GiB) the
+mask application is a pure streaming op: tiles of the flat update vector move
+HBM -> VMEM, compare |u| against the (precomputed) k-th-magnitude threshold,
+and write back the masked tile. One (rows, 128)-shaped VMEM tile per grid
+step keeps lanes full; arithmetic intensity is ~1 op/byte so the kernel is
+bandwidth-bound by construction — fusing compare+select avoids a second pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mask_kernel(u_ref, t_ref, o_ref):
+    t = t_ref[0, 0]
+    u = u_ref[...]
+    o_ref[...] = jnp.where(jnp.abs(u) >= t, u, jnp.zeros_like(u))
+
+
+def sparsify_mask_pallas(u2d: jax.Array, thresh: jax.Array, *,
+                         block_rows: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """u2d (R, 128) tiled view of the flat update; thresh (1,1) float32."""
+    R, lanes = u2d.shape
+    br = min(block_rows, R)
+    nr = pl.cdiv(R, br)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr * br, lanes), u2d.dtype),
+        interpret=interpret,
+    )(u2d, thresh)[:R]

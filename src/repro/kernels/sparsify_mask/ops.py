@@ -1,0 +1,34 @@
+"""Jit'd wrapper: threshold computation + fused mask application."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparsify_mask.kernel import sparsify_mask_pallas
+
+LANES = 128
+
+
+def topk_threshold(u: jax.Array, keep_fraction: float) -> jax.Array:
+    """k-th largest |u| (k = keep_fraction * n) — the §3.3 mask threshold."""
+    n = u.shape[0]
+    k = max(1, int(round(n * keep_fraction)))
+    return jax.lax.top_k(jnp.abs(u), k)[0][-1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparsify_mask(u: jax.Array, thresh: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """Apply |u| >= thresh masking to a flat vector via the Pallas kernel."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = u.shape[0]
+    pad = (-n) % LANES
+    up = jnp.pad(u, (0, pad)) if pad else u
+    u2d = up.reshape(-1, LANES)
+    t = jnp.asarray(thresh, jnp.float32).reshape(1, 1)
+    out = sparsify_mask_pallas(u2d, t, interpret=interpret)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the top-K magnitude sparsification mask (paper §3.3)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparsify_mask_reference(u: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Zero coordinates with |u| < thresh (u is a flat update vector)."""
+    return jnp.where(jnp.abs(u) >= thresh, u, jnp.zeros_like(u))

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, WITHOUT allocating anything.
+
+The two lines above MUST stay the first statements of this module: jax locks
+the device count at first init, and the dry-run needs 512 placeholder host
+devices to build the 2x16x16 mesh. (Smoke tests and benches import jax
+normally and see 1 device — this flag is never set globally.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--probe]
+
+Per run it prints/saves: memory_analysis (proves the program fits v5e HBM),
+cost_analysis (FLOPs/bytes for §Roofline), and the per-device collective
+inventory parsed from the partitioned HLO.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.launch import sharding as shd
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_specs, train_batch_specs
+from repro.models import transformer as T
+from repro.models.config import INPUT_SHAPES, ModelConfig
+from repro.models.model import (make_prefill_logits_last, make_serve_step,
+                                make_train_step)
+from repro.optim import sgd
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+# long_500k policy (DESIGN.md §5): SSM/hybrid/SWA archs run natively; pure
+# full-attention archs run an explicit sliding-window VARIANT (w=4096).
+LONG_SWA_WINDOW = 4096
+
+DEFAULT_FSDP_THRESHOLD = 3e9   # params; larger models use fsdp_tp
+
+
+def _resolve_cfg(arch: str, shape_name: str,
+                 overrides: Optional[Dict[str, Any]] = None
+                 ) -> tuple[ModelConfig, str]:
+    cfg = get_config(arch)
+    variant = "base"
+    if shape_name == "long_500k" and cfg.block_type != "rwkv6" \
+            and cfg.sliding_window is None:
+        cfg = cfg.with_(sliding_window=LONG_SWA_WINDOW)
+        variant = f"swa{LONG_SWA_WINDOW}"
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    return cfg, variant
+
+
+def _param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    return sum(l.size for l in jax.tree_util.tree_leaves(shapes))
+
+
+def _named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              mode: Optional[str] = None, n_micro: Optional[int] = None,
+              overrides: Optional[Dict[str, Any]] = None,
+              compile_: bool = True) -> Dict[str, Any]:
+    """Lower (and compile) one (arch, shape, mesh) combination; returns the
+    artifact record with cost/memory/collective analysis."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg, variant = _resolve_cfg(arch, shape_name, overrides)
+    if cfg.moe is not None and cfg.moe.n_experts % 16 == 0:
+        cfg = cfg.with_(moe_expert_axis="model")
+        if (overrides or {}).get("moe_impl") != "gather":
+            # production default (EXPERIMENTS.md §Perf hillclimb 1): expert-
+            # parallel shard_map MoE — 10.9x collective / 3.7x memory vs the
+            # GSPMD gather path
+            cfg = cfg.with_(moe_impl="shard_map")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if cfg.moe is not None and cfg.moe_impl == "shard_map":
+        from repro.models.layers import set_moe_mesh
+        set_moe_mesh(mesh)
+    n_params = _param_count(cfg)
+    if mode is None:
+        if shape.kind == "train":
+            mode = "fsdp_tp" if n_params > DEFAULT_FSDP_THRESHOLD else "tp"
+        else:
+            # inference: plain TP until the TP-sharded weights alone crowd
+            # HBM (llama4-scout: 218 GB bf16 / 16 = 13.6 GB) -> 2-axis TP
+            mode = "tp2" if n_params * 2 / 16 > 8e9 else "tp"
+
+    t0 = time.time()
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = shd.param_specs(cfg, mesh, mode, params_shape)
+
+    if shape.kind == "train":
+        cfg_t = cfg if cfg.remat != "none" else cfg.with_(remat="full")
+        nm = n_micro or 8
+        opt = sgd(1e-2, momentum=0.9)
+        dp = shd.data_axes(mesh)
+        if mode == "fsdp_dp":
+            # pure DP: batch over every axis, one microbatch
+            dp = dp + ("model",)
+            nm = n_micro or 1
+        micro_b = shape.global_batch // nm
+        baxes = dp if micro_b % _mesh_size(mesh, dp) == 0 else None
+        cfg_t = cfg_t.with_(act_batch_axes=baxes)
+        if cfg_t.moe is not None and baxes is not None:
+            cfg_t = cfg_t.with_(moe_capacity_axes=baxes)
+        if mode == "fsdp_tp":
+            # sequence-parallel residual stream: shards the remat-saved
+            # (L, B, S, d) carries over the model axis (needed to fit the
+            # >=15B models; see EXPERIMENTS.md §Dry-run)
+            cfg_t = cfg_t.with_(act_seq_axis="model")
+        train_step = make_train_step(cfg_t, opt, n_micro=nm, batch_axes=baxes)
+        st_specs = shd.state_specs(cfg_t, mesh, mode, opt, params_shape)
+        batch = train_batch_specs(cfg_t, shape)
+        b_specs = shd.batch_specs(cfg_t, batch, mesh,
+                                  axes=dp if mode == "fsdp_dp" else None)
+        state_shape = {
+            "params": params_shape,
+            "opt": jax.eval_shape(opt.init, params_shape),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        metric_specs = {"ce": P(), "aux": P(), "loss": P()}
+        with mesh:
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(_named(st_specs, mesh), _named(b_specs, mesh)),
+                out_shardings=(_named(st_specs, mesh), _named(metric_specs, mesh)),
+                donate_argnums=0,
+            ).lower(state_shape, batch)
+    elif shape.kind == "prefill":
+        dp = shd.data_axes(mesh)
+        if shape.global_batch % _mesh_size(mesh, dp) == 0:
+            cfg = cfg.with_(act_batch_axes=dp)
+        prefill = make_prefill_logits_last(cfg)
+        batch = train_batch_specs(cfg, shape)
+        batch.pop("labels")
+        b_specs = shd.batch_specs(cfg, batch, mesh)
+        vocab_ax = "model" if cfg.vocab_size % 16 == 0 else None
+        out_spec = P(dp if shape.global_batch %
+                     _mesh_size(mesh, dp) == 0 else None, vocab_ax)
+        with mesh:
+            lowered = jax.jit(
+                prefill,
+                in_shardings=(_named(p_specs, mesh), _named(b_specs, mesh)),
+                out_shardings=NamedSharding(mesh, out_spec),
+            ).lower(params_shape, batch)
+    else:  # decode
+        dp = shd.data_axes(mesh)
+        toks, cache_shape, extras = decode_specs(cfg, shape)
+        c_specs = shd.cache_specs(cfg, cache_shape, mesh, shape.global_batch)
+        # pin cache k/v sharding in-model to match the in_shardings (avoids
+        # GSPMD resharding the stacked L dim inside the layer scan)
+        kv_spec = c_specs.get("k")
+        if kv_spec is not None:
+            cb = kv_spec[1] if isinstance(kv_spec[1], tuple) else (
+                (kv_spec[1],) if kv_spec[1] else None)
+            cs = kv_spec[2] if isinstance(kv_spec[2], tuple) else (
+                (kv_spec[2],) if kv_spec[2] else None)
+            cfg = cfg.with_(cache_batch_axes=cb, cache_seq_axes=cs)
+        serve_step = make_serve_step(cfg)
+        b_ax = dp if shape.global_batch % _mesh_size(mesh, dp) == 0 else None
+        tok_spec = P(b_ax, None)
+        vocab_ax = "model" if cfg.vocab_size % 16 == 0 else None
+        logit_spec = P(b_ax, None, vocab_ax)
+        in_sh = [_named(p_specs, mesh), _named(c_specs, mesh),
+                 NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())]
+        args = [params_shape, cache_shape, toks["tokens"], toks["cache_pos"]]
+        if extras:
+            ckv_spec = jax.tree_util.tree_map(
+                lambda v: P(None, b_ax, None, None, None), extras["cross_kv"])
+            in_sh.append(_named(ckv_spec, mesh))
+            args.append(extras["cross_kv"])
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=tuple(in_sh),
+                out_shardings=(NamedSharding(mesh, logit_spec),
+                               _named(c_specs, mesh)),
+                donate_argnums=1,   # cache is updated in place (aliased)
+            ).lower(*args)
+
+    lower_s = time.time() - t0
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": mode, "n_params": int(n_params), "lower_s": round(lower_s, 2),
+    }
+    if not compile_:
+        return rec
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+    }
+    rec["memory"]["peak_per_device"] = (
+        rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+        + rec["memory"]["output_bytes"] - rec["memory"]["alias_bytes"])
+    ca = compiled.cost_analysis() or {}
+    rec["cost"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    txt = compiled.as_text()
+    by_kind, counts = collective_bytes(txt)
+    rec["collectives"] = {"bytes_by_kind": by_kind, "counts": counts,
+                          "total_bytes": sum(by_kind.values())}
+    return rec
+
+
+def _mesh_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axes, tuple):
+        n = 1
+        for a in axes:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axes, 1)
+
+
+def save_artifact(rec: Dict[str, Any], out_dir: str = ARTIFACT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{rec['mode']}.json"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ALIASES) + ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", choices=["tp", "fsdp_tp"])
+    ap.add_argument("--n-micro", type=int)
+    ap.add_argument("--out-dir", default=ARTIFACT_DIR)
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shp in combos:
+        try:
+            rec = lower_one(arch, shp, multi_pod=args.multi_pod,
+                            mode=args.mode, n_micro=args.n_micro)
+            if not args.no_save:
+                save_artifact(rec, args.out_dir)
+            mem_gib = rec["memory"]["peak_per_device"] / 2**30
+            print(f"OK   {arch:24s} {shp:12s} mesh={rec['mesh']} mode={rec['mode']}"
+                  f" peak/dev={mem_gib:.2f}GiB flops={rec['cost']['flops']:.3g}"
+                  f" coll={rec['collectives']['total_bytes']/2**20:.1f}MiB"
+                  f" (lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((arch, shp, repr(e)[:200]))
+            print(f"FAIL {arch:24s} {shp:12s}: {repr(e)[:200]}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print(f"all {len(combos)} dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

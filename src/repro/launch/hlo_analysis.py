@@ -1,0 +1,73 @@
+"""Post-SPMD HLO analysis: collective inventory and byte counts.
+
+``compiled.as_text()`` (after GSPMD partitioning) contains per-device shapes.
+We inventory every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute and sum the bytes of their result arrays — the per-device
+collective traffic proxy used by the roofline's collective term.
+
+Caveats (documented in EXPERIMENTS.md §Roofline):
+* ops inside a while body (scan-over-layers, microbatch loop) appear ONCE in
+  the text; callers scale by trip count (the roofline probe lowers unrolled
+  1/2-layer variants and extrapolates instead).
+* bytes are result-array sizes: for all-gather that is the post-gather size
+  (~bytes received per device on a ring); for reduce-scatter it understates
+  by ~axis_size (noted, and small next to the all-gathers in practice).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Returns (bytes_by_kind, count_by_kind) — per-device result bytes.
+
+    ``-start`` variants are counted; their matching ``-done`` is skipped to
+    avoid double counting.
+    """
+    by_kind: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        by_kind[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    return dict(by_kind), dict(counts)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    by_kind, _ = collective_bytes(hlo_text)
+    return sum(by_kind.values())

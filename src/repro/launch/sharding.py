@@ -1,0 +1,272 @@
+"""Sharding rules: PartitionSpec trees for params, batches and caches.
+
+Axis convention (launch/mesh.py): ``data`` (16), ``model`` (16), and for the
+multi-pod mesh an outer ``pod`` (2). Modes:
+
+* ``tp``      — tensor parallelism only: weights sharded on ``model``
+                (attention heads / FFN hidden / experts / vocab),
+                batch on (pod, data). Right for <= ~3B-param models.
+* ``fsdp_tp`` — additionally shards the weights' other dim on ``data``
+                (FSDP/ZeRO-style) so >= 15B-param models and their optimizer
+                state fit per-chip HBM; GSPMD inserts the FSDP all-gathers.
+                Training only — per-layer weight re-gathers are the FSDP
+                deal; amortized over the whole fwd+bwd of a big batch.
+* ``tp2``     — inference mode for big models: attention stays TP(model),
+                FFN / MoE hidden dims are sharded over BOTH axes (256-way
+                TP) and embeddings over (model x data). No weight
+                all-gathers at all — activations (small at inference) move
+                instead.
+
+Every rule guards divisibility: a dim is only sharded if the mesh axis size
+divides it (e.g. whisper's vocab 51865 and hymba's 32001 fall back to
+d_model sharding). Optimizer state inherits the param specs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import InputShape, ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _axsize(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= _axsize(mesh, a)
+        return n
+    # Mesh.shape / AbstractMesh.shape: mapping axis name -> size
+    return dict(mesh.shape).get(name, 1)
+
+
+def _guard(dim: int, axis, mesh: Mesh):
+    """axis if it divides dim else None."""
+    if axis is None:
+        return None
+    return axis if dim % _axsize(mesh, axis) == 0 else None
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter specs
+# --------------------------------------------------------------------------- #
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh, mode: str) -> P:
+    """Spec for one parameter; ``path`` like 'layers/attn/wq'."""
+    parts = path.split("/")
+    name = parts[-1]
+    stacked = "layers" in parts          # leading L axis
+    off = 1 if stacked else 0
+    dims = shape[off:]
+
+    if mode == "fsdp_dp":
+        # pure data-parallel compute (no TP): weights are sharded across ALL
+        # mesh axes for storage only (ZeRO-3 style); compute re-gathers per
+        # layer. Right for small attention-free models where TP's per-layer
+        # activation all-reduces dominate (EXPERIMENTS.md §Perf hillclimb 3).
+        all_dp = data_axes(mesh) + ("model",)
+        for i, dsize in enumerate(dims):
+            if _guard(dsize, all_dp, mesh):
+                return P(*([None] * off),
+                         *[all_dp if j == i else None
+                           for j in range(len(dims))])
+        return P(*([None] * (off + len(dims))))
+
+    dp = data_axes(mesh) if mode in ("fsdp_tp", "tp2") else None
+    # tp2: the data axis rides on the *hidden/feature* dim (2-axis TP, no
+    # per-layer weight regathers); fsdp_tp: it rides on the d_model dim.
+    tp2 = mode == "tp2"
+    f_model = ("model",) + (dp or ()) if tp2 else "model"
+    d_data = None if tp2 else dp
+
+    def spec(*entries):
+        return P(*([None] * off), *entries)
+
+    g = lambda i, ax: _guard(dims[i], ax, mesh) if i < len(dims) else None
+
+    # ---- embeddings / heads -------------------------------------------- #
+    if name == "embed":
+        v_ax = _guard(dims[0], "model", mesh)
+        if v_ax:
+            return P(v_ax, _guard(dims[1], dp, mesh))
+        return P(None, _guard(dims[1], "model", mesh))
+    if name == "lm_head":
+        v_ax = _guard(dims[1], "model", mesh)
+        if v_ax:
+            return P(_guard(dims[0], dp, mesh), v_ax)
+        return P(_guard(dims[0], "model", mesh), None)
+
+    # ---- norms / small vectors ------------------------------------------ #
+    if name in ("scale", "bias", "q_norm", "k_norm") or name.startswith("mu_") \
+            or name in ("cm_mu_k", "cm_mu_r", "dt_bias", "D", "b_down",
+                        "conv_b", "w0", "hb", "b1", "b2", "b3", "fb"):
+        return spec(*([None] * len(dims)))
+
+    # ---- MoE ------------------------------------------------------------- #
+    if "moe" in parts and "shared" not in parts:
+        if name == "router":
+            return spec(None, None)
+        if name in ("w_gate", "w_up"):      # (E, d, fe)
+            if tp2:
+                return spec(g(0, "model"), None, g(2, dp))
+            return spec(g(0, "model"), g(1, dp), None)
+        if name == "w_down":                # (E, fe, d)
+            if tp2:
+                return spec(g(0, "model"), g(1, dp), None)
+            return spec(g(0, "model"), None, g(2, dp))
+
+    # ---- attention ------------------------------------------------------- #
+    if name in ("wq", "wk", "wv") and len(dims) == 2:
+        return spec(g(0, d_data), g(1, "model"))
+    if name == "wo" and len(dims) == 2:
+        return spec(g(0, "model"), g(1, d_data))
+    if name in ("bq", "bk", "bv"):
+        return spec(g(0, "model"))
+
+    # ---- dense / shared-expert MLP --------------------------------------- #
+    if name in ("w_gate", "w_up", "cm_wk"):      # (d, f)
+        return spec(g(0, d_data), g(1, f_model))
+    if name in ("w_down", "cm_wv"):              # (f, d)
+        return spec(g(0, f_model), g(1, d_data))
+    if name == "b_up":
+        return spec(g(0, f_model))
+    if name in ("wr", "wg", "cm_wr"):            # rwkv (d, d)
+        return spec(g(0, dp), g(1, "model"))
+    if name == "w_lora_a":
+        return spec(g(0, dp), None)
+    if name == "w_lora_b":
+        return spec(None, g(1, "model"))
+    if name == "u":                              # (H, N)
+        return spec(g(0, "model"), None)
+    if name == "ln_x":
+        return spec(g(0, "model"))
+
+    # ---- mamba (hymba) ---------------------------------------------------- #
+    if name == "w_in":                           # (d, 2*di)
+        return spec(g(0, dp), g(1, "model"))
+    if name == "conv_w":                         # (K, di)
+        return spec(None, g(1, "model"))
+    if name in ("w_bc", "w_dt1"):                # (di, *)
+        return spec(g(0, "model"), None)
+    if name == "w_dt2":                          # (r, di)
+        return spec(None, g(1, "model"))
+    if name == "A_log":                          # (di, N)
+        return spec(g(0, "model"), None)
+    if name == "w_out":                          # (di, d)
+        return spec(g(0, "model"), g(1, dp))
+
+    # default: replicate
+    return spec(*([None] * len(dims)))
+
+
+def _path_str(kp) -> str:
+    out = []
+    for p in kp:
+        out.append(str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)))
+    return "/".join(out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, mode: str = "tp",
+                params_shape: Optional[Params] = None) -> Params:
+    """PartitionSpec tree matching init_params(cfg) (built via eval_shape)."""
+    if params_shape is None:
+        from repro.models.transformer import init_params
+        params_shape = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [
+        _leaf_spec(_path_str(kp), tuple(leaf.shape), cfg, mesh, mode)
+        for kp, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh, mode: str, optimizer,
+                params_shape: Optional[Params] = None) -> Params:
+    """Specs for the full train state (opt state inherits param specs)."""
+    from repro.models.transformer import init_params
+    if params_shape is None:
+        params_shape = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_specs(cfg, mesh, mode, params_shape)
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+    if opt_shape == ():                       # plain sgd
+        o_specs: Any = ()
+    elif isinstance(opt_shape, dict) and "mu" in opt_shape:  # adam
+        o_specs = {"mu": p_specs, "nu": p_specs, "t": P()}
+    else:                                     # sgd+momentum mirrors params
+        o_specs = p_specs
+    return {"params": p_specs, "opt": o_specs, "step": P()}
+
+
+# --------------------------------------------------------------------------- #
+# Batch / cache specs
+# --------------------------------------------------------------------------- #
+
+
+def batch_specs(cfg: ModelConfig, batch_shape: Dict[str, Any], mesh: Mesh,
+                axes: Optional[Tuple[str, ...]] = None) -> Dict[str, P]:
+    dp = axes if axes is not None else data_axes(mesh)
+    out: Dict[str, P] = {}
+    for k, v in batch_shape.items():
+        B = v.shape[1] if k == "positions" and v.ndim == 3 else v.shape[0]
+        b_ax = dp if B % _axsize(mesh, dp) == 0 else None
+        if k == "positions" and v.ndim == 3:
+            out[k] = P(None, b_ax, None)
+        elif v.ndim == 1:
+            out[k] = P(b_ax)
+        else:
+            out[k] = P(b_ax, *([None] * (v.ndim - 1)))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Params, mesh: Mesh,
+                batch: int) -> Params:
+    """Decode-cache specs. KV caches shard batch on data and seq on model;
+    batch=1 (long_500k) shards seq over every axis instead."""
+    dp = data_axes(mesh)
+    all_ax = dp + ("model",)
+
+    def leaf(kp, v):
+        name = _path_str(kp).split("/")[-1]
+        dims = v.shape
+        if name in ("k", "v"):              # (L, B, S, KV, hd)
+            if batch % _axsize(mesh, dp) == 0:
+                return P(None, dp, _guard(dims[2], "model", mesh), None, None)
+            return P(None, None, _guard(dims[2], all_ax, mesh) or
+                     _guard(dims[2], "model", mesh), None, None)
+        if name == "S":                     # rwkv state (L, B, H, N, N)
+            b_ax = dp if batch % _axsize(mesh, dp) == 0 else None
+            return P(None, b_ax, _guard(dims[2], "model", mesh), None, None)
+        if name in ("tm_x", "cm_x"):        # (L, B, d)
+            b_ax = dp if batch % _axsize(mesh, dp) == 0 else None
+            return P(None, b_ax, _guard(dims[2], "model", mesh))
+        if name == "conv":                  # (L, B, K, di)
+            b_ax = dp if batch % _axsize(mesh, dp) == 0 else None
+            return P(None, b_ax, None, _guard(dims[3], "model", mesh))
+        if name == "h":                     # (L, B, di, N)
+            b_ax = dp if batch % _axsize(mesh, dp) == 0 else None
+            return P(None, b_ax, _guard(dims[2], "model", mesh), None)
+        return P(*([None] * len(dims)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(kp, v) for kp, v in flat])
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs, is_leaf=lambda x: isinstance(x, P))

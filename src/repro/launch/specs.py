@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape).
+
+``input_specs(cfg, shape)`` returns stand-ins for every model input — weak-
+type-correct, shardable, no device allocation — exactly what
+``jax.jit(...).lower(**specs)`` consumes in the dry-run.
+
+* train/prefill: {tokens, labels} (+ frames for audio, input_embeds +
+  positions for vlm).
+* decode: {tokens (B,1), cache_pos ()} plus the stacked KV/recurrent cache
+  (+ cross_kv for the enc-dec arch). Decode caches are built with
+  ``jax.eval_shape`` over ``init_cache`` so per-family shapes stay in sync.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import frontend as F
+from repro.models import transformer as T
+from repro.models.config import InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, SDS] = {}
+    if cfg.family == "vlm":
+        out["input_embeds"] = F.vlm_input_embeds_spec(cfg, B, S)
+        out["positions"] = SDS((3, B, S), jnp.int32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+    out["labels"] = SDS((B, S), jnp.int32)
+    if cfg.family == "audio":
+        out["frames"] = F.audio_frame_embeddings_spec(cfg, B)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape
+                 ) -> Tuple[Dict[str, SDS], Any, Dict[str, SDS]]:
+    """Returns (token_specs, cache_specs, extras) for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    toks = {"tokens": SDS((B, 1), jnp.int32),
+            "cache_pos": SDS((), jnp.int32)}
+    extras: Dict[str, Any] = {}
+    if cfg.is_encdec:
+        n_ctx = cfg.encoder.n_ctx
+        extras["cross_kv"] = {
+            "k": SDS((cfg.n_layers, B, n_ctx, cfg.n_kv_heads, cfg.head_dim),
+                     cfg.param_dtype),
+            "v": SDS((cfg.n_layers, B, n_ctx, cfg.n_kv_heads, cfg.head_dim),
+                     cfg.param_dtype),
+        }
+    return toks, cache, extras
+
+
+def concrete_train_batch(cfg: ModelConfig, B: int, S: int, key) -> Dict[str, Any]:
+    """Small concrete batch of the same structure (smoke tests / examples)."""
+    ks = jax.random.split(key, 3)
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        out["input_embeds"] = F.vlm_input_embeds(ks[0], cfg, B, S)
+        out["positions"] = F.mrope_positions(B, S, n_patches=min(8, S), grid=4)
+    else:
+        out["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    out["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        out["frames"] = F.audio_frame_embeddings(ks[2], cfg, B)
+    return out

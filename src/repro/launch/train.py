@@ -1,0 +1,130 @@
+"""Training launcher.
+
+Two modes:
+
+* ``--mode fl`` (default) — the paper's semi-asynchronous FL training with
+  intertwined data/device heterogeneity and the chosen staleness strategy
+  (this is the end-to-end driver deliverable: a ~100M-class run is
+  ``examples/train_fl_end_to_end.py``).
+* ``--mode dense`` — plain distributed LM pretraining of any assigned
+  architecture on synthetic token data (exercises the same train_step the
+  dry-run lowers, at a CPU-feasible reduced size unless --full).
+
+On the container this runs on the 1x1 host mesh; on a real v5e slice the
+same code takes the production mesh (launch/mesh.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import save_pytree
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.core.client import LocalProgram
+from repro.core.gradient_inversion import GIConfig
+from repro.core.server import FLConfig, Server
+from repro.data.partition import (client_label_histograms, dirichlet_partition,
+                                  pad_client_shards)
+from repro.data.staleness import intertwined_schedule
+from repro.data.synthetic import make_image_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import concrete_train_batch
+from repro.models.model import init_train_state, make_train_step
+from repro.models.small import lenet
+from repro.optim import sgd
+
+
+def run_fl(args) -> None:
+    x, y = make_image_dataset(args.n_per_class, n_classes=args.n_classes,
+                              hw=args.hw, seed=args.seed)
+    tx, ty = make_image_dataset(max(20, args.n_per_class // 4),
+                                n_classes=args.n_classes, hw=args.hw,
+                                seed=args.seed + 99)
+    model = lenet(n_classes=args.n_classes, in_hw=args.hw)
+    idx = dirichlet_partition(y, args.clients, alpha=args.alpha, seed=args.seed)
+    cx, cy, cm = pad_client_shards(x, y, idx, m=args.samples_per_client)
+    hist = client_label_histograms(y, idx, args.n_classes)
+    sched = intertwined_schedule(hist, target_class=args.target_class,
+                                 n_slow=args.n_slow, tau=args.staleness)
+    prog = LocalProgram(steps=args.local_steps, lr=args.local_lr, momentum=0.5)
+    cfg = FLConfig(strategy=args.strategy, rounds=args.rounds,
+                   gi=GIConfig(n_rec=args.gi_nrec, iters=args.gi_iters,
+                               keep_fraction=args.gi_keep),
+                   eval_every=args.eval_every, seed=args.seed)
+    srv = Server(model, prog, cfg, cx, cy, cm, sched, tx, ty)
+    t0 = time.time()
+    metrics = srv.run()
+    dt = time.time() - t0
+    final = [m for m in metrics if "acc" in m][-1]
+    print(json.dumps({"strategy": args.strategy, "rounds": args.rounds,
+                      "final_acc": final["acc"],
+                      "target_class_acc": final.get(f"acc_class_{args.target_class}"),
+                      "wall_s": round(dt, 1)}))
+    if args.checkpoint:
+        save_pytree(args.checkpoint, srv.global_params,
+                    meta={"metrics": metrics[-5:]})
+
+
+def run_dense(args) -> None:
+    cfg = get_config(args.arch, reduced=not args.full)
+    opt = sgd(args.local_lr, momentum=0.9)
+    mesh = make_host_mesh()
+    step = jax.jit(make_train_step(cfg, opt, n_micro=args.n_micro))
+    key = jax.random.PRNGKey(args.seed)
+    state = init_train_state(key, cfg, opt)
+    n_params = sum(p.size for p in jax.tree_util.tree_leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+    with mesh:
+        for i in range(args.rounds):
+            key, sub = jax.random.split(key)
+            batch = concrete_train_batch(cfg, args.batch, args.seq, sub)
+            t0 = time.time()
+            state, metrics = step(state, batch)
+            loss = float(metrics["loss"])
+            print(f"step {i:4d} loss={loss:.4f} ({time.time()-t0:.2f}s)",
+                  flush=True)
+            assert np.isfinite(loss), "loss diverged"
+    if args.checkpoint:
+        save_pytree(args.checkpoint, state["params"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["fl", "dense"], default="fl")
+    ap.add_argument("--arch", default="qwen3-1.7b",
+                    choices=sorted(ALIASES) + ARCH_IDS)
+    ap.add_argument("--strategy", default="ours")
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--staleness", type=int, default=10)
+    ap.add_argument("--n-slow", type=int, default=4)
+    ap.add_argument("--target-class", type=int, default=2)
+    ap.add_argument("--n-classes", type=int, default=5)
+    ap.add_argument("--n-per-class", type=int, default=100)
+    ap.add_argument("--hw", type=int, default=16)
+    ap.add_argument("--samples-per-client", type=int, default=32)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--local-lr", type=float, default=0.05)
+    ap.add_argument("--gi-nrec", type=int, default=16)
+    ap.add_argument("--gi-iters", type=int, default=50)
+    ap.add_argument("--gi-keep", type=float, default=1.0)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint")
+    args = ap.parse_args()
+    (run_fl if args.mode == "fl" else run_dense)(args)
+
+
+if __name__ == "__main__":
+    main()

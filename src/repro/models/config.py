@@ -1,0 +1,199 @@
+"""Unified model configuration covering all assigned architecture families.
+
+One ``ModelConfig`` describes any of the six families in the assignment pool:
+
+* ``dense``   — decoder-only transformer (GQA, RoPE, optional qk_norm / QKV
+                bias / sliding window).
+* ``moe``     — dense skeleton with the FFN replaced by shared+routed experts.
+* ``ssm``     — attention-free RWKV6 (Finch) blocks with data-dependent decay.
+* ``hybrid``  — Hymba-style blocks running attention heads and a Mamba/S6 head
+                in parallel within every layer.
+* ``audio``   — Whisper-style encoder-decoder; the mel+conv frontend is a stub
+                that supplies precomputed frame embeddings (the one allowed
+                carve-out).
+* ``vlm``     — Qwen2-VL-style decoder with M-RoPE; the vision tower is a stub
+                that supplies precomputed patch embeddings.
+
+Everything is a frozen dataclass so configs are hashable and usable as static
+arguments to jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration (DeepSeekMoE / Llama-4 style)."""
+
+    n_experts: int            # routed experts
+    top_k: int                # experts activated per token
+    n_shared: int = 0         # always-on shared experts
+    d_expert: int = 0         # per-expert hidden width (0 -> use d_ff)
+    router_aux_coef: float = 0.01   # load-balance auxiliary loss weight
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for encoder-decoder (audio) models."""
+
+    n_layers: int
+    n_ctx: int               # number of frames after the (stubbed) conv frontend
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                  # 0 -> d_model // n_heads
+    block_type: str = "attention"    # attention | rwkv6 | hybrid
+    rope: str = "rope"               # none | rope | mrope
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)   # temporal/h/w rotary dims
+    qk_norm: bool = False
+    attn_bias: bool = False          # QKV projection bias (Qwen1.5)
+    sliding_window: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    ssm_state: int = 16              # S6 / mamba state size (hybrid family)
+    ssm_expand: int = 2              # mamba inner expansion
+    encoder: Optional[EncoderConfig] = None
+    frontend: str = "none"           # none | audio | vision
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu_glu"            # silu_glu | gelu
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # RWKV6-specific
+    rwkv_head_size: int = 64
+    # remat policy for scan-over-layers ("none" | "full" | "dots")
+    remat: str = "none"
+    max_seq_len: int = 524_288
+    # probe mode: unroll layer/attention scans so cost_analysis sees every op
+    # (used by the roofline probe on 1-2 layer variants; see benchmarks/roofline)
+    probe_unroll: bool = False
+    attn_chunk: int = 512
+    # remat the chunked-attention inner scan (flash-style backward recompute;
+    # without it one layer's saved per-chunk probs = the full S x S matrix)
+    remat_attn_chunks: bool = True
+    # mesh axes the activation batch dim is sharded over (set by the launcher;
+    # constrains the residual stream so GSPMD never silently replicates batch)
+    act_batch_axes: Optional[Tuple[str, ...]] = None
+    # sequence-parallel axis for the residual stream between layers (Megatron
+    # SP): shards the remat-saved (L, B, S, d) carries by the model axis
+    act_seq_axis: Optional[str] = None
+    # expert-parallel axis for the MoE (E, C, d) dispatch buffers
+    moe_expert_axis: Optional[str] = None
+    # axes sharding the MoE capacity dim (perf: without this the dispatch
+    # buffer is replicated across the data axis -> data-axis-times redundant
+    # expert FFN compute; see EXPERIMENTS.md §Perf hillclimb 1)
+    moe_capacity_axes: Optional[Tuple[str, ...]] = None
+    # MoE implementation: "gather" (GSPMD index-gathers) or "shard_map"
+    # (expert-parallel local dispatch + psum; see layers.moe_fwd_shardmap)
+    moe_impl: str = "gather"
+    # decode: use direct (non-chunked) attention for single-query steps —
+    # chunk-scanning a seq-sharded cache makes GSPMD gather every chunk
+    # (54x on the dominant roofline term; EXPERIMENTS.md §Perf hillclimb 2)
+    decode_direct_attn: bool = True
+    # decode KV-cache sharding: batch axes and seq axes for the stacked
+    # (L, B, S, KV, hd) k/v leaves. Pinned inside serve_step — without the
+    # pin GSPMD shards the stacked cache's L dim and pays an involuntary
+    # full rematerialization per layer slice.
+    cache_batch_axes: Optional[Tuple[str, ...]] = None
+    cache_seq_axes: Optional[Tuple[str, ...]] = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def n_rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_size
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder is not None
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------ #
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant of the same family: <=2 layers, d_model<=512,
+        <=4 experts — used by per-arch CPU smoke tests."""
+        d_model = min(self.d_model, 256)
+        n_heads = max(2, min(self.n_heads, 4))
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        while n_heads % n_kv:
+            n_kv -= 1
+        kw = dict(
+            n_layers=2,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_head=d_model // n_heads,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            dtype="float32",
+            rwkv_head_size=d_model // max(2, min(self.n_heads, 4)),
+            max_seq_len=4096,
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                n_shared=min(self.moe.n_shared, 1),
+                d_expert=min(self.moe.d_expert or self.d_ff, 128),
+            )
+        if self.encoder is not None:
+            kw["encoder"] = EncoderConfig(n_layers=2, n_ctx=64)
+        if self.sliding_window is not None:
+            kw["sliding_window"] = min(self.sliding_window, 64)
+        if self.rope == "mrope":
+            kw["mrope_sections"] = _mrope_sections_for(d_model // n_heads)
+        return self.with_(**kw)
+
+
+def _mrope_sections_for(head_dim: int) -> Tuple[int, int, int]:
+    """Split half the head_dim rotary coordinates into t/h/w sections."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+# --------------------------------------------------------------------------- #
+# Input shape specifications (the four assigned workloads).
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}

@@ -1,0 +1,59 @@
+"""Modality frontend STUBS — the one allowed carve-out.
+
+Per the assignment: audio (mel-spectrogram + conv feature extractor) and
+vision (ViT/SigLIP + projector) frontends are not implemented; instead
+``input_specs()`` provides precomputed frame/patch embeddings of the right
+shape, and these helpers generate concrete embeddings (for smoke tests) or
+ShapeDtypeStructs (for the dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+WHISPER_N_FRAMES = 1500          # 30 s of audio after the conv frontend
+VLM_PATCHES_PER_IMAGE = 256      # one image worth of merged patch embeddings
+
+
+def audio_frame_embeddings_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    n_ctx = cfg.encoder.n_ctx if cfg.encoder is not None else WHISPER_N_FRAMES
+    return jax.ShapeDtypeStruct((batch, n_ctx, cfg.d_model), cfg.param_dtype)
+
+
+def audio_frame_embeddings(key, cfg: ModelConfig, batch: int) -> jax.Array:
+    spec = audio_frame_embeddings_spec(cfg, batch)
+    return jax.random.normal(key, spec.shape, jnp.float32).astype(spec.dtype) * 0.02
+
+
+def vlm_input_embeds_spec(cfg: ModelConfig, batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    """Merged text+patch embedding sequence the (stubbed) projector emits."""
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.param_dtype)
+
+
+def vlm_input_embeds(key, cfg: ModelConfig, batch: int, seq: int) -> jax.Array:
+    spec = vlm_input_embeds_spec(cfg, batch, seq)
+    return jax.random.normal(key, spec.shape, jnp.float32).astype(spec.dtype) * 0.02
+
+
+def mrope_positions(batch: int, seq: int, n_patches: int = VLM_PATCHES_PER_IMAGE,
+                    grid: int = 16) -> jax.Array:
+    """Qwen2-VL M-RoPE position ids (3, B, S): image patches get (t, h, w)
+    grid positions; text tokens get equal t=h=w running positions."""
+    n_patches = min(n_patches, seq)
+    t = jnp.zeros((n_patches,), jnp.int32)
+    h = (jnp.arange(n_patches) // grid).astype(jnp.int32)
+    w = (jnp.arange(n_patches) % grid).astype(jnp.int32)
+    text_start = jnp.maximum(jnp.max(h), jnp.max(w)) + 1 if n_patches else 0
+    n_text = seq - n_patches
+    text_pos = text_start + jnp.arange(n_text, dtype=jnp.int32)
+    pos3 = jnp.stack([
+        jnp.concatenate([t, text_pos]),
+        jnp.concatenate([h, text_pos]),
+        jnp.concatenate([w, text_pos]),
+    ])  # (3, S)
+    return jnp.broadcast_to(pos3[:, None, :], (3, batch, seq))

@@ -1,0 +1,848 @@
+"""Model building blocks (pure JAX, functional, params-as-pytrees).
+
+Every module is a pair of functions::
+
+    init_<mod>(key, cfg, ...) -> params dict
+    <mod>_fwd(params, cfg, x, ...) -> output
+
+so layer stacks can be built with ``jax.vmap`` (stacked init) and
+``jax.lax.scan`` (stacked apply) in ``transformer.py``.
+
+Design notes
+------------
+* Attention is *chunked* (online-softmax over KV blocks via ``lax.scan``) so
+  that lowering at 32k context never materializes an S x S score matrix —
+  this is the pure-jnp analogue of the Pallas flash kernel in
+  ``repro.kernels.flash_attention`` and doubles as its oracle.
+* MoE uses sort-based dispatch with a static capacity (Megablocks-lite):
+  honest FLOPs (no all-experts-on-all-tokens waste) and it induces the real
+  all-to-all when experts are sharded on the ``model`` mesh axis.
+* RWKV6 and the S6/Mamba head keep recurrent state explicitly so decode is
+  O(1) in sequence length.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------------- #
+# Initializers
+# --------------------------------------------------------------------------- #
+
+
+def _dense_init(key, fan_in: int, shape, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def norm_fwd(p: Params, cfg: ModelConfig, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm used by qk_norm (Qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# --------------------------------------------------------------------------- #
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> cos/sin (..., S, head_dim//2), float32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(
+    positions3: jax.Array, head_dim: int, theta: float, sections: Tuple[int, ...]
+) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE: positions3 (3, B, S); sections sum to head_dim//2.
+
+    Rotary coordinate j uses the temporal/h/w position depending on which
+    section j falls in (Qwen2-VL).
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # section id per rotary coordinate
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )  # (half,)
+    pos = positions3.astype(jnp.float32)  # (3, B, S)
+    pos_per_coord = jnp.take(pos, sec_id, axis=0)  # (half, B, S) via axis-0 gather
+    ang = jnp.moveaxis(pos_per_coord, 0, -1) * freqs  # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention (GQA, causal / bidirectional / cross, sliding window, cache)
+# --------------------------------------------------------------------------- #
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p = {
+        "wq": _dense_init(ks[0], d, (d, h * hd), dt),
+        "wk": _dense_init(ks[1], d, (d, kv * hd), dt),
+        "wv": _dense_init(ks[2], d, (d, kv * hd), dt),
+        "wo": _dense_init(ks[3], h * hd, (h * hd, d), dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    del cross
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, xq: jax.Array, xkv: jax.Array):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.attn_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, Sq, h, hd)
+    k = k.reshape(B, Skv, kv, hd)
+    v = v.reshape(B, Skv, kv, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_offset: jax.Array | int = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    chunk: int = 512,
+    unroll: bool = False,
+    remat_chunks: bool = False,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; never forms (Sq, Skv) scores.
+
+    q (B, Sq, H, D); k/v (B, Skv, KV, D). GQA via head repetition logic.
+    ``q_offset``: absolute position of q[0] (decode: current position).
+    ``kv_valid_len``: if given, keys at index >= valid_len are masked.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(D)
+    nchunk = max(1, (Skv + chunk - 1) // chunk)
+    pad = nchunk * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunk, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # (B,H,Sq,D)
+    qf = qf.reshape(B, KV, rep, Sq, D)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)  # (Sq,)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kci, vci, cidx = inp
+        kv_pos = cidx * chunk + jnp.arange(chunk)  # (chunk,)
+        kf = kci.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,KV,chunk,D)
+        s = jnp.einsum("bgrqd,bgcd->bgrqc", qf, kf)  # (B,KV,rep,Sq,chunk)
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        mask &= (kv_pos < Skv)[None, :]
+        if kv_valid_len is not None:
+            mask &= (kv_pos < kv_valid_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p_ = jnp.exp(s - m_safe[..., None])
+        p_ = jnp.where(mask[None, None, None], p_, 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p_, axis=-1)
+        vf = vci.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,KV,chunk,D)
+        acc_new = acc * corr[..., None] + jnp.einsum("bgrqc,bgcd->bgrqd", p_, vf)
+        return (m_new, l_new, acc_new), ()
+
+    m0 = jnp.full((B, KV, rep, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, Sq, D), jnp.float32)
+    if remat_chunks:
+        # flash-style backward: recompute chunk scores instead of saving the
+        # stacked (nchunk, ..., Sq, chunk) probs = the full S x S matrix
+        step = jax.checkpoint(step)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, jnp.arange(nchunk)),
+                                  unroll=nchunk if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def direct_decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, valid_len: jax.Array,
+    *, window: Optional[int] = None,
+) -> jax.Array:
+    """Single-query attention over the full cache, no chunk scan.
+
+    q (B, 1, H, D); k/v (B, S, KV, D). Scores (B, KV, rep, S) stay sharded
+    along whatever axes shard S; the softmax reductions contract over S so
+    GSPMD emits small stat all-reduces rather than cache gathers.
+    """
+    B, Sq, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KV, rep, D)
+    # read k/v in their storage dtype (no materialized f32 cache copy);
+    # accumulate in f32 via preferred_element_type
+    s = jnp.einsum("bgrd,bsgd->bgrs", qf, k,
+                   preferred_element_type=jnp.float32)  # (B, KV, rep, S)
+    pos = jnp.arange(S)
+    mask = pos < valid_len
+    if window is not None:
+        mask &= pos > valid_len - 1 - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p_ = jnp.exp(s - m)
+    p_ = jnp.where(mask[None, None, None], p_, 0.0)
+    denom = jnp.maximum(p_.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p_ / denom, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention_fwd(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    rope_cs: Optional[Tuple[jax.Array, jax.Array]] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jax.Array] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Self or cross attention. Returns (out, updated_cache).
+
+    Train/prefill: cache is None, full-sequence chunked attention.
+    Decode: x is (B, 1, d); cache holds (B, S_max, KV, D) k/v; cache_pos is
+    the current write index (scalar int32).
+    """
+    B, Sq, _ = x.shape
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = x @ p["wq"]
+        if cfg.attn_bias:
+            q = q + p["bq"]
+        q = q.reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = rms_head_norm(p["q_norm"], q)
+        out = chunked_attention(q, k, v, causal=False, window=None,
+                                chunk=cfg.attn_chunk, unroll=cfg.probe_unroll,
+                                remat_chunks=cfg.remat_attn_chunks)
+        new_cache = cache
+    else:
+        q, k, v = _project_qkv(p, cfg, x, x)
+        if rope_cs is not None:
+            q = apply_rope(q, *rope_cs)
+            k = apply_rope(k, *rope_cs)
+        if cache is not None:
+            # decode: write new k/v at cache_pos, attend over the cache
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            if cfg.decode_direct_attn and Sq == 1:
+                # single-query: one masked-softmax einsum over the (possibly
+                # seq-sharded) cache — GSPMD reduces the softmax stats with
+                # tiny all-reduces instead of gathering cache chunks
+                out = direct_decode_attention(
+                    q, ck, cv, cache_pos + Sq, window=window)
+            else:
+                out = chunked_attention(
+                    q, ck, cv,
+                    causal=True, window=window,
+                    q_offset=cache_pos, kv_valid_len=cache_pos + Sq,
+                    chunk=min(2048, ck.shape[1]), unroll=cfg.probe_unroll,
+                )
+        else:
+            new_cache = None
+            out = chunked_attention(q, k, v, causal=causal, window=window,
+                                    chunk=cfg.attn_chunk, unroll=cfg.probe_unroll,
+                                    remat_chunks=cfg.remat_attn_chunks)
+    out = out.reshape(B, Sq, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"], new_cache
+
+
+def project_cross_kv(p: Params, cfg: ModelConfig, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output (whisper decode)."""
+    B, S, _ = enc_out.shape
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.attn_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = rms_head_norm(p["k_norm"], k)
+    return k, v
+
+
+# --------------------------------------------------------------------------- #
+# Dense FFN
+# --------------------------------------------------------------------------- #
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu_glu":
+        return {
+            "w_gate": _dense_init(ks[0], d, (d, f), dt),
+            "w_up": _dense_init(ks[1], d, (d, f), dt),
+            "w_down": _dense_init(ks[2], f, (f, d), dt),
+        }
+    return {
+        "w_up": _dense_init(ks[0], d, (d, f), dt),
+        "w_down": _dense_init(ks[1], f, (f, d), dt),
+        "b_up": jnp.zeros((f,), dt),
+        "b_down": jnp.zeros((d,), dt),
+    }
+
+
+def mlp_fwd(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "silu_glu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# --------------------------------------------------------------------------- #
+# Mixture of Experts (sort-based dispatch, static capacity)
+# --------------------------------------------------------------------------- #
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    mc = cfg.moe
+    d = cfg.d_model
+    fe = mc.d_expert or cfg.d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], d, (d, mc.n_experts), jnp.float32),
+        "w_gate": _dense_init(ks[1], d, (mc.n_experts, d, fe), dt),
+        "w_up": _dense_init(ks[2], d, (mc.n_experts, d, fe), dt),
+        "w_down": _dense_init(ks[3], fe, (mc.n_experts, fe, d), dt),
+    }
+    if mc.n_shared:
+        sub = jax.random.split(ks[4], 3)
+        fs = fe * mc.n_shared
+        p["shared"] = {
+            "w_gate": _dense_init(sub[0], d, (d, fs), dt),
+            "w_up": _dense_init(sub[1], d, (d, fs), dt),
+            "w_down": _dense_init(sub[2], fs, (fs, d), dt),
+        }
+    return p
+
+
+def moe_fwd(
+    p: Params, cfg: ModelConfig, x: jax.Array, capacity_factor: float = 1.25
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out, aux_loss). Sort-based dispatch with static capacity.
+
+    All heavy data movement is expressed as GATHERS driven by small int32
+    index maps (scatters only touch index vectors): GSPMD shards gathers
+    over the expert axis cleanly, while an (E*C, d) scatter would be
+    replicated per device. ``cfg.moe_expert_axis`` pins the expert-parallel
+    axis of the (E, C, d) dispatch buffers.
+    """
+    mc = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = mc.n_experts, mc.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)           # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = mc.router_aux_coef * E * jnp.sum(me * ce)
+
+    C = max(1, int(math.ceil(T * K / E * capacity_factor)))
+    if cfg.moe_capacity_axes is not None:
+        C = ((C + 127) // 128) * 128   # keep C divisible by the capacity axes
+    flat_eid = expert_ids.reshape(T * K)
+    flat_gate = gate_vals.reshape(T * K)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+
+    order = jnp.argsort(flat_eid)                             # stable
+    s_eid = flat_eid[order]
+    s_tok = flat_tok[order]
+    # position within expert group: arange - start_of_run
+    same = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            (s_eid[1:] == s_eid[:-1]).astype(jnp.int32)])
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(same == 0, jnp.arange(T * K), 0)
+    )
+    idx_in_group = jnp.arange(T * K) - run_start
+    keep = idx_in_group < C
+    # overflow entries point past the buffer and are dropped by the scatter
+    slot = jnp.where(keep, s_eid * C + idx_in_group, E * C)
+
+    # index maps (int32 vectors only — cheap scatters)
+    src = jnp.full((E * C,), T, jnp.int32)                    # T -> zero row
+    src = src.at[slot].set(s_tok.astype(jnp.int32), mode="drop")
+    slot_of = jnp.full((T * K,), E * C, jnp.int32)            # E*C -> zero row
+    slot_of = slot_of.at[order].set(slot.astype(jnp.int32))
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])
+    eb = xt_pad[src].reshape(E, C, d)                         # dispatch gather
+    if cfg.moe_expert_axis is not None or cfg.moe_capacity_axes is not None:
+        from jax.sharding import PartitionSpec as P
+        eb = jax.lax.with_sharding_constraint(
+            eb, P(cfg.moe_expert_axis, cfg.moe_capacity_axes, None))
+
+    h = jnp.einsum("ecd,edf->ecf", eb, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", eb, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["w_down"])
+    y_pad = jnp.concatenate([y.reshape(E * C, d),
+                             jnp.zeros((1, d), y.dtype)])
+
+    per_k = y_pad[slot_of.reshape(T, K)]                      # combine gather
+    # dropped (token, k) pairs point at the zero row, so no gate masking
+    # is needed — their contribution is exactly zero
+    out = jnp.einsum("tkd,tk->td", per_k,
+                     gate_vals.astype(per_k.dtype)).astype(x.dtype)
+
+    if mc.n_shared:
+        sp = p["shared"]
+        out = out + (jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])) @ sp["w_down"]
+    return out.reshape(B, S, d), aux
+
+
+# --------------------------------------------------------------------------- #
+# shard_map MoE (expert-parallel, local dispatch — EXPERIMENTS.md §Perf)
+# --------------------------------------------------------------------------- #
+
+_MOE_MESH = None
+
+
+def set_moe_mesh(mesh) -> None:
+    """Registers the mesh used by the shard_map MoE path (set by the
+    launcher/dry-run before lowering; None disables the path)."""
+    global _MOE_MESH
+    _MOE_MESH = mesh
+
+
+def _local_moe_block(cfg: ModelConfig, capacity_factor: float,
+                     model_ax: str, dp_axes):
+    """Per-shard body: tokens local to the data shard (replicated over the
+    model axis), experts local to the model shard; combine via one psum."""
+    mc = cfg.moe
+
+    def block(xt, router, w_gate, w_up, w_down, shared):
+        T, d = xt.shape
+        E, K = mc.n_experts, mc.top_k
+        E_local = w_gate.shape[0]
+        m_idx = jax.lax.axis_index(model_ax)
+        lo = m_idx * E_local
+
+        logits = xt.astype(jnp.float32) @ router                  # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                            1e-9)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jnp.sum(jax.nn.one_hot(expert_ids, E,
+                                             dtype=jnp.float32), axis=1),
+                      axis=0)
+        aux = mc.router_aux_coef * E * jnp.sum(me * ce)
+        if dp_axes:
+            aux = jax.lax.pmean(aux, dp_axes)
+
+        # ---- dispatch to LOCAL experts only (rest handled by peers) ----- #
+        rel = expert_ids - lo                                     # (T, K)
+        valid = (rel >= 0) & (rel < E_local)
+        C = max(1, int(math.ceil(T * K / E * capacity_factor)))
+        C = ((C + 7) // 8) * 8
+        flat_rel = jnp.where(valid, rel, E_local).reshape(T * K)  # overflow bkt
+        flat_tok = jnp.repeat(jnp.arange(T), K)
+        order = jnp.argsort(flat_rel)
+        s_rel = flat_rel[order]
+        s_tok = flat_tok[order]
+        same = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                (s_rel[1:] == s_rel[:-1]).astype(jnp.int32)])
+        run_start = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(same == 0, jnp.arange(T * K), 0))
+        idx_in_group = jnp.arange(T * K) - run_start
+        keep = (idx_in_group < C) & (s_rel < E_local)
+        slot = jnp.where(keep, s_rel * C + idx_in_group, E_local * C)
+
+        src = jnp.full((E_local * C,), T, jnp.int32)
+        src = src.at[slot].set(s_tok.astype(jnp.int32), mode="drop")
+        slot_of = jnp.full((T * K,), E_local * C, jnp.int32)
+        slot_of = slot_of.at[order].set(slot.astype(jnp.int32))
+
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])
+        eb = xt_pad[src].reshape(E_local, C, d)
+        h = jnp.einsum("ecd,edf->ecf", eb, w_gate)
+        u = jnp.einsum("ecd,edf->ecf", eb, w_up)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w_down)
+        y_pad = jnp.concatenate([y.reshape(E_local * C, d),
+                                 jnp.zeros((1, d), y.dtype)])
+        per_k = y_pad[slot_of.reshape(T, K)]
+        out = jnp.einsum("tkd,tk->td", per_k,
+                         gate_vals.astype(per_k.dtype)).astype(jnp.float32)
+
+        if shared is not None:
+            sg, su, sd = shared
+            out = out + ((jax.nn.silu(xt @ sg) * (xt @ su)) @ sd
+                         ).astype(jnp.float32)
+        out = jax.lax.psum(out, model_ax)
+        return out.astype(xt.dtype), aux
+
+    return block
+
+
+def moe_fwd_shardmap(p: Params, cfg: ModelConfig, x: jax.Array,
+                     capacity_factor: float = 1.25
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via shard_map: per-data-shard local dispatch, one
+    psum over the model axis. Collective cost per layer ~= one activation
+    all-gather in + one psum out (vs global token-indexed gathers in the
+    GSPMD path). Falls back to ``moe_fwd`` when no mesh is registered or the
+    expert count does not divide the model axis."""
+    from jax.sharding import PartitionSpec as P
+    mesh = _MOE_MESH
+    mc = cfg.moe
+    model_ax = cfg.moe_expert_axis or "model"
+    dp_axes = cfg.act_batch_axes or ("data",)
+    if mesh is None or model_ax not in mesh.axis_names:
+        return moe_fwd(p, cfg, x, capacity_factor)
+    msize = dict(mesh.shape)[model_ax]
+    if mc.n_experts % msize or (mc.d_expert or cfg.d_ff) % msize:
+        return moe_fwd(p, cfg, x, capacity_factor)
+
+    B, S, d = x.shape
+    # decode with tiny batch: replicate tokens over the data axes instead of
+    # sharding an indivisible batch dim
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= dict(mesh.shape).get(a, 1)
+    if B % dp_size:
+        dp_axes = ()
+    block = _local_moe_block(cfg, capacity_factor, model_ax, dp_axes)
+
+    def body(x3, router, w_gate, w_up, w_down, *shared):
+        xt = x3.reshape(-1, d)
+        out, aux = block(xt, router, w_gate, w_up, w_down,
+                         shared if shared else None)
+        return out.reshape(x3.shape), aux
+
+    b_entry = dp_axes if dp_axes else None
+    in_specs = [
+        P(b_entry, None, None),        # x: batch on data, replicated model
+        P(None, None),                 # router replicated
+        P(model_ax, None, None),       # experts on model
+        P(model_ax, None, None),
+        P(model_ax, None, None),
+    ]
+    args = [x, p["router"], p["w_gate"], p["w_up"], p["w_down"]]
+    if mc.n_shared:
+        sp = p["shared"]
+        in_specs += [P(None, model_ax), P(None, model_ax), P(model_ax, None)]
+        args += [sp["w_gate"], sp["w_up"], sp["w_down"]]
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(b_entry, None, None), P()),
+    )(*args)
+    return out, aux
+
+
+# --------------------------------------------------------------------------- #
+# RWKV6 (Finch) — token-shift, data-dependent decay, WKV recurrence
+# --------------------------------------------------------------------------- #
+
+
+def init_rwkv6(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    N = cfg.rwkv_head_size
+    H = d // N
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 12)
+    lora_r = max(8, d // 32)
+    p = {
+        # token-shift interpolation factors
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "wr": _dense_init(ks[0], d, (d, d), dt),
+        "wk": _dense_init(ks[1], d, (d, d), dt),
+        "wv": _dense_init(ks[2], d, (d, d), dt),
+        "wg": _dense_init(ks[3], d, (d, d), dt),
+        "wo": _dense_init(ks[4], d, (d, d), dt),
+        # data-dependent decay LoRA (the Finch contribution)
+        "w0": jnp.full((d,), -6.0, dt),
+        "w_lora_a": _dense_init(ks[5], d, (d, lora_r), dt),
+        "w_lora_b": _dense_init(ks[6], lora_r, (lora_r, d), dt),
+        "u": _dense_init(ks[7], N, (H, N), dt),   # per-head bonus
+        "ln_x": jnp.ones((d,), dt),               # group-norm scale on output
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, dt), "cm_mu_r": jnp.full((d,), 0.5, dt),
+        "cm_wk": _dense_init(ks[8], d, (d, cfg.d_ff), dt),
+        "cm_wv": _dense_init(ks[9], cfg.d_ff, (cfg.d_ff, d), dt),
+        "cm_wr": _dense_init(ks[10], d, (d, d), dt),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """Shift sequence right by one; ``prev`` supplies x[-1] for decode."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    pad = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def wkv6_scan(r, k, v, w, u):
+    """WKV recurrence.  r,k,v,w: (B, T, H, N); u: (H, N).
+
+    S_t in R^{H x N x N};  out_t = r_t @ (S_t + u * k_t v_t^T);
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T.
+    Returns (out (B,T,H,N), final_state (B,H,N,N)).
+    """
+    B, T, H, N = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B,H,N)
+        a = kt[..., :, None] * vt[..., None, :]    # (B,H,N,N) outer
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S + uf[None, :, :, None] * a)
+        S = wt[..., :, None] * S + a
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    S, outs = jax.lax.scan(step, S0, xs)
+    out = jnp.moveaxis(outs, 0, 1)                 # (B,T,H,N)
+    return out, S
+
+
+def rwkv6_time_mix(
+    p: Params, cfg: ModelConfig, x: jax.Array,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Params]:
+    """RWKV6 time-mix. state = {"x_prev": (B,d), "S": (B,H,N,N)} for decode."""
+    B, T, d = x.shape
+    N = cfg.rwkv_head_size
+    H = d // N
+    xs = _token_shift(x, None if state is None else state["x_prev"])
+
+    def lerp(mu):
+        return x + (xs - x) * mu
+
+    r = lerp(p["mu_r"]) @ p["wr"]
+    k = lerp(p["mu_k"]) @ p["wk"]
+    v = lerp(p["mu_v"]) @ p["wv"]
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["wg"])
+    ww = lerp(p["mu_w"])
+    dd = jnp.tanh(ww @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp((p["w0"] + dd).astype(jnp.float32)))  # (B,T,d) in (0,1)
+
+    rh = r.reshape(B, T, H, N)
+    kh = k.reshape(B, T, H, N)
+    vh = v.reshape(B, T, H, N)
+    wh = w.reshape(B, T, H, N)
+
+    if state is not None and T == 1:
+        # O(1) decode step
+        S = state["S"]
+        a = kh[:, 0, :, :, None] * vh[:, 0, :, None, :]
+        out = jnp.einsum("bhn,bhnm->bhm", rh[:, 0].astype(jnp.float32),
+                         S + p["u"].astype(jnp.float32)[None, :, :, None] * a)
+        S_new = wh[:, 0, :, :, None].astype(jnp.float32) * S + a
+        out = out[:, None]  # (B,1,H,N)
+    else:
+        out, S_new = wkv6_scan(rh, kh, vh, wh, p["u"])
+
+    out = out.reshape(B, T, d)
+    # group norm per head (simplified: rms over head dims)
+    out = out.reshape(B, T, H, N)
+    out = out * jax.lax.rsqrt(jnp.mean(jnp.square(out), axis=-1, keepdims=True) + 1e-5)
+    out = out.reshape(B, T, d) * p["ln_x"].astype(jnp.float32)
+    out = (out.astype(x.dtype) * g) @ p["wo"]
+    new_state = {"x_prev": x[:, -1, :], "S": S_new}
+    return out, new_state
+
+
+def rwkv6_channel_mix(
+    p: Params, cfg: ModelConfig, x: jax.Array,
+    prev: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["cm_mu_k"]
+    xr = x + (xs - x) * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"]), x[:, -1, :]
+
+
+# --------------------------------------------------------------------------- #
+# S6 / Mamba head (Hymba hybrid)
+# --------------------------------------------------------------------------- #
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 7)
+    dt_rank = max(8, d // 16)
+    return {
+        "w_in": _dense_init(ks[0], d, (d, 2 * di), dt),
+        "conv_w": _dense_init(ks[1], 4, (4, di), dt),      # depthwise, kernel 4
+        "conv_b": jnp.zeros((di,), dt),
+        "w_bc": _dense_init(ks[2], di, (di, 2 * N), dt),
+        "w_dt1": _dense_init(ks[3], di, (di, dt_rank), dt),
+        "w_dt2": _dense_init(ks[4], dt_rank, (dt_rank, di), dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),              # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": _dense_init(ks[5], di, (di, d), dt),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           state: Optional[jax.Array] = None):
+    """x (B,T,C); w (K,C). Returns (y, new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :]
+    return y + b, new_state
+
+
+def mamba_fwd(
+    p: Params, cfg: ModelConfig, x: jax.Array,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Params]:
+    """Selective SSM. state = {"conv": (B,3,di), "h": (B,di,N)} for decode."""
+    B, T, d = x.shape
+    N = cfg.ssm_state
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                      # (B,T,di)
+    conv_state = None if state is None else state["conv"]
+    xi, conv_new = _causal_depthwise_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    bc = xi @ p["w_bc"]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                     # (B,T,N)
+    dt_ = jax.nn.softplus((xi @ p["w_dt1"]) @ p["w_dt2"] + p["dt_bias"])  # (B,T,di)
+    A = -jnp.exp(p["A_log"])                               # (di,N)
+
+    dtf = dt_.astype(jnp.float32)
+    xif = xi.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A[None, None])           # (B,T,di,N)
+    dBx = dtf[..., None] * Bf[:, :, None, :] * xif[..., None]  # (B,T,di,N)
+
+    h0 = (jnp.zeros((B, xi.shape[-1], N), jnp.float32)
+          if state is None else state["h"])
+    if state is not None and T == 1:
+        h = dA[:, 0] * h0 + dBx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, Cf[:, 0])[:, None]
+        h_new = h
+    else:
+        def step(h, inp):
+            dAt, dBxt, Ct = inp
+            h = dAt * h + dBxt
+            return h, jnp.einsum("bdn,bn->bd", h, Ct)
+        xs_ = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0), jnp.moveaxis(Cf, 1, 0))
+        h_new, ys = jax.lax.scan(step, h0, xs_)
+        y = jnp.moveaxis(ys, 0, 1)                         # (B,T,di)
+    y = y + p["D"] * xif
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return out, {"conv": conv_new, "h": h_new}

@@ -1,0 +1,165 @@
+"""Model driver: loss, train_step, serve_step — the functions the launcher,
+FL runtime, and dry-run all lower.
+
+``train_step`` is a plain function of (state, batch) so it can be jitted with
+explicit in/out shardings by ``repro.launch``; the FL client reuses the same
+loss through ``repro.core.client.LocalUpdate``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer, apply_updates
+
+Params = Dict[str, Any]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Mean next-token cross entropy; logits (B,S,V), labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal LM loss: predict batch["labels"] (pre-shifted by the pipeline)."""
+    logits, aux = T.forward(params, cfg, batch)
+    ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: Optimizer) -> Params:
+    params = T.init_params(key, cfg)
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, n_micro: int = 1,
+                    batch_axes=None):
+    """Build the train step. ``n_micro > 1`` splits the global batch into
+    microbatches scanned with gradient accumulation — required at production
+    scale so (B, S, vocab) logits never materialize for the full batch.
+
+    ``batch_axes``: mesh axis (or tuple) the batch dim is sharded over; the
+    microbatch split re-constrains each slice's batch axis to it (without the
+    constraint GSPMD can replicate the reshaped batch, blowing up remat
+    buffers 8x — see EXPERIMENTS.md §Dry-run)."""
+
+    def _grads(params, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (loss, metrics), grads = grad_fn(params, cfg, batch)
+        return grads, metrics
+
+    def _constrain(k, x):
+        if batch_axes is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+        if k == "positions" and x.ndim == 4:       # (n_micro, 3, B, S)
+            spec = P(None, None, batch_axes, None)
+        else:                                      # (n_micro, B, ...)
+            spec = P(None, batch_axes, *([None] * (x.ndim - 2)))
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def train_step(state: Params, batch: Dict[str, jax.Array]):
+        params = state["params"]
+        if n_micro == 1:
+            grads, metrics = _grads(params, batch)
+        else:
+            def split(x):
+                if x.ndim == 3 and x.shape[0] == 3:  # (3,B,S) mrope positions
+                    return x.transpose(1, 0, 2).reshape(
+                        n_micro, x.shape[1] // n_micro, 3, x.shape[2]
+                    ).transpose(0, 2, 1, 3)
+                if x.ndim >= 2 and x.shape[0] % n_micro == 0:
+                    return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+                raise ValueError(f"cannot microbatch shape {x.shape}")
+
+            micro = {k: _constrain(k, split(v)) for k, v in batch.items()}
+
+            def acc_step(carry, mb):
+                g_acc = carry
+                g, metrics = _grads(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_micro, g_acc, g)
+                return g_acc, metrics
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(acc_step, g0, micro)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+        updates, new_opt = optimizer.update(grads, state["opt"], state["params"])
+        new_params = apply_updates(state["params"], updates)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_logits_last(cfg: ModelConfig):
+    """Prefill for serving: full-sequence forward, last-token logits only
+    (production engines never materialize (B, S, V) prefill logits)."""
+
+    def prefill(params: Params, batch: Dict[str, jax.Array]):
+        from repro.models import transformer as TT
+        if "input_embeds" in batch:
+            x = batch["input_embeds"].astype(cfg.param_dtype)
+            B, S = x.shape[:2]
+        else:
+            tokens = batch["tokens"]
+            B, S = tokens.shape
+            x = TT.embed_tokens(params, cfg, tokens)
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        rope_cs = TT.make_rope_cs(cfg, positions)
+        cross_kv = None
+        if cfg.is_encdec:
+            x = x + TT.sinusoidal_pos(jnp.arange(S), cfg.d_model).astype(x.dtype)
+            enc_out = TT.encode_audio(params, cfg, batch["frames"])
+            import repro.models.layers as L
+            cross_kv = jax.vmap(
+                lambda lp: L.project_cross_kv(lp["cross_attn"], cfg, enc_out)
+            )(params["layers"])
+        x, _, _ = TT.run_stack(params["layers"], cfg, x, rope_cs=rope_cs,
+                               causal=True, cross_kv=cross_kv)
+        import repro.models.layers as L
+        x = L.norm_fwd(params["final_norm"], cfg, x[:, -1:, :])
+        return TT.unembed(params, cfg, x)[:, 0, :]
+
+    return prefill
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params: Params, batch: Dict[str, jax.Array]):
+        logits, _ = T.forward(params, cfg, batch)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params: Params, caches: Params, tokens: jax.Array,
+                   cache_pos: jax.Array, cross_kv: Optional[Params] = None):
+        return T.serve_step(params, cfg, caches, tokens, cache_pos, cross_kv)
+
+    return serve_step

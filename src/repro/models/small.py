@@ -1,0 +1,164 @@
+"""Paper-scale models: the paper's experiments use LeNet (MNIST/FMNIST),
+ResNet18 (CIFAR-10/MDI), an MLP (PAMAP2) and a 1D-CNN (ExtraSensory).
+
+At CPU scale we implement: LeNet (faithful), a small residual CNN standing in
+for ResNet18's role, the 3-layer MLP and the 1D-CNN. All take *continuous*
+inputs so gradient inversion can optimize D_rec directly in input space.
+
+API: ``SmallModel(init, apply, input_shape, n_classes)`` where
+``apply(params, x) -> logits``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SmallModel(NamedTuple):
+    name: str
+    init: Callable[[jax.Array], Any]
+    apply: Callable[[Any, jax.Array], jax.Array]
+    input_shape: Tuple[int, ...]
+    n_classes: int
+
+
+def _dense(key, fan_in, shape):
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(max(fan_in, 1))
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv1d(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride,), padding, dimension_numbers=("NWC", "WIO", "NWC"))
+
+
+# --------------------------------------------------------------------------- #
+# LeNet (paper: MNIST / FMNIST experiments)
+# --------------------------------------------------------------------------- #
+
+
+def lenet(n_classes: int = 10, in_hw: int = 28, in_ch: int = 1) -> SmallModel:
+    hw4 = in_hw // 4
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "c1": _dense(ks[0], 25 * in_ch, (5, 5, in_ch, 6)),
+            "c2": _dense(ks[1], 25 * 6, (5, 5, 6, 16)),
+            "f1": _dense(ks[2], hw4 * hw4 * 16, (hw4 * hw4 * 16, 120)),
+            "f2": _dense(ks[3], 120, (120, 84)),
+            "f3": _dense(ks[4], 84, (84, n_classes)),
+            "b1": jnp.zeros((120,)), "b2": jnp.zeros((84,)),
+            "b3": jnp.zeros((n_classes,)),
+        }
+
+    def apply(p, x):
+        x = jnp.tanh(_conv(x, p["c1"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = jnp.tanh(_conv(x, p["c2"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        x = jnp.tanh(x @ p["f1"] + p["b1"])
+        x = jnp.tanh(x @ p["f2"] + p["b2"])
+        return x @ p["f3"] + p["b3"]
+
+    return SmallModel("lenet", init, apply, (in_hw, in_hw, in_ch), n_classes)
+
+
+# --------------------------------------------------------------------------- #
+# Small residual CNN (stands in for ResNet18 at CPU scale; CIFAR/MDI role)
+# --------------------------------------------------------------------------- #
+
+
+def rescnn(n_classes: int = 10, in_hw: int = 32, in_ch: int = 3, width: int = 16
+           ) -> SmallModel:
+    def init(key):
+        ks = jax.random.split(key, 8)
+        return {
+            "stem": _dense(ks[0], 9 * in_ch, (3, 3, in_ch, width)),
+            "b1a": _dense(ks[1], 9 * width, (3, 3, width, width)),
+            "b1b": _dense(ks[2], 9 * width, (3, 3, width, width)),
+            "down": _dense(ks[3], 9 * width, (3, 3, width, 2 * width)),
+            "b2a": _dense(ks[4], 9 * 2 * width, (3, 3, 2 * width, 2 * width)),
+            "b2b": _dense(ks[5], 9 * 2 * width, (3, 3, 2 * width, 2 * width)),
+            "head": _dense(ks[6], 2 * width, (2 * width, n_classes)),
+            "hb": jnp.zeros((n_classes,)),
+        }
+
+    def apply(p, x):
+        x = jax.nn.relu(_conv(x, p["stem"]))
+        h = jax.nn.relu(_conv(x, p["b1a"]))
+        x = jax.nn.relu(x + _conv(h, p["b1b"]))
+        x = jax.nn.relu(_conv(x, p["down"], stride=2))
+        h = jax.nn.relu(_conv(x, p["b2a"]))
+        x = jax.nn.relu(x + _conv(h, p["b2b"]))
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ p["head"] + p["hb"]
+
+    return SmallModel("rescnn", init, apply, (in_hw, in_hw, in_ch), n_classes)
+
+
+# --------------------------------------------------------------------------- #
+# 3-layer MLP (paper Appendix A: PAMAP2)
+# --------------------------------------------------------------------------- #
+
+
+def mlp3(n_features: int = 52, n_classes: int = 13, hidden: int = 128) -> SmallModel:
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {
+            "w1": _dense(ks[0], n_features, (n_features, hidden)),
+            "w2": _dense(ks[1], hidden, (hidden, hidden)),
+            "w3": _dense(ks[2], hidden, (hidden, n_classes)),
+            "b1": jnp.zeros((hidden,)), "b2": jnp.zeros((hidden,)),
+            "b3": jnp.zeros((n_classes,)),
+        }
+
+    def apply(p, x):
+        x = jax.nn.relu(x @ p["w1"] + p["b1"])
+        x = jax.nn.relu(x @ p["w2"] + p["b2"])
+        return x @ p["w3"] + p["b3"]
+
+    return SmallModel("mlp3", init, apply, (n_features,), n_classes)
+
+
+# --------------------------------------------------------------------------- #
+# 1D-CNN (paper Appendix A: ExtraSensory)
+# --------------------------------------------------------------------------- #
+
+
+def cnn1d(seq: int = 64, channels: int = 6, n_classes: int = 7, width: int = 32
+          ) -> SmallModel:
+    def init(key):
+        ks = jax.random.split(key, 4)
+        return {
+            "c1": _dense(ks[0], 5 * channels, (5, channels, width)),
+            "c2": _dense(ks[1], 5 * width, (5, width, width)),
+            "f": _dense(ks[2], width, (width, n_classes)),
+            "fb": jnp.zeros((n_classes,)),
+        }
+
+    def apply(p, x):
+        x = jax.nn.relu(_conv1d(x, p["c1"], stride=2))
+        x = jax.nn.relu(_conv1d(x, p["c2"], stride=2))
+        x = jnp.mean(x, axis=1)
+        return x @ p["f"] + p["fb"]
+
+    return SmallModel("cnn1d", init, apply, (seq, channels), n_classes)
+
+
+SMALL_MODELS = {
+    "lenet": lenet,
+    "rescnn": rescnn,
+    "mlp3": mlp3,
+    "cnn1d": cnn1d,
+}

@@ -1,0 +1,401 @@
+"""Full-model assembly: embeddings, scanned layer stacks, heads, KV caches.
+
+Families share one parameter layout::
+
+    {"embed": (V, d),
+     "layers": <stacked per-layer pytree, leading axis L>,
+     "final_norm": {...},
+     "lm_head": (d, V)            # absent when tie_embeddings
+     "encoder": {...}}            # audio (whisper) only
+
+Layers are initialized with ``jax.vmap`` over per-layer keys and applied with
+``jax.lax.scan``, so the HLO is depth-independent (one layer body + loop).
+Decode caches are stacked along the same leading L axis and scanned jointly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# Per-layer init / apply
+# --------------------------------------------------------------------------- #
+
+
+def init_layer(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    if cfg.block_type == "rwkv6":
+        return {
+            "norm1": L.init_norm(cfg, cfg.d_model),
+            "norm2": L.init_norm(cfg, cfg.d_model),
+            "rwkv": L.init_rwkv6(ks[0], cfg),
+        }
+    p: Params = {
+        "norm1": L.init_norm(cfg, cfg.d_model),
+        "norm2": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg),
+    }
+    if cfg.block_type == "hybrid":
+        p["mamba"] = L.init_mamba(ks[1], cfg)
+    if cross:
+        p["norm_cross"] = L.init_norm(cfg, cfg.d_model)
+        p["cross_attn"] = L.init_attention(ks[2], cfg)
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def layer_fwd(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    rope_cs=None,
+    causal: bool = True,
+    cache: Optional[Params] = None,
+    cache_pos=None,
+    cross_kv=None,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+
+    if cfg.block_type == "rwkv6":
+        tm_state = None if cache is None else {"x_prev": cache["tm_x"], "S": cache["S"]}
+        h = L.norm_fwd(p["norm1"], cfg, x)
+        o, tm_new = L.rwkv6_time_mix(p["rwkv"], cfg, h, tm_state)
+        x = x + o
+        h = L.norm_fwd(p["norm2"], cfg, x)
+        cm_prev = None if cache is None else cache["cm_x"]
+        o, cm_new = L.rwkv6_channel_mix(p["rwkv"], cfg, h, cm_prev)
+        x = x + o
+        if cache is not None:
+            new_cache = {"tm_x": tm_new["x_prev"], "S": tm_new["S"], "cm_x": cm_new}
+        return x, (new_cache or None), aux
+
+    h = L.norm_fwd(p["norm1"], cfg, x)
+    attn_cache = None
+    if cache is not None and "k" in cache:
+        attn_cache = {"k": cache["k"], "v": cache["v"]}
+    o_attn, attn_new = L.attention_fwd(
+        p["attn"], cfg, h,
+        rope_cs=rope_cs, causal=causal, window=cfg.sliding_window,
+        cache=attn_cache, cache_pos=cache_pos,
+    )
+    if cfg.block_type == "hybrid":
+        m_state = None
+        if cache is not None:
+            m_state = {"conv": cache["conv"], "h": cache["h"]}
+        o_mamba, m_new = L.mamba_fwd(p["mamba"], cfg, h, m_state)
+        x = x + 0.5 * (o_attn + o_mamba)
+        if cache is not None:
+            new_cache.update({"conv": m_new["conv"], "h": m_new["h"]})
+    else:
+        x = x + o_attn
+    if attn_new is not None:
+        new_cache.update(attn_new)
+
+    if cross_kv is not None:
+        h = L.norm_fwd(p["norm_cross"], cfg, x)
+        o, _ = L.attention_fwd(p["cross_attn"], cfg, h, cross_kv=cross_kv)
+        x = x + o
+
+    h = L.norm_fwd(p["norm2"], cfg, x)
+    if cfg.moe is not None:
+        moe = (L.moe_fwd_shardmap if cfg.moe_impl == "shard_map"
+               else L.moe_fwd)
+        o, aux = moe(p["moe"], cfg, h)
+    else:
+        o = L.mlp_fwd(p["mlp"], cfg, h)
+    x = x + o
+    return x, (new_cache or None), aux
+
+
+# --------------------------------------------------------------------------- #
+# Whole-model init
+# --------------------------------------------------------------------------- #
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k_emb, k_layers, k_head, k_enc = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    params: Params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dt),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    cross = cfg.is_encdec
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: init_layer(k, cfg, cross=cross))(layer_keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(k_head, cfg.d_model, (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.is_encdec:
+        enc_cfg = cfg
+        ekeys = jax.random.split(k_enc, cfg.encoder.n_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: init_layer(k, enc_cfg, cross=False))(ekeys),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+        }
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+# --------------------------------------------------------------------------- #
+# Positional helpers
+# --------------------------------------------------------------------------- #
+
+
+def sinusoidal_pos(positions: jax.Array, d: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings; positions (..., S) -> (..., S, d)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def make_rope_cs(cfg: ModelConfig, positions: jax.Array):
+    if cfg.rope == "none":
+        return None
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:  # (B,S) text-only: all three components equal
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return L.mrope_cos_sin(positions, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    return L.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+
+# --------------------------------------------------------------------------- #
+# Scanned stacks
+# --------------------------------------------------------------------------- #
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def run_stack(
+    stacked: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    rope_cs=None,
+    causal: bool = True,
+    caches: Optional[Params] = None,
+    cache_pos=None,
+    cross_kv=None,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Scan the layer stack. caches/cross_kv are stacked along axis 0 (L)."""
+
+    def body(carry, xs):
+        x, aux = carry
+        lp = xs["p"]
+        lc = xs.get("c")
+        ckv = xs.get("x_kv")
+        ckv = (ckv["k"], ckv["v"]) if ckv is not None else None
+        if cfg.act_batch_axes is not None or cfg.act_seq_axis is not None:
+            # pin the residual stream's batch sharding (GSPMD can otherwise
+            # flip activations to d_model-sharded/batch-replicated, blowing
+            # up remat buffers by the data-axis size); optionally shard the
+            # seq dim on the model axis between layers (Megatron-style SP)
+            from jax.sharding import PartitionSpec as P
+            x = jax.lax.with_sharding_constraint(
+                x, P(cfg.act_batch_axes, cfg.act_seq_axis, None))
+        x, new_c, a = layer_fwd(
+            lp, cfg, x, rope_cs=rope_cs, causal=causal,
+            cache=lc, cache_pos=cache_pos, cross_kv=ckv,
+        )
+        return (x, aux + a), new_c
+
+    xs: Dict[str, Any] = {"p": stacked}
+    if caches is not None:
+        xs["c"] = caches
+    if cross_kv is not None:
+        xs["x_kv"] = {"k": cross_kv[0], "v": cross_kv[1]}
+    body = _maybe_remat(body, cfg)
+    if cfg.probe_unroll:
+        # roofline probe: explicit python loop so every layer's ops appear in
+        # the HLO (cost_analysis does not multiply while-loop bodies)
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for li in range(cfg.n_layers):
+            xsl = jax.tree_util.tree_map(lambda a: a[li], xs)
+            carry, y = body(carry, xsl)
+            ys.append(y)
+        (x, aux) = carry
+        new_caches = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+                      if ys and ys[0] is not None else None)
+        return x, new_caches, aux
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_caches, aux
+
+
+# --------------------------------------------------------------------------- #
+# Forward passes
+# --------------------------------------------------------------------------- #
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def encode_audio(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over (stubbed) frame embeddings (B, n_ctx, d)."""
+    pos = jnp.arange(frames.shape[1])
+    x = frames + sinusoidal_pos(pos, cfg.d_model).astype(frames.dtype)
+    x, _, _ = run_stack(params["encoder"]["layers"], cfg, x, causal=False)
+    return L.norm_fwd(params["encoder"]["final_norm"], cfg, x)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train / prefill). Returns (logits, aux_loss).
+
+    batch keys: "tokens" (B,S) int32; optionally "input_embeds" (B,S,d) which
+    *overrides* token embedding (vlm stub), "positions" ((B,S) or (3,B,S) for
+    mrope), "frames" (B,n_ctx,d) for the audio encoder stub.
+    """
+    if "input_embeds" in batch:
+        x = batch["input_embeds"].astype(cfg.param_dtype)
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_tokens(params, cfg, tokens)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    rope_cs = make_rope_cs(cfg, positions)
+    if cfg.rope == "none" and not cfg.is_encdec:
+        pass  # rwkv needs no positions
+    if cfg.is_encdec:
+        x = x + sinusoidal_pos(jnp.arange(S), cfg.d_model).astype(x.dtype)
+        enc_out = encode_audio(params, cfg, batch["frames"])
+        # per-layer cross K/V (stacked): vmap projection over layers
+        cross_kv = jax.vmap(
+            lambda lp: L.project_cross_kv(lp["cross_attn"], cfg, enc_out)
+        )(params["layers"])
+    else:
+        cross_kv = None
+    x, _, aux = run_stack(
+        params["layers"], cfg, x, rope_cs=rope_cs, causal=True, cross_kv=cross_kv)
+    x = L.norm_fwd(params["final_norm"], cfg, x)
+    return unembed(params, cfg, x), aux
+
+
+# --------------------------------------------------------------------------- #
+# Decode (serve_step)
+# --------------------------------------------------------------------------- #
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> Params:
+    """Stacked (leading L axis) decode cache with correct per-family shapes."""
+    Lx = cfg.n_layers
+    dt = cfg.param_dtype
+    if cfg.block_type == "rwkv6":
+        H, N = cfg.n_rwkv_heads, cfg.rwkv_head_size
+        return {
+            "tm_x": jnp.zeros((Lx, batch_size, cfg.d_model), dt),
+            "S": jnp.zeros((Lx, batch_size, H, N, N), jnp.float32),
+            "cm_x": jnp.zeros((Lx, batch_size, cfg.d_model), dt),
+        }
+    kv_len = max_len if cfg.sliding_window is None else min(max_len, _window_cache_len(cfg, max_len))
+    c = {
+        "k": jnp.zeros((Lx, batch_size, kv_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((Lx, batch_size, kv_len, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+    if cfg.block_type == "hybrid":
+        di = cfg.ssm_expand * cfg.d_model
+        c["conv"] = jnp.zeros((Lx, batch_size, 3, di), dt)
+        c["h"] = jnp.zeros((Lx, batch_size, di, cfg.ssm_state), jnp.float32)
+    return c
+
+
+def _window_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    # Baseline keeps the full-length cache (paper-faithful simplicity); the
+    # windowed-cache optimization is applied in the perf pass via configs.
+    return max_len
+
+
+def constrain_cache(caches: Params, cfg: ModelConfig) -> Params:
+    """Pin the k/v leaves' (L, B, S, KV, hd) sharding per cfg.cache_*_axes —
+    GSPMD otherwise shards the stacked L dim and pays an involuntary full
+    rematerialization on every per-layer slice inside the scan."""
+    if cfg.cache_batch_axes is None and cfg.cache_seq_axes is None:
+        return caches
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(kp, v):
+        name = str(kp[-1].key) if hasattr(kp[-1], "key") else ""
+        if name in ("k", "v") and v.ndim == 5:
+            return jax.lax.with_sharding_constraint(
+                v, P(None, cfg.cache_batch_axes, cfg.cache_seq_axes,
+                     None, None))
+        return v
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(kp, v) for kp, v in flat])
+
+
+def serve_step(
+    params: Params,
+    cfg: ModelConfig,
+    caches: Params,
+    tokens: jax.Array,           # (B, 1)
+    cache_pos: jax.Array,        # scalar int32: current position
+    cross_kv: Optional[Params] = None,
+) -> Tuple[jax.Array, Params]:
+    """One decode step: embed token, run stack against the cache, unembed."""
+    caches = constrain_cache(caches, cfg)
+    x = embed_tokens(params, cfg, tokens)
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(cache_pos[None, None], (B, 1))
+    rope_cs = make_rope_cs(cfg, positions)
+    if cfg.is_encdec:
+        x = x + sinusoidal_pos(positions, cfg.d_model).astype(x.dtype)
+    ckv = None
+    if cross_kv is not None:
+        ckv = (cross_kv["k"], cross_kv["v"])
+    x, new_caches, _ = run_stack(
+        params["layers"], cfg, x, rope_cs=rope_cs, causal=True,
+        caches=caches, cache_pos=cache_pos, cross_kv=ckv)
+    new_caches = constrain_cache(new_caches, cfg)
+    x = L.norm_fwd(params["final_norm"], cfg, x)
+    logits = unembed(params, cfg, x)
+    return logits, new_caches
+
+
+def precompute_cross_kv(params: Params, cfg: ModelConfig, frames: jax.Array) -> Params:
+    enc_out = encode_audio(params, cfg, frames)
+    k, v = jax.vmap(
+        lambda lp: L.project_cross_kv(lp["cross_attn"], cfg, enc_out)
+    )(params["layers"])
+    return {"k": k, "v": v}

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    fedprox_wrap,
+    sgd,
+    apply_updates,
+    global_norm,
+    clip_by_global_norm,
+)

@@ -1,0 +1,116 @@
+"""Pure-JAX optimizers (the container has no optax).
+
+API mirrors optax minimally::
+
+    opt = sgd(lr=0.01, momentum=0.5)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All optimizers are pytree-polymorphic and jit-safe. ``fedprox_wrap`` adds the
+FedProx proximal term mu*(w - w_global) to the gradients, which is how the
+paper runs its FedProx local-program ablation (Appendix E, Table 20).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), gn
+
+
+# --------------------------------------------------------------------------- #
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -lr * (momentum * m + g.astype(jnp.float32)), new_m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(z, params),
+            "nu": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            updates = jax.tree_util.tree_map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "t": t}
+
+    return Optimizer(init, update)
+
+
+def fedprox_wrap(base: Optimizer, mu: float, global_params) -> Optimizer:
+    """FedProx: grads += mu * (w - w_global) before the base optimizer."""
+
+    def init(params):
+        return base.init(params)
+
+    def update(grads, state, params=None):
+        assert params is not None, "fedprox needs current params"
+        g = jax.tree_util.tree_map(
+            lambda gr, p, gp: gr + mu * (p - gp).astype(gr.dtype),
+            grads, params, global_params)
+        return base.update(g, state, params)
+
+    return Optimizer(init, update)

@@ -1,0 +1,69 @@
+"""Shape/dtype sweep: Pallas flash attention vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_reference, flash_attention
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _mk(B, Sq, Skv, H, KV, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 64, 4, 2, 32),      # GQA rep 2
+    (1, 96, 8, 2, 64),      # GQA rep 4
+    (2, 60, 4, 1, 32),      # MQA, uneven seq
+    (1, 256, 2, 2, 128),    # long-ish, wide head
+])
+def test_causal_matches_reference(B, S, H, KV, D):
+    q, k, v = _mk(B, S, S, H, KV, D, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    ref = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 32, 64])
+def test_sliding_window(window):
+    q, k, v = _mk(1, 128, 128, 4, 2, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, bq=32, bk=32)
+    ref = attention_reference(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_bidirectional():
+    q, k, v = _mk(2, 64, 64, 4, 4, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, bq=32, bk=32)
+    ref = attention_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_bfloat16_tolerance():
+    q, k, v = _mk(1, 64, 64, 4, 2, 64, jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    ref = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=3e-2, rtol=3e-2)
+
+
+def test_block_shape_invariance():
+    q, k, v = _mk(1, 128, 128, 2, 2, 32, jnp.float32)
+    o1 = flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    o2 = flash_attention(q, k, v, causal=True, bq=64, bk=128)
+    np.testing.assert_allclose(o1, o2, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_shape_single_query():
+    q, k, v = _mk(2, 1, 96, 4, 2, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, bq=8, bk=32)
+    ref = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)

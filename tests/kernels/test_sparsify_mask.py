@@ -1,0 +1,40 @@
+"""Sweep: Pallas sparsify-mask kernel vs oracle + threshold semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sparsify_mask import (sparsify_mask,
+                                         sparsify_mask_reference,
+                                         topk_threshold)
+
+KEY = jax.random.PRNGKey(17)
+
+
+@pytest.mark.parametrize("n", [128, 1000, 4096, 70001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mask_matches_reference(n, dtype):
+    u = jax.random.normal(KEY, (n,), jnp.float32).astype(dtype)
+    t = jnp.asarray(0.5, jnp.float32)
+    out = sparsify_mask(u, t)
+    ref = sparsify_mask_reference(u, t)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("frac", [0.01, 0.05, 0.5])
+def test_topk_threshold_keeps_expected_fraction(frac):
+    u = jax.random.normal(KEY, (20_000,))
+    t = topk_threshold(u, frac)
+    kept = int((jnp.abs(u) >= t).sum())
+    expect = round(20_000 * frac)
+    assert abs(kept - expect) <= max(2, int(0.01 * expect))
+
+
+def test_masked_vector_sparsity_pattern():
+    u = jax.random.normal(KEY, (5000,))
+    t = topk_threshold(u, 0.05)
+    out = np.asarray(sparsify_mask(u, t))
+    nz = out != 0
+    mags = np.abs(np.asarray(u))
+    assert mags[nz].min() >= mags[~nz].max() - 1e-6

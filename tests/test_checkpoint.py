@@ -1,0 +1,34 @@
+"""Checkpoint roundtrip tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_meta, load_pytree, save_pytree
+from repro.configs import get_config
+from repro.models import transformer as T
+
+
+def test_roundtrip_simple_tree(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree, meta={"round": 7})
+    restored = load_pytree(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert load_meta(path)["round"] == 7
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = get_config("qwen1_5_0_5b", reduced=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "model.npz")
+    save_pytree(path, params)
+    restored = load_pytree(path, params)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

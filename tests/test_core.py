@@ -1,0 +1,223 @@
+"""Unit tests for the FL core (the paper's contribution)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, compensation, tiers
+from repro.core.client import LocalProgram, make_local_update, soft_ce_loss
+from repro.core.disparity import (cosine_distance, l1_disparity, tree_sub,
+                                  tree_to_vector, vector_to_tree)
+from repro.core.sparsify import WarmStartCache, topk_mask
+from repro.core.switching import SwitchMonitor
+from repro.core.uniqueness import is_unique, uniqueness_threshold
+from repro.models.small import lenet, mlp3
+
+KEY = jax.random.PRNGKey(0)
+
+
+def small_tree(seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {"a": jax.random.normal(k1, (4, 3)) * scale,
+            "b": {"c": jax.random.normal(k2, (5,)) * scale}}
+
+
+# --------------------------------------------------------------------------- #
+# Disparity metrics
+# --------------------------------------------------------------------------- #
+
+
+def test_tree_vector_roundtrip():
+    t = small_tree()
+    v = tree_to_vector(t)
+    t2 = vector_to_tree(v, t)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_allclose(a, b)
+
+
+def test_cosine_distance_bounds_and_identity():
+    t = small_tree()
+    assert abs(float(cosine_distance(t, t))) < 1e-6
+    neg = jax.tree_util.tree_map(lambda x: -x, t)
+    np.testing.assert_allclose(float(cosine_distance(t, neg)), 2.0, atol=1e-5)
+    other = small_tree(seed=1)
+    d = float(cosine_distance(t, other))
+    assert 0.0 <= d <= 2.0
+
+
+def test_l1_disparity_masked():
+    a = {"x": jnp.array([1.0, 2.0, 3.0, 4.0])}
+    b = {"x": jnp.array([0.0, 0.0, 0.0, 0.0])}
+    mask = jnp.array([True, False, False, True])
+    np.testing.assert_allclose(float(l1_disparity(a, b, mask)), 2.5)
+    np.testing.assert_allclose(float(l1_disparity(a, b)), 2.5)
+
+
+# --------------------------------------------------------------------------- #
+# LocalUpdate
+# --------------------------------------------------------------------------- #
+
+
+def test_local_update_runs_and_reduces_loss():
+    model = mlp3(n_features=8, n_classes=3, hidden=16)
+    params = model.init(KEY)
+    x = jax.random.normal(KEY, (12, 8))
+    y = jax.random.randint(KEY, (12,), 0, 3)
+    lu = make_local_update(model.apply, LocalProgram(steps=20, lr=0.2))
+    new_params, losses = lu(params, x, y)
+    assert float(losses[-1]) < float(losses[0])
+    assert float(l1_disparity(new_params, params)) > 0
+
+
+def test_local_update_differentiable_in_data():
+    """GI depends on d LocalUpdate / d data existing and being nonzero."""
+    model = mlp3(n_features=4, n_classes=2, hidden=8)
+    params = model.init(KEY)
+    lu = make_local_update(model.apply, LocalProgram(steps=3, lr=0.1))
+
+    def objective(x):
+        y = jnp.zeros((x.shape[0], 2))
+        w, _ = lu(params, x, y)
+        return l1_disparity(w, params)
+
+    g = jax.grad(objective)(jax.random.normal(KEY, (6, 4)))
+    assert float(jnp.abs(g).sum()) > 0
+
+
+def test_soft_ce_matches_hard_ce():
+    model = mlp3(n_features=4, n_classes=3, hidden=8)
+    params = model.init(KEY)
+    x = jax.random.normal(KEY, (5, 4))
+    y_hard = jnp.array([0, 1, 2, 1, 0])
+    # soft logits strongly peaked at the hard labels
+    y_soft = jax.nn.one_hot(y_hard, 3) * 100.0
+    l_hard = soft_ce_loss(model.apply, params, x, y_hard)
+    l_soft = soft_ce_loss(model.apply, params, x, y_soft)
+    np.testing.assert_allclose(float(l_hard), float(l_soft), rtol=1e-4)
+
+
+def test_fedprox_pulls_toward_global():
+    model = mlp3(n_features=4, n_classes=2, hidden=8)
+    params = model.init(KEY)
+    x = jax.random.normal(KEY, (6, 4))
+    y = jax.random.randint(KEY, (6,), 0, 2)
+    plain = make_local_update(model.apply, LocalProgram(steps=10, lr=0.2,
+                                                        optimizer="sgdm"))
+    prox = make_local_update(model.apply, LocalProgram(steps=10, lr=0.2,
+                                                       optimizer="fedprox",
+                                                       fedprox_mu=10.0))
+    w_plain, _ = plain(params, x, y)
+    w_prox, _ = prox(params, x, y)
+    # strong mu keeps the proximal update closer to the global model
+    assert float(l1_disparity(w_prox, params)) < float(l1_disparity(w_plain, params))
+
+
+# --------------------------------------------------------------------------- #
+# Aggregation / compensation / tiers
+# --------------------------------------------------------------------------- #
+
+
+def test_fedavg_weighted_mean():
+    u1 = {"w": jnp.ones((3,))}
+    u2 = {"w": 3 * jnp.ones((3,))}
+    agg = aggregation.fedavg([u1, u2], [1.0, 3.0])
+    np.testing.assert_allclose(agg["w"], 2.5)
+    agg_eq = aggregation.fedavg([u1, u2])
+    np.testing.assert_allclose(agg_eq["w"], 2.0)
+
+
+def test_staleness_weight_decay():
+    w0 = compensation.staleness_weight(0)
+    w10 = compensation.staleness_weight(10)
+    w100 = compensation.staleness_weight(100)
+    assert w0 > 0.9 and abs(w10 - 0.5) < 1e-6 and w100 < 1e-6
+
+
+def test_first_order_identity_when_global_unchanged():
+    u = small_tree()
+    w = small_tree(seed=2)
+    out = compensation.first_order(u, w, w)
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(u)):
+        np.testing.assert_allclose(a, b)
+
+
+def test_w_pred_linear_extrapolation():
+    h0 = {"w": jnp.zeros(3)}
+    h1 = {"w": jnp.ones(3)}
+    pred = compensation.predict_future_global([h0, h1], tau=3)
+    np.testing.assert_allclose(pred["w"], 4.0)
+
+
+def test_tier_clustering_separates_staleness():
+    staleness = [0, 0, 0, 0, 40, 50]
+    t = tiers.cluster_tiers(staleness, n_tiers=2)
+    assert sorted(map(len, t)) == [2, 4]
+    fast = max(t, key=len)
+    assert all(staleness[i] == 0 for i in fast)
+
+
+def test_tiered_aggregate_shape():
+    ups = [small_tree(i) for i in range(4)]
+    agg = tiers.tiered_aggregate(ups, [0, 0, 10, 10], [1, 1, 1, 1], 2)
+    assert agg["a"].shape == (4, 3)
+
+
+# --------------------------------------------------------------------------- #
+# Sparsify / uniqueness / switching
+# --------------------------------------------------------------------------- #
+
+
+def test_topk_mask_selects_largest():
+    u = {"w": jnp.array([0.1, -5.0, 0.2, 3.0, -0.05])}
+    m = topk_mask(u, 0.4)  # keep top-2
+    np.testing.assert_array_equal(np.asarray(m), [False, True, False, True, False])
+    m_all = topk_mask(u, 1.0)
+    assert bool(m_all.all())
+
+
+def test_warm_start_cache():
+    c = WarmStartCache()
+    assert 3 not in c
+    c.put(3, jnp.ones((2,)), jnp.zeros((2, 4)))
+    assert 3 in c
+    x, y = c.get(3)
+    assert x.shape == (2,)
+    c.drop(3)
+    assert 3 not in c
+
+
+def test_uniqueness_detection():
+    # unstale updates clustered; stale update orthogonal -> unique
+    base = np.zeros(50, np.float32)
+    base[0] = 1.0
+    unstale = []
+    rng = np.random.RandomState(0)
+    for i in range(5):
+        v = base + 0.05 * rng.randn(50).astype(np.float32)
+        unstale.append({"w": jnp.asarray(v)})
+    ortho = np.zeros(50, np.float32)
+    ortho[10] = 1.0
+    unique, info = is_unique({"w": jnp.asarray(ortho)}, unstale)
+    assert unique and info["min_dist"] > info["threshold"]
+    # a clone of the cluster is NOT unique
+    dup, _ = is_unique(unstale[0], unstale[1:])
+    assert not dup
+
+
+def test_switch_monitor_switches_and_decays():
+    mon = SwitchMonitor(metric="l1", decay_fraction=0.1, consecutive_needed=2)
+    good = {"w": jnp.zeros(4)}
+    bad = {"w": jnp.ones(4)}
+    true_w = {"w": jnp.zeros(4)}
+    # E1 (hat vs true) < E2: no switch
+    mon.observe(10, good, bad, true_w)
+    assert not mon.switched and mon.gamma(10) == 1.0
+    # now hat is worse than stale twice -> switch at t=100
+    mon.observe(90, bad, good, true_w)
+    mon.observe(100, bad, good, true_w)
+    assert mon.switched and mon.switched_at == 100
+    assert mon.gamma(100) == 1.0
+    assert 0.0 < mon.gamma(105) < 1.0
+    assert mon.gamma(111) == 0.0

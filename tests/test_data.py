@@ -1,0 +1,94 @@
+"""Data pipeline tests: partitioning, staleness schedules, drift."""
+
+import numpy as np
+import pytest
+
+from repro.data.partition import (client_label_histograms, dirichlet_partition,
+                                  one_class_partition, pad_client_shards)
+from repro.data.staleness import intertwined_schedule, uniform_random_schedule
+from repro.data.synthetic import (make_feature_dataset, make_image_dataset,
+                                  make_timeseries_dataset)
+from repro.data.variant import VariantDataStream
+
+
+def test_image_dataset_shapes_and_determinism():
+    x1, y1 = make_image_dataset(20, n_classes=4, hw=16, seed=3)
+    x2, y2 = make_image_dataset(20, n_classes=4, hw=16, seed=3)
+    assert x1.shape == (80, 16, 16, 1) and y1.shape == (80,)
+    np.testing.assert_array_equal(x1, x2)
+    assert set(np.unique(y1)) == {0, 1, 2, 3}
+
+
+def test_styles_differ():
+    xa, _ = make_image_dataset(10, n_classes=3, hw=16, style=0)
+    xb, _ = make_image_dataset(10, n_classes=3, hw=16, style=1)
+    assert float(np.abs(xa - xb).mean()) > 0.05
+
+
+def test_dirichlet_partition_covers_all_samples():
+    _, y = make_image_dataset(50, n_classes=5, hw=8)
+    parts = dirichlet_partition(y, 10, alpha=0.5, seed=1)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(y)
+    assert len(set(all_idx.tolist())) == len(y)  # exactly once
+
+
+def test_dirichlet_alpha_controls_heterogeneity():
+    _, y = make_image_dataset(100, n_classes=5, hw=8)
+    h_low = client_label_histograms(y, dirichlet_partition(y, 10, 0.05, 1), 5)
+    h_high = client_label_histograms(y, dirichlet_partition(y, 10, 100.0, 1), 5)
+
+    def mean_entropy(h):
+        p = h / np.maximum(h.sum(1, keepdims=True), 1)
+        return float((-np.where(p > 0, p * np.log(p + 1e-12), 0).sum(1)).mean())
+
+    assert mean_entropy(h_low) < mean_entropy(h_high) - 0.3
+
+
+def test_one_class_partition():
+    _, y = make_image_dataset(50, n_classes=5, hw=8)
+    parts = one_class_partition(y, 8, seed=0)
+    for idx in parts:
+        assert len(set(y[idx].tolist())) <= 1
+
+
+def test_pad_client_shards_masks():
+    x, y = make_image_dataset(10, n_classes=2, hw=8)
+    parts = [np.array([0, 1, 2]), np.array([3])]
+    xs, ys, mask = pad_client_shards(x, y, parts, m=4)
+    assert xs.shape == (2, 4, 8, 8, 1)
+    np.testing.assert_array_equal(mask, [[1, 1, 1, 0], [1, 0, 0, 0]])
+
+
+def test_intertwined_schedule_targets_class_holders():
+    hist = np.array([[10, 0], [0, 10], [5, 5], [0, 8]])
+    sched = intertwined_schedule(hist, target_class=1, n_slow=2, tau=7)
+    assert set(sched.slow_clients) == {1, 3}
+    assert sched.tau(1) == 7 and sched.tau(0) == 0
+
+
+def test_uniform_schedule_count():
+    s = uniform_random_schedule(20, 5, 10, seed=0)
+    assert len(s.slow_clients) == 5
+
+
+def test_variant_stream_drifts_with_rate():
+    x, y = make_image_dataset(30, n_classes=3, hw=8, style=0)
+    px, py = make_image_dataset(30, n_classes=3, hw=8, style=1)
+    parts = dirichlet_partition(y, 5, 1.0, 0)
+    xs, ys, mask = pad_client_shards(x, y, parts, m=12)
+    stream = VariantDataStream(xs, ys, mask, px, py, rate=2.0, seed=0)
+    before = stream.xs.copy()
+    n = stream.step()
+    assert n > 0
+    assert float(np.abs(stream.xs - before).sum()) > 0
+    for _ in range(5):
+        stream.step()
+    assert stream.drift_fraction > 0.1
+
+
+def test_feature_and_timeseries_datasets():
+    x, y = make_feature_dataset(20, n_classes=5, n_features=12)
+    assert x.shape == (100, 12)
+    x, y = make_timeseries_dataset(10, n_classes=3, seq=32, channels=4)
+    assert x.shape == (30, 32, 4)

@@ -1,0 +1,51 @@
+"""Launcher tests: dry-run subprocess (512 fabricated devices) + FL driver."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_combo(tmp_path):
+    """The dry-run must lower+compile a full production config on the 16x16
+    mesh inside a fresh process (XLA_FLAGS is set by the module itself)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen1.5-0.5b", "--shape", "decode_32k",
+         "--out-dir", str(tmp_path)],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr
+    arts = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(arts) == 1
+    rec = json.load(open(tmp_path / arts[0]))
+    assert rec["memory"]["peak_per_device"] < 16 * 2**30   # fits v5e HBM
+    assert rec["cost"]["flops"] > 0
+
+
+@pytest.mark.slow
+def test_fl_train_launcher():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--strategy", "ours",
+         "--rounds", "4", "--clients", "6", "--n-per-class", "40",
+         "--gi-iters", "5", "--eval-every", "4"],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr
+    line = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    rec = json.loads(line)
+    assert 0.0 <= rec["final_acc"] <= 1.0
+
+
+@pytest.mark.slow
+def test_serve_launcher():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
+         "--batch", "2", "--prompt-len", "8", "--gen-len", "4"],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "tok/s" in out.stdout

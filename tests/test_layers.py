@@ -1,0 +1,237 @@
+"""Unit tests for model building blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, MoEConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=97, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+
+
+def test_rmsnorm_unit_scale():
+    cfg = tiny_cfg()
+    p = L.init_norm(cfg, 64)
+    x = jax.random.normal(KEY, (2, 8, 64)) * 5.0
+    y = L.norm_fwd(p, cfg, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_layernorm_zero_mean():
+    cfg = tiny_cfg(norm="layernorm")
+    p = L.init_norm(cfg, 64)
+    x = jax.random.normal(KEY, (2, 8, 64)) + 3.0
+    y = L.norm_fwd(p, cfg, x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, atol=1e-2)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------- #
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    pos = jnp.arange(16)[None]
+    cos, sin = L.rope_cos_sin(pos, 32, 10_000.0)
+    x = jax.random.normal(KEY, (1, 16, 2, 32))
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_invariance():
+    """q.k after rope depends only on relative distance."""
+    d = 16
+    q = jax.random.normal(KEY, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+
+    def dot_at(p_q, p_k):
+        cq, sq_ = L.rope_cos_sin(jnp.array([[p_q]]), d, 10_000.0)
+        ck, sk = L.rope_cos_sin(jnp.array([[p_k]]), d, 10_000.0)
+        qr = L.apply_rope(q, cq, sq_)
+        kr = L.apply_rope(k, ck, sk)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+    assert abs(dot_at(3, 1) - dot_at(4, 1)) > 1e-6  # actually differs
+
+
+def test_mrope_text_only_matches_rope():
+    """With all three position components equal, M-RoPE == RoPE."""
+    d = 32
+    pos = jnp.arange(8)[None]
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, 8))
+    c1, s1 = L.rope_cos_sin(pos, d, 10_000.0)
+    # mrope with full-width single section should equal rope
+    c3, s3 = L.mrope_cos_sin(pos3, d, 10_000.0, (16,))
+    np.testing.assert_allclose(c1[0], c3[0], rtol=1e-6)
+    np.testing.assert_allclose(s1[0], s3[0], rtol=1e-6)
+
+
+def test_mrope_sections_select_components():
+    pos3 = jnp.stack([jnp.zeros((1, 4)), jnp.ones((1, 4)),
+                      2 * jnp.ones((1, 4))])
+    c, s = L.mrope_cos_sin(pos3, 12, 10_000.0, (2, 2, 2))
+    # first 2 rotary coords use t=0 -> angle 0 -> cos 1 sin 0
+    np.testing.assert_allclose(c[0, :, :2], 1.0, atol=1e-6)
+    np.testing.assert_allclose(s[0, :, :2], 0.0, atol=1e-6)
+    assert float(jnp.abs(s[0, :, 2:]).sum()) > 0
+
+
+# --------------------------------------------------------------------------- #
+# Chunked attention vs naive reference
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("Sq,Skv,H,KV,window,causal", [
+    (32, 32, 4, 2, None, True),
+    (48, 48, 4, 4, 16, True),
+    (32, 32, 2, 2, None, False),
+    (1, 64, 4, 2, None, True),
+])
+def test_chunked_attention_matches_reference(Sq, Skv, H, KV, window, causal):
+    from repro.kernels.flash_attention.ref import attention_reference
+    D = 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, Sq, H, D))
+    k = jax.random.normal(ks[1], (2, Skv, KV, D))
+    v = jax.random.normal(ks[2], (2, Skv, KV, D))
+    out = L.chunked_attention(q, k, v, causal=causal, window=window,
+                              q_offset=Skv - Sq, chunk=16)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_attention_valid_len_masking():
+    from repro.kernels.gqa_decode.ref import gqa_decode_reference
+    D, S = 16, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, D))
+    k = jax.random.normal(ks[1], (2, S, 2, D))
+    v = jax.random.normal(ks[2], (2, S, 2, D))
+    valid = 40
+    out = L.chunked_attention(q, k, v, causal=True, window=None,
+                              q_offset=valid - 1, kv_valid_len=valid, chunk=16)
+    ref = gqa_decode_reference(q[:, 0].transpose(0, 2, 1).reshape(2, 4, D)
+                               if False else q[:, 0], k, v, valid)
+    np.testing.assert_allclose(out[:, 0], ref, atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# MoE
+# --------------------------------------------------------------------------- #
+
+
+def _moe_dense_reference(p, cfg, x):
+    """All-experts-on-all-tokens reference for the sort-based dispatch."""
+    mc = cfg.moe
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, mc.top_k)
+    gate_vals = gate_vals / gate_vals.sum(-1, keepdims=True)
+    out = jnp.zeros_like(xt)
+    for e in range(mc.n_experts):
+        h = jax.nn.silu(xt @ p["w_gate"][e]) * (xt @ p["w_up"][e])
+        y = h @ p["w_down"][e]
+        w = jnp.sum(jnp.where(expert_ids == e, gate_vals, 0.0), -1)
+        out = out + y * w[:, None]
+    if mc.n_shared:
+        sp = p["shared"]
+        out = out + (jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])) @ sp["w_down"]
+    return out.reshape(B, S, d)
+
+
+def test_moe_matches_dense_reference():
+    cfg = tiny_cfg(family="moe",
+                   moe=MoEConfig(n_experts=4, top_k=2, n_shared=1, d_expert=32))
+    p = L.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 8, 64)) * 0.5
+    # generous capacity so no tokens drop -> must match dense reference
+    out, aux = L.moe_fwd(p, cfg, x, capacity_factor=4.0)
+    ref = _moe_dense_reference(p, cfg, x)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+    assert float(aux) >= 0.0
+
+
+def test_moe_top1_routing():
+    cfg = tiny_cfg(family="moe",
+                   moe=MoEConfig(n_experts=4, top_k=1, n_shared=0, d_expert=32))
+    p = L.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 16, 64)) * 0.5
+    out, _ = L.moe_fwd(p, cfg, x, capacity_factor=4.0)
+    ref = _moe_dense_reference(p, cfg, x)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_drops_dont_nan():
+    cfg = tiny_cfg(family="moe",
+                   moe=MoEConfig(n_experts=2, top_k=2, n_shared=0, d_expert=16))
+    p = L.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 32, 64))
+    out, aux = L.moe_fwd(p, cfg, x, capacity_factor=0.25)  # heavy dropping
+    assert not bool(jnp.isnan(out).any())
+
+
+# --------------------------------------------------------------------------- #
+# RWKV6 / Mamba decode-vs-scan consistency
+# --------------------------------------------------------------------------- #
+
+
+def test_rwkv6_decode_matches_full_scan():
+    cfg = tiny_cfg(family="ssm", block_type="rwkv6", rwkv_head_size=16)
+    p = L.init_rwkv6(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 6, 64)) * 0.5
+    full, _ = L.rwkv6_time_mix(p, cfg, x)
+    state = {"x_prev": jnp.zeros((2, 64)),
+             "S": jnp.zeros((2, 4, 16, 16), jnp.float32)}
+    outs = []
+    for t in range(6):
+        o, state = L.rwkv6_time_mix(p, cfg, x[:, t:t + 1], state)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(full, step, atol=2e-4, rtol=2e-4)
+
+
+def test_mamba_decode_matches_full_scan():
+    cfg = tiny_cfg(family="hybrid", block_type="hybrid", ssm_state=8)
+    p = L.init_mamba(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 6, 64)) * 0.5
+    full, _ = L.mamba_fwd(p, cfg, x)
+    state = {"conv": jnp.zeros((2, 3, 128)),
+             "h": jnp.zeros((2, 128, 8), jnp.float32)}
+    outs = []
+    for t in range(6):
+        o, state = L.mamba_fwd(p, cfg, x[:, t:t + 1], state)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(full, step, atol=2e-4, rtol=2e-4)
+
+
+def test_rwkv6_decay_bounds():
+    """Data-dependent decay w must stay in (0, 1) — the Finch contract."""
+    cfg = tiny_cfg(family="ssm", block_type="rwkv6", rwkv_head_size=16)
+    p = L.init_rwkv6(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 16, 64)) * 3.0
+    xs = L._token_shift(x)
+    ww = x + (xs - x) * p["mu_w"]
+    dd = jnp.tanh(ww @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp((p["w0"] + dd).astype(jnp.float32)))
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0

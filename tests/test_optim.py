@@ -1,0 +1,67 @@
+"""Optimizer unit tests (pure-JAX optim package)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adam, apply_updates, clip_by_global_norm,
+                         fedprox_wrap, global_norm, sgd)
+
+
+def test_sgd_matches_closed_form():
+    opt = sgd(0.1)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -0.5])}
+    s = opt.init(p)
+    u, s = opt.update(g, s, p)
+    p2 = apply_updates(p, u)
+    np.testing.assert_allclose(p2["w"], [0.95, 2.05])
+
+
+def test_sgd_momentum_accumulates():
+    opt = sgd(1.0, momentum=0.5)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    s = opt.init(p)
+    u1, s = opt.update(g, s, p)        # m=1, u=-1
+    u2, s = opt.update(g, s, p)        # m=1.5, u=-1.5
+    np.testing.assert_allclose(u1["w"], -1.0)
+    np.testing.assert_allclose(u2["w"], -1.5)
+
+
+def test_adam_first_step_is_lr_sized():
+    opt = adam(0.01)
+    p = {"w": jnp.array([1.0])}
+    g = {"w": jnp.array([10.0])}
+    s = opt.init(p)
+    u, s = opt.update(g, s, p)
+    np.testing.assert_allclose(u["w"], -0.01, rtol=1e-3)
+
+
+def test_adam_scale_invariance():
+    """After bias correction, update magnitude ~ lr regardless of grad scale."""
+    for scale in (1e-3, 1.0, 1e3):
+        opt = adam(0.01)
+        p = {"w": jnp.array([0.0])}
+        s = opt.init(p)
+        u, s = opt.update({"w": jnp.array([scale])}, s, p)
+        np.testing.assert_allclose(abs(float(u["w"][0])), 0.01, rtol=1e-3)
+
+
+def test_fedprox_zero_at_global():
+    base = sgd(0.1)
+    gp = {"w": jnp.array([1.0])}
+    opt = fedprox_wrap(base, mu=5.0, global_params=gp)
+    s = opt.init(gp)
+    # at w == w_global the proximal term vanishes
+    u, _ = opt.update({"w": jnp.array([0.0])}, s, gp)
+    np.testing.assert_allclose(u["w"], 0.0, atol=1e-7)
+
+
+def test_clip_by_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    np.testing.assert_allclose(float(global_norm(t)), 5.0)
+    clipped, gn = clip_by_global_norm(t, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    same, _ = clip_by_global_norm(t, 10.0)
+    np.testing.assert_allclose(same["a"], t["a"])

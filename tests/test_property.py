@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis) for system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, compensation
+from repro.core.disparity import cosine_distance, l1_disparity, tree_to_vector
+from repro.core.sparsify import topk_mask
+from repro.core.tiers import cluster_tiers
+from repro.data.partition import dirichlet_partition
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+vec = st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+               min_size=4, max_size=32)
+
+
+@given(vec)
+def test_fedavg_idempotent_on_identical_updates(v):
+    u = {"w": jnp.asarray(v, jnp.float32)}
+    agg = aggregation.fedavg([u, u, u])
+    np.testing.assert_allclose(agg["w"], u["w"], atol=1e-6)
+
+
+@given(vec, st.lists(st.floats(0.1, 10), min_size=3, max_size=3))
+def test_fedavg_convex_combination_bounds(v, ws):
+    """FedAvg output is coordinate-wise within [min, max] of the updates."""
+    us = [{"w": jnp.asarray(v, jnp.float32) * s} for s in (0.5, 1.0, 2.0)]
+    agg = aggregation.fedavg(us, ws)
+    stack = np.stack([np.asarray(u["w"]) for u in us])
+    assert np.all(np.asarray(agg["w"]) <= stack.max(0) + 1e-5)
+    assert np.all(np.asarray(agg["w"]) >= stack.min(0) - 1e-5)
+
+
+@given(vec, st.floats(1.1, 100))
+def test_cosine_distance_scale_invariant(v, scale):
+    a = {"w": jnp.asarray(v, jnp.float32) + 0.01}
+    b = {"w": (jnp.asarray(v, jnp.float32) + 0.01) * scale}
+    assert abs(float(cosine_distance(a, b))) < 1e-4
+
+
+@given(st.lists(st.floats(-5, 5, allow_nan=False, width=32),
+                min_size=10, max_size=60),
+       st.floats(0.05, 0.9))
+def test_topk_mask_count_and_dominance(v, frac):
+    u = {"w": jnp.asarray(v, jnp.float32)}
+    m = np.asarray(topk_mask(u, frac))
+    k = max(1, int(round(len(v) * frac)))
+    # ties can push the count above k, never below
+    assert m.sum() >= k
+    # every kept magnitude >= every dropped magnitude
+    mags = np.abs(np.asarray(v, np.float32))
+    if m.sum() < len(v):
+        assert mags[m].min() >= mags[~m].max() - 1e-6
+
+
+@given(st.integers(2, 30), st.floats(0.05, 5.0), st.integers(0, 5))
+def test_dirichlet_partition_is_exact_cover(n_clients, alpha, seed):
+    y = np.repeat(np.arange(4), 25)
+    parts = dirichlet_partition(y, n_clients, alpha, seed)
+    allidx = np.concatenate([p for p in parts if len(p)]) if parts else []
+    assert len(allidx) == len(y)
+    assert len(np.unique(allidx)) == len(y)
+
+
+@given(st.lists(st.integers(0, 100), min_size=2, max_size=20),
+       st.integers(1, 4))
+def test_cluster_tiers_partition_property(staleness, n_tiers):
+    tiers = cluster_tiers(staleness, n_tiers)
+    flat = sorted(i for t in tiers for i in t)
+    assert flat == list(range(len(staleness)))
+
+
+@given(vec)
+def test_first_order_zero_delta_is_identity(v):
+    u = {"w": jnp.asarray(v, jnp.float32)}
+    w = {"w": jnp.asarray(v, jnp.float32) * 0.3}
+    out = compensation.first_order(u, w, w, lam=3.0)
+    np.testing.assert_allclose(out["w"], u["w"], atol=1e-6)
+
+
+@given(st.floats(0, 200))
+def test_staleness_weight_monotone_decreasing(tau):
+    w1 = compensation.staleness_weight(tau)
+    w2 = compensation.staleness_weight(tau + 1)
+    assert 0.0 <= w2 <= w1 <= 1.0
+
+
+@given(vec)
+def test_l1_disparity_triangle_inequality(v):
+    a = {"w": jnp.asarray(v, jnp.float32)}
+    b = {"w": jnp.asarray(v, jnp.float32) * 0.5}
+    c = {"w": jnp.asarray(v, jnp.float32) * -0.25}
+    ab = float(l1_disparity(a, b))
+    bc = float(l1_disparity(b, c))
+    ac = float(l1_disparity(a, c))
+    assert ac <= ab + bc + 1e-5

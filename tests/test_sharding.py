@@ -1,0 +1,99 @@
+"""Sharding-rule tests (no 512-device env needed: specs are mesh-shape
+functions; we build a small host mesh with the same axis names)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import sharding as shd
+from repro.models import transformer as T
+from repro.optim import sgd
+
+
+def host_mesh():
+    # 1x1 mesh with production axis names: divisibility guards all pass
+    # trivially, structure checks still exercise every rule
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def abstract_mesh(shape, names):
+    # spec rules only read mesh.shape/axis_names; AbstractMesh lets tests use
+    # production-sized meshes without 512 fabricated devices
+    return jax.sharding.AbstractMesh(shape, names)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mode", ["tp", "fsdp_tp", "tp2"])
+def test_param_specs_match_tree_structure(arch, mode):
+    cfg = get_config(arch)
+    mesh = host_mesh()
+    shapes = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    specs = shd.param_specs(cfg, mesh, mode, shapes)
+    # same treedef
+    assert (jax.tree_util.tree_structure(shapes)
+            == jax.tree_util.tree_structure(
+                specs, is_leaf=lambda x: isinstance(x, P)))
+    # every spec rank matches its leaf rank
+    flat_s = jax.tree_util.tree_leaves_with_path(shapes)
+    flat_p = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for (kp, leaf), (_, spec) in zip(flat_s, flat_p):
+        assert len(spec) <= len(leaf.shape), (kp, spec, leaf.shape)
+
+
+def test_divisibility_guard():
+    """whisper vocab 51865 is odd -> must not be sharded on model(16)."""
+    cfg = get_config("whisper_tiny")
+    mesh = abstract_mesh((1, 2), ("data", "model"))
+    shapes = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    specs = shd.param_specs(cfg, mesh, "tp", shapes)
+    emb = specs["embed"]
+    assert emb[0] is None  # vocab not divisible by 2? 51865 odd -> unsharded
+    assert emb[1] == "model"  # falls back to d_model sharding
+
+
+def test_state_specs_cover_opt_state():
+    cfg = get_config("qwen3_1_7b")
+    mesh = host_mesh()
+    opt = sgd(0.01, momentum=0.9)
+    specs = shd.state_specs(cfg, mesh, "tp", opt)
+    assert set(specs) == {"params", "opt", "step"}
+    # momentum mirrors params structure
+    assert (jax.tree_util.tree_structure(
+        specs["opt"], is_leaf=lambda x: isinstance(x, P))
+        == jax.tree_util.tree_structure(
+            specs["params"], is_leaf=lambda x: isinstance(x, P)))
+
+
+def test_batch_specs_shard_batch_dim():
+    cfg = get_config("qwen3_1_7b")
+    mesh = abstract_mesh((2, 1), ("data", "model"))
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+    specs = shd.batch_specs(cfg, batch, mesh)
+    assert specs["tokens"] == P(("data",), None)
+
+
+def test_batch_specs_mrope_positions():
+    cfg = get_config("qwen2_vl_7b")
+    mesh = abstract_mesh((2, 1), ("data", "model"))
+    batch = {"positions": jax.ShapeDtypeStruct((3, 8, 64), jnp.int32)}
+    specs = shd.batch_specs(cfg, batch, mesh)
+    assert specs["positions"] == P(None, ("data",), None)
+
+
+def test_cache_specs_decode_vs_long():
+    cfg = get_config("qwen3_1_7b")
+    mesh = abstract_mesh((2, 2), ("data", "model"))
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 8, 1024))
+    specs = shd.cache_specs(cfg, cache, mesh, batch=8)
+    assert specs["k"][1] in ("data", ("data",))   # batch shardable
+    assert specs["k"][2] == "model"            # seq on model
+    cache1 = jax.eval_shape(lambda: T.init_cache(cfg, 1, 1024))
+    specs1 = shd.cache_specs(cfg, cache1, mesh, batch=1)
+    assert specs1["k"][1] is None              # batch=1 replicated
+    assert specs1["k"][2] is not None          # seq sharded over all axes
