@@ -34,6 +34,11 @@ def main():
                     default=["unweighted", "weighted", "ours", "unstale"])
     ap.add_argument("--tau", type=int, default=20)
     ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--gi-engine", choices=["batched", "sequential"],
+                    default="batched",
+                    help="batched = one vmapped while_loop jit over the "
+                         "round's stale cohort; sequential = the per-client "
+                         "seed engine (for A/B timing the same pipeline)")
     ap.add_argument("--out", default="examples/out_fl_end_to_end")
     args = ap.parse_args()
 
@@ -53,6 +58,7 @@ def main():
             strategy=strategy, rounds=args.rounds,
             gi=GIConfig(n_rec=12, iters=25, lr=0.1, keep_fraction=0.05,
                         warm_start=True),
+            batched_gi=(args.gi_engine == "batched"),
             uniqueness_check=True, switching=True, switch_check_every=5,
             eval_every=10, seed=0)
         server = Server(lenet(n_classes=N_CLASSES, in_hw=HW), prog, cfg,
@@ -66,6 +72,7 @@ def main():
             "stale_class_acc": final.get(f"acc_class_{TARGET}"),
             "switched_at": server.monitor.switched_at,
             "gi_rounds": len(server.gi_log),
+            "gi_engine": args.gi_engine,
             "wall_s": round(wall, 1),
             "curve": [(m["round"], m["acc"]) for m in metrics if "acc" in m],
         }

@@ -30,6 +30,12 @@ def vector_to_tree(vec: jax.Array, like: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def tree_stack(trees) -> Any:
+    """Stack a sequence of same-structure pytrees on a new leading axis
+    (the cohort/batch axis the vectorized FL runtime vmaps over)."""
+    return jax.tree_util.tree_map(lambda *a: jnp.stack(a), *trees)
+
+
 def tree_sub(a: Any, b: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)

@@ -19,6 +19,19 @@ with gradient descent on (x', y'). Differences vs classic gradient inversion
   obtains hard labels (§3.4).
 
 The unstale estimate is then ``w_hat_i^t = LocalUpdate(w_global^t; D_rec)``.
+
+Two execution engines:
+
+* ``invert`` — the sequential reference: a Python loop of jitted Adam steps,
+  one client at a time (the seed implementation, kept as the oracle for the
+  batched path's equivalence tests and for benchmarking).
+* ``invert_batch`` — the production engine: the whole optimization is a
+  ``lax.while_loop`` inside ONE jitted call (early stop via the loop
+  predicate, loss history written into a fixed-size buffer), ``vmap``-ed over
+  all unique stale clients delivering in a round. Stacked
+  ``(w_base, w_stale, mask, drec_init)`` pytrees in, stacked ``D_rec`` out —
+  no per-iteration or per-client Python dispatch. Batch sizes are padded to
+  the next power of two so recompiles are O(log B) instead of O(#distinct B).
 """
 
 from __future__ import annotations
@@ -47,6 +60,19 @@ class GIConfig:
     warm_start: bool = True
 
 
+def _pad_leading(tree: Any, pad: int) -> Any:
+    """Pad every leaf's leading (batch) axis by repeating row 0 ``pad`` times."""
+    if pad == 0:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])], axis=0), tree)
+
+
+def _take_leading(tree: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(lambda a: a[:n], tree)
+
+
 class GradientInverter:
     """Builds and runs the jitted GI optimization for a given small model."""
 
@@ -59,6 +85,25 @@ class GradientInverter:
         self.cfg = cfg
         self.local_update = make_local_update(apply_fn, program)
         self._step = jax.jit(self._make_step())
+        # single-compile engines (cached jits; satellite: no per-call re-jit)
+        self._estimate_one = jax.jit(
+            lambda w, x, y: self.local_update(w, x, y)[0])
+        self._estimate_many = jax.jit(jax.vmap(
+            lambda w, x, y: self.local_update(w, x, y)[0],
+            in_axes=(None, 0, 0)))
+        self._init_many = jax.jit(jax.vmap(self.init_drec))
+        # vmapped whole-optimization inversion, one compiled fn per static
+        # max_iters (normally just cfg.iters) — every dynamic per-client
+        # iteration budget <= max_iters reuses the same executable
+        self._invert_many_cache: Dict[int, Callable] = {}
+
+    def _get_invert_many(self, max_iters: int) -> Callable:
+        fn = self._invert_many_cache.get(max_iters)
+        if fn is None:
+            core = partial(self._invert_core, max_iters=max_iters)
+            fn = jax.jit(jax.vmap(core, in_axes=(0, 0, 0, 0, 0)))
+            self._invert_many_cache[max_iters] = fn
+        return fn
 
     # ------------------------------------------------------------------ #
     def init_drec(self, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -96,6 +141,116 @@ class GradientInverter:
         return step
 
     # ------------------------------------------------------------------ #
+    def _invert_core(self, w_global_stale, target_update, mask, drec0,
+                     n_iters, *, max_iters: int):
+        """One client's full GI optimization as a single ``lax.while_loop``.
+
+        ``n_iters`` is a dynamic iteration budget (<= static ``max_iters``);
+        early stopping on ``cfg.tol`` is part of the loop predicate — checked
+        after iterations 0, 10, 20, ... exactly like the sequential seed
+        path, so tol-enabled configs keep the batched==sequential
+        equivalence. The per-iteration loss history is written into a fixed
+        ``(max_iters,)`` buffer (NaN beyond the iterations actually used).
+        vmap lifts the while_loop to run until every lane has stopped.
+        """
+        opt = adam(self.cfg.lr)
+        tol = self.cfg.tol
+
+        def cond(carry):
+            i, _, _, _, loss = carry
+            not_done = i < n_iters
+            if tol:
+                # i iterations completed; the last one had index i-1. Match
+                # the seed's cadence: break only when that index % 10 == 0.
+                at_check = (i > 0) & ((i - 1) % 10 == 0)
+                not_done = not_done & ~(at_check & (loss < tol))
+            return not_done
+
+        def body(carry):
+            i, drec, opt_state, losses, _ = carry
+            loss, grads = jax.value_and_grad(self._gi_loss)(
+                drec, w_global_stale, target_update, mask)
+            updates, opt_state = opt.update(grads, opt_state, drec)
+            drec = apply_updates(drec, updates)
+            losses = losses.at[i].set(loss)
+            return i + 1, drec, opt_state, losses, loss
+
+        carry0 = (jnp.zeros((), jnp.int32), drec0, opt.init(drec0),
+                  jnp.full((max_iters,), jnp.nan, jnp.float32),
+                  jnp.full((), jnp.inf, jnp.float32))
+        used, drec, _, losses, final_loss = jax.lax.while_loop(
+            cond, body, carry0)
+        return drec, losses, final_loss, used
+
+    def invert_batch(
+        self,
+        w_global_stale: Any,
+        w_stale: Any,
+        keys: jax.Array,
+        masks: Optional[jax.Array] = None,
+        inits: Optional[Tuple[jax.Array, jax.Array]] = None,
+        init_flags: Optional[jax.Array] = None,
+        iters: Optional[Any] = None,
+    ) -> Tuple[Tuple[jax.Array, jax.Array], Dict[str, Any]]:
+        """Batched inversion of B stale clients in ONE jitted call.
+
+        Args:
+          w_global_stale / w_stale: pytrees stacked on a leading (B,) axis —
+            each client may come from a *different* base round.
+          keys: (B, 2) PRNG keys for cold-start D_rec initialization.
+          masks: optional (B, n_params) boolean sparsification masks.
+          inits: optional stacked warm-start D_rec ``(x (B, n_rec, ...),
+            y (B, n_rec, C))`` — used where ``init_flags`` is True.
+          init_flags: (B,) bool; False rows fall back to the fresh random init.
+          iters: scalar or (B,) per-client iteration budgets (default
+            ``cfg.iters``). Budgets <= ``cfg.iters`` reuse one compiled
+            executable; a budget above it raises the static loop bound and
+            costs a fresh compile.
+
+        Returns ``((x', y') stacked, info)`` with per-client ``losses``
+        (B, max_iters; NaN past the used prefix), ``final_loss`` and
+        ``iters_used`` arrays.
+        """
+        B = jax.tree_util.tree_leaves(w_stale)[0].shape[0]
+        target = tree_sub(w_stale, w_global_stale)
+
+        fresh = self._init_many(keys)
+        if inits is not None:
+            if init_flags is None:
+                drec0 = inits
+            else:
+                drec0 = jax.tree_util.tree_map(
+                    lambda w, c: jnp.where(
+                        init_flags.reshape((B,) + (1,) * (w.ndim - 1)), w, c),
+                    inits, fresh)
+        else:
+            drec0 = fresh
+
+        max_iters = int(self.cfg.iters)
+        if iters is None:
+            n_iters = jnp.full((B,), max_iters, jnp.int32)
+        else:
+            n_arr = jnp.asarray(iters, jnp.int32)
+            max_iters = max(max_iters, int(jnp.max(n_arr)))
+            n_iters = jnp.broadcast_to(n_arr, (B,))
+
+        # pad the batch to the next power of two: one compile per bucket,
+        # padded lanes get n_iters=0 so the vmapped while_loop masks them out
+        Bp = 1
+        while Bp < B:
+            Bp *= 2
+        pad = Bp - B
+        args = (_pad_leading(w_global_stale, pad), _pad_leading(target, pad),
+                None if masks is None else _pad_leading(masks, pad),
+                _pad_leading(drec0, pad),
+                jnp.concatenate([n_iters, jnp.zeros((pad,), jnp.int32)]))
+        drec, losses, final_loss, used = self._get_invert_many(max_iters)(*args)
+        drec = _take_leading(drec, B)
+        info = {"losses": losses[:B], "final_loss": final_loss[:B],
+                "iters_used": used[:B], "batch": B, "padded_to": Bp}
+        return drec, info
+
+    # ------------------------------------------------------------------ #
     def invert(
         self,
         w_global_stale: Any,
@@ -105,7 +260,12 @@ class GradientInverter:
         init: Optional[Tuple[jax.Array, jax.Array]] = None,
         iters: Optional[int] = None,
     ) -> Tuple[Tuple[jax.Array, jax.Array], Dict[str, Any]]:
-        """Recover D_rec from the stale update. Returns ((x', y'), info)."""
+        """Sequential reference path: recover D_rec from one stale update.
+
+        Kept as the seed implementation (Python-dispatched jitted steps) so
+        the batched engine has an oracle to be tested against; the server's
+        hot path uses ``invert_batch``. Returns ((x', y'), info).
+        """
         target_update = tree_sub(w_stale, w_global_stale)
         drec = init if init is not None else self.init_drec(key)
         opt_state = adam(self.cfg.lr).init(drec)
@@ -129,5 +289,10 @@ class GradientInverter:
                          drec: Tuple[jax.Array, jax.Array]) -> Any:
         """w_hat_i^t = LocalUpdate(w_global^t; D_rec) (paper Fig. 2)."""
         x, y = drec
-        w_hat, _ = jax.jit(self.local_update)(w_global_now, x, y)
-        return w_hat
+        return self._estimate_one(w_global_now, x, y)
+
+    def estimate_unstale_batch(self, w_global_now: Any,
+                               drec: Tuple[jax.Array, jax.Array]) -> Any:
+        """Stacked w_hat for a batch of D_rec (one jitted vmap call)."""
+        x, y = drec
+        return self._estimate_many(w_global_now, x, y)

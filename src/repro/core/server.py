@@ -27,11 +27,11 @@ import numpy as np
 
 from repro.core import aggregation, compensation, tiers
 from repro.core.client import LocalProgram, make_local_update, soft_ce_loss
-from repro.core.disparity import tree_scale, tree_sub
+from repro.core.disparity import tree_scale, tree_stack, tree_sub
 from repro.core.gradient_inversion import GIConfig, GradientInverter
-from repro.core.sparsify import WarmStartCache, topk_mask
+from repro.core.sparsify import WarmStartCache, topk_mask_batch
 from repro.core.switching import SwitchMonitor
-from repro.core.uniqueness import is_unique, uniqueness_threshold
+from repro.core.uniqueness import is_unique_batch
 from repro.data.staleness import StalenessSchedule
 
 STRATEGIES = ("unweighted", "weighted", "first_order", "w_pred",
@@ -48,6 +48,7 @@ class FLConfig:
     n_tiers: int = 2
     gi: GIConfig = dataclasses.field(default_factory=GIConfig)
     uniqueness_check: bool = True
+    batched_gi: bool = True         # one vmapped jit over the stale cohort
     switching: bool = True
     switch_check_every: int = 5
     server_lr: float = 1.0
@@ -79,10 +80,11 @@ class Server:
         self.cmask = client_mask
         self.n_clients = client_x.shape[0]
 
-        self._local_update = jax.jit(make_local_update(model.apply, program))
+        _lu = make_local_update(model.apply, program)
+        self._local_update = jax.jit(_lu)
         self._cohort_update = jax.jit(
-            jax.vmap(lambda p, x, y, m: make_local_update(model.apply, program)(
-                p, x, y, m)[0], in_axes=(None, 0, 0, 0)))
+            jax.vmap(lambda p, x, y, m: _lu(p, x, y, m)[0],
+                     in_axes=(None, 0, 0, 0)))
         self._eval = jax.jit(self._eval_fn)
 
         # "ours" machinery
@@ -90,7 +92,8 @@ class Server:
             model.apply, model.input_shape, model.n_classes, program, cfg.gi)
         self.warm = WarmStartCache()
         self.monitor = SwitchMonitor()
-        self._pending_checks: Dict[int, List[Tuple[int, Any, Any]]] = {}
+        # due_round -> [(scheduled_round, client, w_hat, w_stale), ...]
+        self._pending_checks: Dict[int, List[Tuple[int, int, Any, Any]]] = {}
         self.gi_log: List[Dict[str, Any]] = []
         self.metrics: List[Dict[str, float]] = []
 
@@ -165,10 +168,20 @@ class Server:
         staleness_list = [0.0] * len(fast)
         gi_iters_this_round = 0
 
+        # "ours": the whole stale cohort goes through ONE batched GI call
+        # (uniqueness, masks, warm starts and inversion are all stacked)
+        ours_deltas: Dict[int, Tuple[Any, int]] = {}
+        if cfg.strategy == "ours" and slow_deliveries:
+            ours_deltas = self._ours_update_batch(t, slow_deliveries,
+                                                  fast_updates)
+
         for i, (w_stale, w_base, tau_eff) in slow_deliveries.items():
-            stale_delta = tree_sub(w_stale, w_base)
             count = float(self.cmask[i].sum())
             strat = cfg.strategy
+            # "ours"/"unstale" never read the raw stale delta here ("ours"
+            # computes it once inside the batched pipeline)
+            stale_delta = (None if strat in ("ours", "unstale")
+                           else tree_sub(w_stale, w_base))
 
             if strat == "unstale":
                 x, y, m = self._client_shard(i)
@@ -194,8 +207,7 @@ class Server:
                     stale_delta, self.history, w_base, tau_eff, cfg.fo_lambda))
                 weights.append(count)
             elif strat == "ours":
-                delta, used = self._ours_update(t, i, w_stale, w_base,
-                                                stale_delta, fast_updates)
+                delta, used = ours_deltas[i]
                 gi_iters_this_round += used
                 updates.append(delta)
                 weights.append(count)
@@ -225,59 +237,120 @@ class Server:
         return row
 
     # ------------------------------------------------------------------ #
-    def _ours_update(self, t: int, i: int, w_stale, w_base, stale_delta,
-                     fast_updates) -> Tuple[Any, int]:
-        """The paper's pipeline for one stale delivery. Returns (delta, iters)."""
+    def _ours_update_batch(self, t: int,
+                           deliveries: Dict[int, Tuple[Any, Any, int]],
+                           fast_updates) -> Dict[int, Tuple[Any, int]]:
+        """The paper's pipeline over a round's whole stale cohort.
+
+        Uniqueness detection, top-K masking and warm starts are computed as
+        stacked batch tensors; the inversion itself is ONE jitted
+        vmap+while_loop call (``GradientInverter.invert_batch``) — no
+        per-client or per-iteration Python dispatch. Returns
+        ``{client: (delta, iters_used)}`` aligned with ``deliveries``.
+        ``cfg.batched_gi=False`` keeps the sequential per-client engine
+        (identical pipeline, used for equivalence tests and benchmarks).
+        """
         cfg = self.cfg
+        ids = list(deliveries.keys())
+        stale_deltas = {i: tree_sub(deliveries[i][0], deliveries[i][1])
+                        for i in ids}
+        out: Dict[int, Tuple[Any, int]] = {
+            i: (stale_deltas[i], 0) for i in ids}
+
         gamma = self.monitor.gamma(t) if cfg.switching else 1.0
         if gamma <= 0.0:
-            return stale_delta, 0          # fully switched back to vanilla FL
+            return out                     # fully switched back to vanilla FL
 
+        gi_ids = ids
         if cfg.uniqueness_check and fast_updates:
-            unique, _ = is_unique(stale_delta, fast_updates)
-            if not unique:
-                return stale_delta, 0      # no unique knowledge: aggregate raw
+            unique, _ = is_unique_batch([stale_deltas[i] for i in ids],
+                                        fast_updates)
+            gi_ids = [i for i, u in zip(ids, unique) if u]
+        if not gi_ids:
+            return out                     # no unique knowledge: aggregate raw
 
-        mask = None
+        # stacked inputs: each client may come from a different base round
+        w_stale_stack = tree_stack([deliveries[i][0] for i in gi_ids])
+        w_base_stack = tree_stack([deliveries[i][1] for i in gi_ids])
+
+        masks = None
         if cfg.gi.keep_fraction < 1.0:
-            mask = topk_mask(stale_delta, cfg.gi.keep_fraction)
+            masks = topk_mask_batch([stale_deltas[i] for i in gi_ids],
+                                    cfg.gi.keep_fraction)
 
-        init = self.warm.get(i) if cfg.gi.warm_start else None
-        self.key, sub = jax.random.split(self.key)
-        drec, info = self.inverter.invert(w_base, w_stale, sub,
-                                          mask=mask, init=init)
+        # split per client in delivery order — reproduces the seed engine's
+        # exact PRNG stream, so cold-start inits match the sequential path
+        subs = []
+        for _ in gi_ids:
+            self.key, sub = jax.random.split(self.key)
+            subs.append(sub)
+        keys = jnp.stack(subs)
+
+        if cfg.batched_gi:
+            inits, flags = None, None
+            if cfg.gi.warm_start:
+                xs, ys, warm = self.warm.gather(gi_ids)
+                if xs is not None:
+                    inits, flags = (xs, ys), jnp.asarray(warm)
+            drec, info = self.inverter.invert_batch(
+                w_base_stack, w_stale_stack, keys,
+                masks=masks, inits=inits, init_flags=flags)
+            w_hat_stack = self.inverter.estimate_unstale_batch(
+                self.global_params, drec)
+            iters_used = np.asarray(info["iters_used"])
+            final_loss = np.asarray(info["final_loss"])
+        else:   # sequential reference engine (same inputs, per-client loop)
+            drecs, iters_used, final_loss = [], [], []
+            for b, i in enumerate(gi_ids):
+                init_b = self.warm.get(i) if cfg.gi.warm_start else None
+                mask_b = None if masks is None else masks[b]
+                d, inf = self.inverter.invert(
+                    deliveries[i][1], deliveries[i][0], keys[b],
+                    mask=mask_b, init=init_b)
+                drecs.append(d)
+                iters_used.append(inf["iters_used"])
+                final_loss.append(inf["final_loss"])
+            drec = tree_stack(drecs)
+            w_hat_stack = self.inverter.estimate_unstale_batch(
+                self.global_params, drec)
+
         if cfg.gi.warm_start:
-            self.warm.put(i, *drec)
-        self.gi_log.append({"round": t, "client": i, **{
-            k: v for k, v in info.items() if k != "losses"}})
+            self.warm.put_stacked(gi_ids, *drec)
 
-        w_hat = self.inverter.estimate_unstale(self.global_params, drec)
-        hat_delta = tree_sub(w_hat, self.global_params)
+        for b, i in enumerate(gi_ids):
+            w_hat = jax.tree_util.tree_map(lambda a: a[b], w_hat_stack)
+            w_stale = deliveries[i][0]
+            self.gi_log.append({"round": t, "client": i,
+                                "final_loss": float(final_loss[b]),
+                                "iters_used": int(iters_used[b])})
+            hat_delta = tree_sub(w_hat, self.global_params)
 
-        # schedule the delayed E1/E2 check (observable at t + tau)
-        tau = self.schedule.tau(i)
-        if cfg.switching and t % cfg.switch_check_every == 0:
-            self._pending_checks.setdefault(t + tau, []).append(
-                (t, w_hat, w_stale))
+            # schedule the delayed E1/E2 check (observable at t + tau) —
+            # recording WHICH client it belongs to so the check recomputes
+            # that client's true update, not the first slow client's
+            tau = self.schedule.tau(i)
+            if cfg.switching and t % cfg.switch_check_every == 0:
+                self._pending_checks.setdefault(t + tau, []).append(
+                    (t, i, w_hat, w_stale))
 
-        if gamma < 1.0:
-            hat_delta = jax.tree_util.tree_map(
-                lambda h, s: gamma * h + (1.0 - gamma) * s, hat_delta, stale_delta)
-        return hat_delta, info["iters_used"]
+            if gamma < 1.0:
+                hat_delta = jax.tree_util.tree_map(
+                    lambda h, s: gamma * h + (1.0 - gamma) * s,
+                    hat_delta, stale_deltas[i])
+            out[i] = (hat_delta, int(iters_used[b]))
+        return out
 
     def _run_pending_checks(self, t: int) -> None:
         for due in [k for k in self._pending_checks if k <= t]:
-            for (t0, w_hat, w_stale) in self._pending_checks.pop(due):
+            for (t0, i, w_hat, w_stale) in self._pending_checks.pop(due):
                 # the true unstale update w_i^{t0} arrives now: recompute it
-                # exactly as the slow client computed it at t0
+                # exactly as client i computed it at t0
                 if t0 >= len(self.history):
                     continue
                 w_base = self.history[t0]
-                for i in self.schedule.slow_clients:
-                    x, y, m = self._client_shard(i)
-                    w_true = self._local_update(w_base, x, y, m)[0]
-                    self.monitor.observe(t0, w_hat, w_stale, w_true)
-                    break  # one representative client per check (cost control)
+                x, y, m = self._client_shard(i)
+                w_true = self._local_update(w_base, x, y, m)[0]
+                self.monitor.observe(t0, w_hat, w_stale, w_true)
 
     # ------------------------------------------------------------------ #
     def run(self, rounds: Optional[int] = None) -> List[Dict[str, float]]:

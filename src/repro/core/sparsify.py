@@ -4,27 +4,48 @@
   stale *update* (w_i^{t-tau} - w_global^{t-tau}); only these coordinates
   enter the GI disparity objective. Paper: keeping the top 5% cuts ~80% of GI
   compute with a tiny error increase (Table 4) and is also the privacy
-  mechanism (§3.4, Table 6/7).
+  mechanism (§3.4, Table 6/7). Above ``KERNEL_MIN_SIZE`` coordinates the mask
+  is produced by the ``repro.kernels.sparsify_mask`` Pallas kernel (binary
+  output mode); tiny vectors use the pure-jnp path.
+* ``topk_mask_batch``: the round-level form — stacks every stale client's
+  update vector and emits all masks in one batched kernel launch, matching
+  the vmapped GI engine's (B, n) mask input.
 * ``WarmStartCache``: reuse the previous round's D_rec as the next round's
   initialization when client data is (partially) fixed — another ~43%
-  iteration reduction (Table 5).
+  iteration reduction (Table 5). Storage is a pair of *stacked* host buffers
+  (one row per client slot) so a round's warm starts gather into the
+  (B, n_rec, ...) tensors the batched engine consumes without per-client
+  stacking.
 
 The mask is a *static-size* flat boolean vector (K fixed per round), which on
-TPU keeps all GI shapes static; the fused mask application for large models
-is the ``repro.kernels.sparsify_mask`` Pallas kernel.
+TPU keeps all GI shapes static.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.disparity import tree_to_vector
+from repro.kernels.sparsify_mask import (topk_binary_mask,
+                                         topk_binary_mask_batch)
+
+# below this many coordinates the top_k + compare is cheaper than a kernel
+# launch (and the Pallas interpreter), so stay in pure jnp
+KERNEL_MIN_SIZE = 4096
 
 
-def topk_mask(update: Any, keep_fraction: float) -> jax.Array:
+def _kernel_default(n: int) -> bool:
+    # the TPU kernel lowers on tpu and runs interpreted on cpu; other
+    # backends (gpu) keep the backend-agnostic pure-jnp path
+    return n >= KERNEL_MIN_SIZE and jax.default_backend() in ("cpu", "tpu")
+
+
+def topk_mask(update: Any, keep_fraction: float,
+              use_kernel: Optional[bool] = None) -> jax.Array:
     """Flat boolean mask of the top ``keep_fraction`` |update| coordinates.
 
     ``keep_fraction=1.0`` (sparsification rate 0%) returns all-ones.
@@ -33,10 +54,31 @@ def topk_mask(update: Any, keep_fraction: float) -> jax.Array:
     n = vec.shape[0]
     if keep_fraction >= 1.0:
         return jnp.ones((n,), bool)
+    if use_kernel is None:
+        use_kernel = _kernel_default(n)
+    if use_kernel:
+        return topk_binary_mask(vec, float(keep_fraction))
     k = max(1, int(round(n * keep_fraction)))
     # threshold = k-th largest magnitude
     thresh = jax.lax.top_k(vec, k)[0][-1]
     return vec >= thresh
+
+
+def topk_mask_batch(updates: Sequence[Any], keep_fraction: float,
+                    use_kernel: Optional[bool] = None) -> jax.Array:
+    """(B, n) boolean masks for a batch of update pytrees in one launch."""
+    vecs = jnp.stack([tree_to_vector(u) for u in updates])
+    B, n = vecs.shape
+    if keep_fraction >= 1.0:
+        return jnp.ones((B, n), bool)
+    if use_kernel is None:
+        use_kernel = _kernel_default(n)
+    if use_kernel:
+        return topk_binary_mask_batch(jnp.abs(vecs), float(keep_fraction))
+    k = max(1, int(round(n * keep_fraction)))
+    mags = jnp.abs(vecs)
+    thresh = jax.lax.top_k(mags, k)[0][:, -1:]
+    return mags >= thresh
 
 
 def mask_stats(mask: jax.Array) -> Dict[str, float]:
@@ -45,19 +87,83 @@ def mask_stats(mask: jax.Array) -> Dict[str, float]:
 
 
 class WarmStartCache:
-    """Per-client D_rec cache (host-side; D_rec tensors are small)."""
+    """Per-client D_rec cache backed by stacked host buffers.
+
+    Each client owns one row of a pair of ``(capacity, n_rec, ...)`` numpy
+    buffers; ``gather``/``put_stacked`` move a whole round's batch in one
+    slice so the batched GI engine never loops over clients on the host.
+    D_rec tensors are small, so host residency is cheap.
+    """
 
     def __init__(self):
-        self._store: Dict[int, Tuple[jax.Array, jax.Array]] = {}
+        self._x: Optional[np.ndarray] = None
+        self._y: Optional[np.ndarray] = None
+        self._slot: Dict[int, int] = {}
+        self._free: List[int] = []
 
-    def get(self, client_id: int) -> Optional[Tuple[jax.Array, jax.Array]]:
-        return self._store.get(client_id)
-
-    def put(self, client_id: int, x: jax.Array, y: jax.Array) -> None:
-        self._store[client_id] = (x, y)
-
-    def drop(self, client_id: int) -> None:
-        self._store.pop(client_id, None)
+    def __len__(self) -> int:
+        return len(self._slot)
 
     def __contains__(self, client_id: int) -> bool:
-        return client_id in self._store
+        return client_id in self._slot
+
+    # ------------------------------------------------------------------ #
+    def _ensure_capacity(self, x: np.ndarray, y: np.ndarray) -> None:
+        if self._x is None:
+            cap = 4
+            self._x = np.zeros((cap, *x.shape), x.dtype)
+            self._y = np.zeros((cap, *y.shape), y.dtype)
+            self._free = list(range(cap - 1, -1, -1))
+        elif not self._free:
+            cap = self._x.shape[0]
+            self._x = np.concatenate([self._x, np.zeros_like(self._x)])
+            self._y = np.concatenate([self._y, np.zeros_like(self._y)])
+            self._free = list(range(2 * cap - 1, cap - 1, -1))
+
+    def put(self, client_id: int, x: jax.Array, y: jax.Array) -> None:
+        x = np.asarray(x)
+        y = np.asarray(y)
+        if client_id not in self._slot:
+            self._ensure_capacity(x, y)
+            self._slot[client_id] = self._free.pop()
+        s = self._slot[client_id]
+        self._x[s] = x
+        self._y[s] = y
+
+    def get(self, client_id: int) -> Optional[Tuple[jax.Array, jax.Array]]:
+        s = self._slot.get(client_id)
+        if s is None:
+            return None
+        return jnp.asarray(self._x[s]), jnp.asarray(self._y[s])
+
+    def drop(self, client_id: int) -> None:
+        s = self._slot.pop(client_id, None)
+        if s is not None:
+            self._free.append(s)
+
+    # ------------------------------------------------------------------ #
+    def gather(self, client_ids: Sequence[int]
+               ) -> Tuple[Optional[jax.Array], Optional[jax.Array], np.ndarray]:
+        """Stacked warm starts for a round's batch.
+
+        Returns ``(xs (B, n_rec, ...), ys (B, n_rec, C), warm (B,) bool)``;
+        cold clients get zero rows (callers blend in a fresh init where
+        ``warm`` is False). ``(None, None, warm)`` if nothing is cached yet.
+        """
+        warm = np.array([i in self._slot for i in client_ids], bool)
+        if self._x is None or not warm.any():
+            return None, None, warm
+        rows = np.array([self._slot.get(i, 0) for i in client_ids], np.int64)
+        xs = self._x[rows].copy()
+        ys = self._y[rows].copy()
+        xs[~warm] = 0
+        ys[~warm] = 0
+        return jnp.asarray(xs), jnp.asarray(ys), warm
+
+    def put_stacked(self, client_ids: Sequence[int],
+                    xs: jax.Array, ys: jax.Array) -> None:
+        """Store a round's recovered D_rec batch: row b -> client_ids[b]."""
+        xs = np.asarray(xs)
+        ys = np.asarray(ys)
+        for b, i in enumerate(client_ids):
+            self.put(int(i), xs[b], ys[b])

@@ -6,11 +6,15 @@ client's data is unique iff its cosine distance to every unstale update
 exceeds the adaptive threshold — the mean pairwise cosine distance among the
 unstale updates themselves (the mean adapts to the distance scale drifting
 during training, paper Fig. 9).
+
+``is_unique_batch`` is the round-level form: all stale deliveries are checked
+against the fast cohort with one (B, M) distance matrix instead of B
+separate passes over the unstale set.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -25,6 +29,12 @@ def _pairwise_cosine_distances(vectors: np.ndarray) -> np.ndarray:
     return 1.0 - sim
 
 
+def _normalized_rows(updates: Sequence[Any]) -> np.ndarray:
+    vecs = np.stack([np.asarray(tree_to_vector(u)) for u in updates])
+    norms = np.linalg.norm(vecs, axis=1, keepdims=True)
+    return vecs / np.maximum(norms, 1e-12)
+
+
 def uniqueness_threshold(unstale_updates: List[Any]) -> float:
     """Mean pairwise cosine distance among unstale updates (Eq. 8)."""
     if len(unstale_updates) < 2:
@@ -36,19 +46,32 @@ def uniqueness_threshold(unstale_updates: List[Any]) -> float:
     return float(off.mean())
 
 
+def is_unique_batch(stale_updates: Sequence[Any],
+                    unstale_updates: Sequence[Any],
+                    threshold: float | None = None
+                    ) -> Tuple[np.ndarray, Dict[str, Any]]:
+    """Vectorized Eq. 7-8 over a round's whole stale cohort.
+
+    Returns ``(unique (B,) bool, info)`` where ``info['min_dist']`` is the
+    per-client min cosine distance to the unstale set.
+    """
+    B = len(stale_updates)
+    if not unstale_updates:
+        return (np.ones(B, bool),
+                {"min_dist": np.full(B, np.inf), "threshold": 0.0})
+    thr = (uniqueness_threshold(list(unstale_updates))
+           if threshold is None else threshold)
+    S = _normalized_rows(stale_updates)          # (B, n)
+    U = _normalized_rows(unstale_updates)        # (M, n)
+    dists = 1.0 - S @ U.T                        # (B, M)
+    min_dist = dists.min(axis=1)
+    return min_dist > thr, {"min_dist": min_dist, "threshold": thr}
+
+
 def is_unique(stale_update: Any, unstale_updates: List[Any],
               threshold: float | None = None) -> Tuple[bool, Dict[str, float]]:
     """True if the stale update's min cosine distance to unstale updates
-    exceeds the threshold (Eq. 7-8)."""
-    if not unstale_updates:
-        return True, {"min_dist": float("inf"), "threshold": 0.0}
-    thr = uniqueness_threshold(unstale_updates) if threshold is None else threshold
-    sv = np.asarray(tree_to_vector(stale_update))
-    sv = sv / max(np.linalg.norm(sv), 1e-12)
-    dists = []
-    for u in unstale_updates:
-        uv = np.asarray(tree_to_vector(u))
-        uv = uv / max(np.linalg.norm(uv), 1e-12)
-        dists.append(1.0 - float(sv @ uv))
-    min_dist = float(min(dists))
-    return min_dist > thr, {"min_dist": min_dist, "threshold": thr}
+    exceeds the threshold (Eq. 7-8). Single-client view of the batch check."""
+    unique, info = is_unique_batch([stale_update], unstale_updates, threshold)
+    return bool(unique[0]), {"min_dist": float(info["min_dist"][0]),
+                             "threshold": float(info["threshold"])}

@@ -7,6 +7,18 @@ HBM -> VMEM, compare |u| against the (precomputed) k-th-magnitude threshold,
 and write back the masked tile. One (rows, 128)-shaped VMEM tile per grid
 step keeps lanes full; arithmetic intensity is ~1 op/byte so the kernel is
 bandwidth-bound by construction — fusing compare+select avoids a second pass.
+
+Two output modes share the same streaming structure:
+
+* ``binary=False`` — masked *values* ``where(|u| >= t, u, 0)`` (the original
+  fused application);
+* ``binary=True`` — the 0/1 *mask itself* (float32), which is what the
+  batched GI objective consumes: the server computes one mask per stale
+  client and feeds the stacked (B, n) masks into the vmapped inversion.
+
+``sparsify_mask_batch_pallas`` extends the grid with a leading batch axis and
+reads a per-row threshold, so all B stale clients of a round are masked in a
+single kernel launch.
 """
 
 from __future__ import annotations
@@ -19,27 +31,71 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _mask_kernel(u_ref, t_ref, o_ref):
+def _mask_kernel(u_ref, t_ref, o_ref, *, binary: bool):
     t = t_ref[0, 0]
     u = u_ref[...]
-    o_ref[...] = jnp.where(jnp.abs(u) >= t, u, jnp.zeros_like(u))
+    keep = jnp.abs(u) >= t
+    if binary:
+        o_ref[...] = keep.astype(o_ref.dtype)
+    else:
+        o_ref[...] = jnp.where(keep, u, jnp.zeros_like(u))
 
 
 def sparsify_mask_pallas(u2d: jax.Array, thresh: jax.Array, *,
                          block_rows: int = 256,
+                         binary: bool = False,
                          interpret: bool = False) -> jax.Array:
     """u2d (R, 128) tiled view of the flat update; thresh (1,1) float32."""
     R, lanes = u2d.shape
     br = min(block_rows, R)
     nr = pl.cdiv(R, br)
+    out_dtype = jnp.float32 if binary else u2d.dtype
     return pl.pallas_call(
-        _mask_kernel,
+        functools.partial(_mask_kernel, binary=binary),
         grid=(nr,),
         in_specs=[
             pl.BlockSpec((br, lanes), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nr * br, lanes), u2d.dtype),
+        out_shape=jax.ShapeDtypeStruct((nr * br, lanes), out_dtype),
         interpret=interpret,
     )(u2d, thresh)[:R]
+
+
+def _mask_kernel_batch(u_ref, t_ref, o_ref, *, binary: bool):
+    t = t_ref[0, 0]
+    u = u_ref[0]
+    keep = jnp.abs(u) >= t
+    if binary:
+        o_ref[0] = keep.astype(o_ref.dtype)
+    else:
+        o_ref[0] = jnp.where(keep, u, jnp.zeros_like(u))
+
+
+def sparsify_mask_batch_pallas(u3d: jax.Array, thresh: jax.Array, *,
+                               block_rows: int = 256,
+                               binary: bool = False,
+                               interpret: bool = False) -> jax.Array:
+    """u3d (B, R, 128) stacked tiled updates; thresh (B, 1) per-client.
+
+    Grid is (B, R/br): each step streams one client's tile against that
+    client's threshold — one launch masks the whole round's stale cohort.
+    """
+    B, R, lanes = u3d.shape
+    br = min(block_rows, R)
+    nr = pl.cdiv(R, br)
+    out_dtype = jnp.float32 if binary else u3d.dtype
+    out = pl.pallas_call(
+        functools.partial(_mask_kernel_batch, binary=binary),
+        grid=(B, nr),
+        in_specs=[
+            pl.BlockSpec((1, br, lanes), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, br, lanes), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nr * br, lanes), out_dtype),
+        interpret=interpret,
+    )(u3d, thresh)
+    return out[:, :R]

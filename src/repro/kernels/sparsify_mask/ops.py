@@ -1,4 +1,10 @@
-"""Jit'd wrapper: threshold computation + fused mask application."""
+"""Jit'd wrappers: threshold computation + fused mask application.
+
+``sparsify_mask`` applies the top-K mask to the values (seed API);
+``topk_binary_mask`` / ``topk_binary_mask_batch`` return the boolean mask
+itself via the same Pallas kernel — the form the batched GI engine consumes
+(one stacked (B, n) mask tensor per round, computed in one launch).
+"""
 
 from __future__ import annotations
 
@@ -7,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sparsify_mask.kernel import sparsify_mask_pallas
+from repro.kernels.sparsify_mask.kernel import (sparsify_mask_batch_pallas,
+                                                sparsify_mask_pallas)
 
 LANES = 128
 
@@ -17,6 +24,13 @@ def topk_threshold(u: jax.Array, keep_fraction: float) -> jax.Array:
     n = u.shape[0]
     k = max(1, int(round(n * keep_fraction)))
     return jax.lax.top_k(jnp.abs(u), k)[0][-1]
+
+
+def topk_threshold_batch(u2: jax.Array, keep_fraction: float) -> jax.Array:
+    """Per-row thresholds for a stacked (B, n) batch of flat updates."""
+    n = u2.shape[-1]
+    k = max(1, int(round(n * keep_fraction)))
+    return jax.lax.top_k(jnp.abs(u2), k)[0][..., -1]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -32,3 +46,37 @@ def sparsify_mask(u: jax.Array, thresh: jax.Array,
     t = jnp.asarray(thresh, jnp.float32).reshape(1, 1)
     out = sparsify_mask_pallas(u2d, t, interpret=interpret)
     return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("keep_fraction", "interpret"))
+def topk_binary_mask(u: jax.Array, keep_fraction: float,
+                     interpret: bool | None = None) -> jax.Array:
+    """Boolean top-``keep_fraction`` magnitude mask of a flat vector,
+    computed by the streaming Pallas kernel (binary output mode)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = u.shape[0]
+    thresh = topk_threshold(u, keep_fraction)
+    pad = (-n) % LANES
+    up = jnp.pad(u, (0, pad)) if pad else u
+    u2d = up.reshape(-1, LANES)
+    t = jnp.asarray(thresh, jnp.float32).reshape(1, 1)
+    out = sparsify_mask_pallas(u2d, t, binary=True, interpret=interpret)
+    return out.reshape(-1)[:n] >= 0.5
+
+
+@functools.partial(jax.jit, static_argnames=("keep_fraction", "interpret"))
+def topk_binary_mask_batch(u2: jax.Array, keep_fraction: float,
+                           interpret: bool | None = None) -> jax.Array:
+    """(B, n) boolean masks for a stacked batch of flat updates — one kernel
+    launch with a (B, tiles) grid and per-client SMEM thresholds."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, n = u2.shape
+    thresh = topk_threshold_batch(u2, keep_fraction).astype(jnp.float32)
+    pad = (-n) % LANES
+    up = jnp.pad(u2, ((0, 0), (0, pad))) if pad else u2
+    u3d = up.reshape(B, -1, LANES)
+    out = sparsify_mask_batch_pallas(u3d, thresh.reshape(B, 1), binary=True,
+                                     interpret=interpret)
+    return out.reshape(B, -1)[:, :n] >= 0.5

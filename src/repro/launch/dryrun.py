@@ -222,6 +222,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
         + rec["memory"]["output_bytes"] - rec["memory"]["alias_bytes"])
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):    # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     rec["cost"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

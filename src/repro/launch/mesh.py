@@ -10,22 +10,40 @@ state — the dry-run sets XLA_FLAGS before any jax import to fabricate the
 
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
+
+
+def make_mesh_compat(shape: Sequence[int], axes: Sequence[str]
+                     ) -> jax.sharding.Mesh:
+    """jax.make_mesh across jax versions: ``axis_types`` and
+    ``jax.sharding.AxisType`` only exist in newer releases."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_abstract_mesh(shape: Sequence[int], names: Sequence[str]):
+    """AbstractMesh across jax versions: newer jax takes (shape, names),
+    older takes one tuple of (name, size) pairs."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate 1x1 mesh for CPU smoke runs of the launcher path."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 # v5e hardware constants used by the roofline analysis (benchmarks/roofline).

@@ -1,0 +1,257 @@
+"""Tests for the batched GI engine (vmap + while_loop single-compile path).
+
+Covers the tentpole guarantees:
+* per-client equivalence of ``invert_batch`` against the sequential seed
+  path (``invert``) — including masked objectives, warm starts, mixed base
+  rounds and per-client iteration budgets;
+* the stacked ``WarmStartCache`` round trip feeding the batched call;
+* the pending-check client-identity fix (E1/E2 signals are computed from the
+  scheduled client's data, not the first slow client's);
+* end-to-end: a Server round with the batched engine matches the sequential
+  engine bit-for-bit-ish on the aggregated global model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import LocalProgram, make_local_update
+from repro.core.disparity import tree_stack, tree_sub, tree_to_vector
+from repro.core.gradient_inversion import GIConfig, GradientInverter
+from repro.core.server import FLConfig, Server
+from repro.core.sparsify import WarmStartCache, topk_mask_batch
+from repro.data.partition import (client_label_histograms, dirichlet_partition,
+                                  pad_client_shards)
+from repro.data.staleness import StalenessSchedule, intertwined_schedule
+from repro.data.synthetic import make_image_dataset
+from repro.models.small import mlp3
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def batch_setting():
+    """B=3 stale clients with different data AND different base rounds."""
+    model = mlp3(n_features=8, n_classes=3, hidden=16)
+    program = LocalProgram(steps=3, lr=0.1, momentum=0.5)
+    lu = make_local_update(model.apply, program)
+    w = model.init(KEY)
+    bases, stales = [], []
+    for b in range(3):
+        kx, ky = jax.random.split(jax.random.PRNGKey(10 + b))
+        x = jax.random.normal(kx, (12, 8))
+        y = jax.random.randint(ky, (12,), 0, 3)
+        w_stale, _ = lu(w, x, y)
+        bases.append(w)
+        stales.append(w_stale)
+        # advance the "global" model so client b+1 has a different base round
+        w, _ = lu(w, jax.random.normal(ky, (12, 8)), y)
+    keys = jax.random.split(jax.random.PRNGKey(42), 3)
+    return model, program, bases, stales, keys
+
+
+def _make_inverter(model, program, **cfg_kwargs):
+    cfg = GIConfig(**{"n_rec": 6, "iters": 20, "lr": 0.1, **cfg_kwargs})
+    return GradientInverter(model.apply, model.input_shape, model.n_classes,
+                            program, cfg)
+
+
+def test_batched_matches_sequential_per_client(batch_setting):
+    """Acceptance: one jitted vmap+while_loop call reproduces the seed's
+    sequential per-client D_rec within atol=1e-4."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program)
+    drec_b, info = inv.invert_batch(tree_stack(bases), tree_stack(stales),
+                                    keys)
+    assert int(np.asarray(info["iters_used"]).min()) == 20
+    for b in range(3):
+        drec_s, _ = inv.invert(bases[b], stales[b], keys[b])
+        np.testing.assert_allclose(np.asarray(drec_b[0][b]),
+                                   np.asarray(drec_s[0]), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(drec_b[1][b]),
+                                   np.asarray(drec_s[1]), atol=1e-4)
+        # and the downstream unstale estimates agree too
+        w_hat_b = inv.estimate_unstale_batch(
+            bases[0], drec_b)
+        w_hat_s = inv.estimate_unstale(
+            bases[0], drec_s)
+        np.testing.assert_allclose(
+            np.asarray(tree_to_vector(
+                jax.tree_util.tree_map(lambda a: a[b], w_hat_b))),
+            np.asarray(tree_to_vector(w_hat_s)), atol=1e-4)
+
+
+def test_batched_matches_sequential_masked(batch_setting):
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program, keep_fraction=0.1)
+    deltas = [tree_sub(s, b) for s, b in zip(stales, bases)]
+    masks = topk_mask_batch(deltas, 0.1)
+    drec_b, _ = inv.invert_batch(tree_stack(bases), tree_stack(stales),
+                                 keys, masks=masks)
+    for b in range(3):
+        drec_s, _ = inv.invert(bases[b], stales[b], keys[b], mask=masks[b])
+        np.testing.assert_allclose(np.asarray(drec_b[0][b]),
+                                   np.asarray(drec_s[0]), atol=1e-4)
+
+
+def test_batched_per_client_iteration_budgets(batch_setting):
+    """Dynamic per-client budgets share ONE compiled executable; lanes stop
+    at their own n_iters and losses are NaN beyond the used prefix."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program)
+    budgets = jnp.array([5, 20, 11], jnp.int32)
+    drec_b, info = inv.invert_batch(tree_stack(bases), tree_stack(stales),
+                                    keys, iters=budgets)
+    np.testing.assert_array_equal(np.asarray(info["iters_used"]), [5, 20, 11])
+    losses = np.asarray(info["losses"])
+    assert np.isfinite(losses[0, :5]).all() and np.isnan(losses[0, 5:]).all()
+    drec_s, _ = inv.invert(bases[2], stales[2], keys[2], iters=11)
+    np.testing.assert_allclose(np.asarray(drec_b[0][2]),
+                               np.asarray(drec_s[0]), atol=1e-4)
+
+
+def test_batched_early_stop_via_loop_predicate(batch_setting):
+    """tol > 0 turns into a while_loop predicate: lanes reaching the
+    tolerance use fewer iterations."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program, iters=60, tol=1e8)
+    # absurd tolerance: every lane should stop after the first iteration
+    _, info = inv.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    np.testing.assert_array_equal(np.asarray(info["iters_used"]), [1, 1, 1])
+
+
+def test_batched_early_stop_matches_sequential_cadence(batch_setting):
+    """The loop predicate checks tol on the seed's every-10th-iteration
+    cadence, so tol-enabled configs keep batched == sequential (iteration
+    counts AND recovered D_rec)."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program, iters=40, tol=5e-3)
+    drec_b, info = inv.invert_batch(tree_stack(bases), tree_stack(stales),
+                                    keys)
+    used = np.asarray(info["iters_used"])
+    for b in range(3):
+        drec_s, info_s = inv.invert(bases[b], stales[b], keys[b])
+        assert info_s["iters_used"] == int(used[b])
+        np.testing.assert_allclose(np.asarray(drec_b[0][b]),
+                                   np.asarray(drec_s[0]), atol=1e-4)
+
+
+def test_batched_warm_start_round_trip(batch_setting):
+    """Stacked WarmStartCache -> invert_batch -> put_stacked round trip:
+    warm lanes start from the cached D_rec, cold lanes from the fresh init."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program, iters=8)
+    cache = WarmStartCache()
+    # seed the cache for clients 0 and 2 only
+    drec0, _ = inv.invert(bases[0], stales[0], keys[0])
+    drec2, _ = inv.invert(bases[2], stales[2], keys[2])
+    cache.put(100, *drec0)
+    cache.put(102, *drec2)
+    xs, ys, warm = cache.gather([100, 101, 102])
+    np.testing.assert_array_equal(warm, [True, False, True])
+    np.testing.assert_allclose(np.asarray(xs[0]), np.asarray(drec0[0]))
+    np.testing.assert_allclose(np.asarray(ys[2]), np.asarray(drec2[1]))
+
+    drec_b, _ = inv.invert_batch(tree_stack(bases), tree_stack(stales),
+                                 keys, inits=(xs, ys),
+                                 init_flags=jnp.asarray(warm))
+    # warm lane == sequential continuation from the cached init
+    warm_s, _ = inv.invert(bases[0], stales[0], keys[0], init=drec0, iters=8)
+    np.testing.assert_allclose(np.asarray(drec_b[0][0]),
+                               np.asarray(warm_s[0]), atol=1e-4)
+    # cold lane == sequential cold start from the same key
+    cold_s, _ = inv.invert(bases[1], stales[1], keys[1], iters=8)
+    np.testing.assert_allclose(np.asarray(drec_b[0][1]),
+                               np.asarray(cold_s[0]), atol=1e-4)
+    # store the batch back; every client is now warm
+    cache.put_stacked([100, 101, 102], *drec_b)
+    assert all(i in cache for i in (100, 101, 102))
+    x1, _ = cache.get(101)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(drec_b[0][1]))
+
+
+# --------------------------------------------------------------------------- #
+# Server integration
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def tiny_fl():
+    n_classes, hw = 3, 8
+    x, y = make_image_dataset(60, n_classes=n_classes, hw=hw, seed=0)
+    tx, ty = make_image_dataset(15, n_classes=n_classes, hw=hw, seed=9)
+    idx = dirichlet_partition(y, 8, alpha=0.5, seed=0)
+    cx, cy, cm = pad_client_shards(x, y, idx, m=12)
+    hist = client_label_histograms(y, idx, n_classes)
+    return n_classes, hw, cx, cy, cm, hist, tx, ty
+
+
+def _tiny_server(tiny_fl, tau=2, rounds=6, batched=True, seed=0,
+                 switch_every=1):
+    from repro.models.small import lenet
+    n_classes, hw, cx, cy, cm, hist, tx, ty = tiny_fl
+    sched = intertwined_schedule(hist, target_class=1, n_slow=2, tau=tau)
+    prog = LocalProgram(steps=3, lr=0.1, momentum=0.5)
+    cfg = FLConfig(strategy="ours", rounds=rounds,
+                   gi=GIConfig(n_rec=6, iters=6, lr=0.1, keep_fraction=0.2),
+                   batched_gi=batched, eval_every=rounds,
+                   uniqueness_check=False,  # force GI on every delivery
+                   switch_check_every=switch_every, seed=seed)
+    return Server(lenet(n_classes=n_classes, in_hw=hw), prog, cfg,
+                  cx, cy, cm, sched, tx, ty)
+
+
+@pytest.mark.slow
+def test_server_batched_equals_sequential_engine(tiny_fl):
+    """Same seed, same rounds: the batched server path and the sequential
+    fallback aggregate to the same global model."""
+    srv_b = _tiny_server(tiny_fl, batched=True)
+    srv_s = _tiny_server(tiny_fl, batched=False)
+    srv_b.run()
+    srv_s.run()
+    vb = np.asarray(tree_to_vector(srv_b.global_params))
+    vs = np.asarray(tree_to_vector(srv_s.global_params))
+    np.testing.assert_allclose(vb, vs, atol=1e-4)
+    assert len(srv_b.gi_log) == len(srv_s.gi_log) > 0
+
+
+def test_pending_checks_use_scheduled_clients_data(tiny_fl):
+    """Regression for the seed bug: pending E1/E2 checks always recomputed
+    w_true from the FIRST slow client. Two checks scheduled for different
+    clients must observe different true updates."""
+    srv = _tiny_server(tiny_fl, tau=2, rounds=3)
+    srv.run()  # builds history; also exercises the real scheduling path
+
+    # the live scheduling path stores (t, client, w_hat, w_stale) tuples
+    live = ([c for lst in srv._pending_checks.values() for c in lst]
+            + [(h["t"], None, None, None) for h in srv.monitor.history])
+    assert live, "no E1/E2 checks were scheduled or observed"
+    for (t0, i, _, _) in live:
+        assert isinstance(t0, int)
+        if i is not None:
+            assert i in srv.schedule.slow_clients
+
+    slow = srv.schedule.slow_clients
+    assert len(slow) >= 2
+    i1, i2 = slow[0], slow[1]
+    w_hat = srv.global_params
+    w_stale = srv.history[0]
+    srv.monitor.history.clear()
+    srv._pending_checks = {0: [(0, i1, w_hat, w_stale),
+                               (0, i2, w_hat, w_stale)]}
+    srv._run_pending_checks(t=5)
+    assert len(srv.monitor.history) == 2
+    e1_a, e1_b = (h["E1"] for h in srv.monitor.history)
+    # identical (w_hat, w_stale) pairs but different clients: the observed
+    # disparities must differ because w_true differs per client. Under the
+    # old bug both checks used slow_clients[0]'s data and were equal.
+    assert abs(e1_a - e1_b) > 1e-9
+
+    # and the fix recomputes exactly client i's true update
+    x, y, m = srv._client_shard(i2)
+    w_true = srv._local_update(srv.history[0], x, y, m)[0]
+    from repro.core.disparity import cosine_distance
+    expect = float(cosine_distance(w_hat, w_true))
+    np.testing.assert_allclose(srv.monitor.history[1]["E1"], expect,
+                               rtol=1e-6)

@@ -58,6 +58,7 @@ def test_embedding_gi_reduces_loss(lm_setting):
     assert info["losses"][-1] < info["losses"][0] * 0.9, info["losses"]
 
 
+@pytest.mark.slow
 def test_embedding_gi_estimate_beats_stale(lm_setting):
     program, w0, w_stale, client_update = lm_setting
     # strong drift: many stale rounds on disjoint data so the stale update

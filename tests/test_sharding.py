@@ -9,6 +9,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch import sharding as shd
+from repro.launch.mesh import make_abstract_mesh, make_mesh_compat
 from repro.models import transformer as T
 from repro.optim import sgd
 
@@ -16,14 +17,13 @@ from repro.optim import sgd
 def host_mesh():
     # 1x1 mesh with production axis names: divisibility guards all pass
     # trivially, structure checks still exercise every rule
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def abstract_mesh(shape, names):
     # spec rules only read mesh.shape/axis_names; AbstractMesh lets tests use
     # production-sized meshes without 512 fabricated devices
-    return jax.sharding.AbstractMesh(shape, names)
+    return make_abstract_mesh(shape, names)
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

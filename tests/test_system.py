@@ -33,7 +33,10 @@ def fl_data():
     return cx, cy, cm, hist, tx, ty
 
 
-def run_strategy(fl_data, strategy, rounds=30, tau=10, gi_iters=30):
+def run_strategy(fl_data, strategy, rounds=30, tau=20, gi_iters=30):
+    # tau=20 (paper: large staleness) makes the intertwined-heterogeneity
+    # phenomenon robust: unweighted demonstrably loses the stale class
+    # (acc_class ~0.0) instead of riding single-test-image sampling noise
     cx, cy, cm, hist, tx, ty = fl_data
     sched = intertwined_schedule(hist, target_class=TARGET, n_slow=3, tau=tau)
     prog = LocalProgram(steps=5, lr=0.1, momentum=0.5)
@@ -72,7 +75,7 @@ def test_all_strategies_run_without_error(fl_data):
 
 @pytest.mark.slow
 def test_gi_runs_and_logs(fl_data):
-    final, srv = run_strategy(fl_data, "ours", rounds=14, gi_iters=10)
+    final, srv = run_strategy(fl_data, "ours", rounds=14, tau=5, gi_iters=10)
     assert len(srv.gi_log) > 0
     assert all(rec["iters_used"] > 0 for rec in srv.gi_log)
 
