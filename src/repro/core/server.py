@@ -19,7 +19,7 @@ all unique stale clients. At production scale the same cohort axis is what
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,16 +121,22 @@ class Server:
         return (jnp.asarray(self.cx[i]), jnp.asarray(self.cy[i]),
                 jnp.asarray(self.cmask[i]))
 
-    def _stale_updates(self, t: int) -> Dict[int, Tuple[Any, Any, int]]:
-        """For each slow client delivering this round: (w_stale, w_base, tau_eff).
-        The delivered update was computed tau rounds ago from history[t-tau]."""
-        out = {}
+    def compute_deliveries(self, t: int, pairs: Sequence[Tuple[int, int]]
+                           ) -> Dict[int, Tuple[Any, Any, int]]:
+        """Materialize stale deliveries ``{client: (w_stale, w_base, tau_eff)}``.
+
+        ``pairs`` is ``[(client, base_round)]`` in delivery order: each update
+        was computed from ``history[base_round]`` and arrives now (round
+        ``t``), so its realized staleness is ``t - base_round``. Clients
+        sharing a base round are batched through one vmapped LocalUpdate.
+        Callers decide WHO delivers — ``round`` derives it from the static
+        schedule, the event-driven simulator (``repro.sim.bridge``) from
+        realized arrival times.
+        """
+        out: Dict[int, Tuple[Any, Any, int]] = {}
         groups: Dict[int, List[int]] = {}
-        for i in self.schedule.slow_clients:
-            tau = self.schedule.tau(i)
-            if t < tau:       # nothing delivered yet (sync-FL skip)
-                continue
-            groups.setdefault(self._base_round(t, tau), []).append(i)
+        for i, base_t in pairs:
+            groups.setdefault(base_t, []).append(i)
         for base_t, members in groups.items():
             w_base = self.history[base_t]
             xs = jnp.stack([self.cx[i] for i in members])
@@ -144,24 +150,48 @@ class Server:
 
     # ------------------------------------------------------------------ #
     def round(self, t: int) -> Dict[str, float]:
+        """One round-synchronous step: the static schedule decides the cohort
+        (all fast clients fresh; every slow client whose first update has
+        arrived delivers one computed tau rounds ago)."""
+        pairs = [(i, self._base_round(t, self.schedule.tau(i)))
+                 for i in self.schedule.slow_clients
+                 if t >= self.schedule.tau(i)]     # sync-FL skip before tau
+        return self.step(t, self.schedule.fast_clients, pairs)
+
+    def step(self, t: int, fresh_ids: Sequence[int],
+             stale_pairs: Sequence[Tuple[int, int]],
+             eval_now: Optional[bool] = None) -> Dict[str, float]:
+        """One aggregation with an externally-determined cohort.
+
+        ``fresh_ids`` train on the CURRENT global model (version ``t``, i.e.
+        ``history[t]``); ``stale_pairs`` = [(client, base_round)] deliver
+        updates computed from older versions with realized staleness
+        ``t - base_round``. The event-driven simulator calls this directly —
+        ``t`` is then the aggregation/version counter, not wall-clock time.
+        Appends one entry to ``history`` (version ``t+1``) even when the
+        cohort is empty, so version bookkeeping stays aligned.
+        """
         cfg = self.cfg
         if self.variant is not None:
             self.variant.step()
             self.cx = self.variant.xs
 
-        fast = self.schedule.fast_clients
-        slow_deliveries = self._stale_updates(t)
+        fast = list(fresh_ids)
+        slow_deliveries = self.compute_deliveries(t, stale_pairs)
 
         # --- fast clients: fresh updates from the current global model
-        xs = jnp.stack([self.cx[i] for i in fast])
-        ys = jnp.stack([self.cy[i] for i in fast])
-        ms = jnp.stack([self.cmask[i] for i in fast])
-        w_fast = self._cohort_update(self.global_params, xs, ys, ms)
-        fast_updates = [
-            tree_sub(jax.tree_util.tree_map(lambda a: a[j], w_fast),
-                     self.global_params)
-            for j in range(len(fast))]
-        fast_counts = [float(self.cmask[i].sum()) for i in fast]
+        if fast:
+            xs = jnp.stack([self.cx[i] for i in fast])
+            ys = jnp.stack([self.cy[i] for i in fast])
+            ms = jnp.stack([self.cmask[i] for i in fast])
+            w_fast = self._cohort_update(self.global_params, xs, ys, ms)
+            fast_updates = [
+                tree_sub(jax.tree_util.tree_map(lambda a: a[j], w_fast),
+                         self.global_params)
+                for j in range(len(fast))]
+            fast_counts = [float(self.cmask[i].sum()) for i in fast]
+        else:
+            fast_updates, fast_counts = [], []
 
         updates = list(fast_updates)
         weights = list(fast_counts)
@@ -213,14 +243,16 @@ class Server:
                 weights.append(count)
             staleness_list.append(float(tau_eff))
 
-        if cfg.strategy == "asyn_tiers" and slow_deliveries:
-            agg = tiers.tiered_aggregate(updates, staleness_list, weights,
-                                         cfg.n_tiers)
-        else:
-            agg = aggregation.fedavg(updates, weights)
-
-        self.global_params = aggregation.apply_update(
-            self.global_params, agg, cfg.server_lr)
+        if updates:
+            if cfg.strategy == "asyn_tiers" and slow_deliveries:
+                # tiering runs on the cohort's *realized* staleness — under
+                # the simulator these are observed delays, not the schedule
+                agg = tiers.tiered_aggregate(updates, staleness_list, weights,
+                                             cfg.n_tiers)
+            else:
+                agg = aggregation.fedavg(updates, weights)
+            self.global_params = aggregation.apply_update(
+                self.global_params, agg, cfg.server_lr)
         self.history.append(self.global_params)
 
         # --- switching monitor: observe delayed arrivals of true updates
@@ -228,7 +260,9 @@ class Server:
             self._run_pending_checks(t)
 
         row: Dict[str, float] = {"round": t, "gi_iters": gi_iters_this_round}
-        if t % cfg.eval_every == 0:
+        if eval_now is None:
+            eval_now = (t % cfg.eval_every == 0)
+        if eval_now:
             acc, per_class = self.evaluate()
             row["acc"] = acc
             for c, a in enumerate(per_class):
@@ -327,8 +361,10 @@ class Server:
 
             # schedule the delayed E1/E2 check (observable at t + tau) —
             # recording WHICH client it belongs to so the check recomputes
-            # that client's true update, not the first slow client's
-            tau = self.schedule.tau(i)
+            # that client's true update, not the first slow client's. tau is
+            # the *realized* staleness of this delivery (== schedule.tau in
+            # the round-synchronous path, observed delay under the simulator)
+            tau = deliveries[i][2]
             if cfg.switching and t % cfg.switch_check_every == 0:
                 self._pending_checks.setdefault(t + tau, []).append(
                     (t, i, w_hat, w_stale))

@@ -16,14 +16,24 @@ from repro.core.aggregation import fedavg
 
 def cluster_tiers(staleness: Sequence[float], n_tiers: int = 2) -> List[List[int]]:
     """Greedy 1-D clustering of clients by staleness into ``n_tiers`` groups
-    (threshold at the largest gaps, FedAT-style)."""
-    idx = np.argsort(staleness)
+    (threshold at the largest gaps, FedAT-style).
+
+    Deterministic on every platform: sorts are stable, tied gaps resolve to
+    the earliest position, and cuts are only placed at strictly positive gaps
+    — so clients with equal staleness always land in the same tier and
+    ``n_tiers`` greater than the number of distinct staleness levels yields
+    one tier per level. Works on *observed* (realized) staleness just as well
+    as on a static schedule; the simulator feeds it per-arrival realized taus.
+    """
+    idx = np.argsort(staleness, kind="stable")
     taus = np.asarray(staleness, dtype=np.float64)[idx]
     if len(set(taus.tolist())) <= 1 or n_tiers <= 1:
         return [list(map(int, idx))]
     gaps = np.diff(taus)
-    cut_pos = np.argsort(gaps)[::-1][: n_tiers - 1]
-    cut_pos = np.sort(cut_pos)
+    positive = np.nonzero(gaps > 0)[0]
+    # largest gaps first; -gaps + stable sort => ties pick the earliest cut
+    order = positive[np.argsort(-gaps[positive], kind="stable")]
+    cut_pos = np.sort(order[: n_tiers - 1])
     tiers, start = [], 0
     for c in cut_pos:
         tiers.append([int(i) for i in idx[start:c + 1]])

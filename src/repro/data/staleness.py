@@ -4,14 +4,29 @@ To *intertwine* device heterogeneity with data heterogeneity, a target class
 is selected and the ``n_slow`` clients holding the most samples of that class
 get staleness tau (their updates arrive tau rounds late). Everyone else is a
 normal synchronous client.
+
+Two staleness views coexist:
+
+* **Scheduled** — ``intertwined_schedule`` / ``uniform_random_schedule``
+  assign per-client taus a priori; the round-synchronous ``Server`` replays
+  them exactly.
+* **Observed** — the event-driven simulator (``repro.sim``) realizes delays
+  from stochastic device models; ``observed_schedule`` folds the realized
+  per-arrival staleness back into a ``StalenessSchedule``-compatible view so
+  schedule-consuming code (tiering, analysis, re-runs) works on what actually
+  happened instead of what was planned.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Callable, List, Mapping, Sequence, Union
 
 import numpy as np
+
+# heterogeneous tau spec: one scalar for every slow client, an explicit
+# per-slow-client array, or a sampler called as sampler(n_slow) -> array
+TauSpec = Union[int, Sequence[int], np.ndarray, Callable[[int], Sequence[int]]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,22 +44,82 @@ class StalenessSchedule:
     def fast_clients(self) -> List[int]:
         return [int(i) for i in np.where(self.staleness == 0)[0]]
 
+    @property
+    def max_tau(self) -> int:
+        return int(self.staleness.max(initial=0))
+
+
+def _resolve_taus(tau: TauSpec, n_slow: int) -> np.ndarray:
+    """Materialize a TauSpec into an (n_slow,) int array (>=1 each)."""
+    if callable(tau):
+        tau = tau(n_slow)
+    taus = np.asarray(tau, dtype=np.int64)
+    if taus.ndim == 0:
+        taus = np.full(n_slow, int(taus), np.int64)
+    if taus.shape != (n_slow,):
+        raise ValueError(
+            f"tau spec must be a scalar, an (n_slow,)={n_slow} array, or a "
+            f"sampler returning one; got shape {taus.shape}")
+    if (taus < 1).any():
+        raise ValueError(f"slow-client taus must be >= 1, got {taus}")
+    return taus
+
+
+def top_holders(label_histograms: np.ndarray, target_class: int,
+                n_slow: int) -> np.ndarray:
+    """The ``n_slow`` clients holding the most ``target_class`` samples, in
+    rank order. Stable sort: tied holders resolve identically on every
+    platform. The single source of truth for the data/device coupling —
+    both the static schedule and the simulator's device fleets
+    (``repro.sim.devices.intertwined_fleet``) select through here, so they
+    always pick the same clients."""
+    counts = label_histograms[:, target_class]
+    return np.argsort(-counts, kind="stable")[:n_slow]
+
 
 def intertwined_schedule(label_histograms: np.ndarray, target_class: int,
-                         n_slow: int, tau: int) -> StalenessSchedule:
-    """Top-``n_slow`` holders of ``target_class`` become stale by ``tau``."""
-    counts = label_histograms[:, target_class]
-    slow = np.argsort(-counts)[:n_slow]
+                         n_slow: int, tau: TauSpec) -> StalenessSchedule:
+    """Top-``n_slow`` holders of ``target_class`` become stale.
+
+    ``tau`` may be a scalar (every slow client gets it — the original
+    signature), an ``(n_slow,)`` array assigned in rank order (heaviest
+    holder of the target class gets ``tau[0]``), or a sampler called as
+    ``tau(n_slow)`` returning such an array.
+    """
+    slow = top_holders(label_histograms, target_class, n_slow)
+    taus = _resolve_taus(tau, len(slow))
     st = np.zeros(label_histograms.shape[0], np.int64)
-    st[slow] = tau
+    st[slow] = taus
     return StalenessSchedule(st)
 
 
-def uniform_random_schedule(n_clients: int, n_slow: int, tau: int,
+def uniform_random_schedule(n_clients: int, n_slow: int, tau: TauSpec,
                             seed: int = 0) -> StalenessSchedule:
     """Staleness NOT intertwined with data (control condition)."""
     rng = np.random.RandomState(seed)
     slow = rng.choice(n_clients, n_slow, replace=False)
     st = np.zeros(n_clients, np.int64)
-    st[slow] = tau
+    st[slow] = _resolve_taus(tau, n_slow)
+    return StalenessSchedule(st)
+
+
+def observed_schedule(n_clients: int,
+                      observations: Mapping[int, Sequence[float]],
+                      reducer: str = "mean") -> StalenessSchedule:
+    """A ``StalenessSchedule`` view of *realized* delays.
+
+    ``observations`` maps client -> list of realized per-arrival staleness
+    (in model versions), e.g. ``SimEngine.realized`` after a simulation.
+    ``reducer`` folds each client's list to one tau: ``mean`` (rounded),
+    ``max``, or ``last``. Clients with no arrivals get tau=0.
+    """
+    fold = {"mean": lambda v: int(round(float(np.mean(v)))),
+            "max": lambda v: int(np.max(v)),
+            "last": lambda v: int(v[-1])}
+    if reducer not in fold:
+        raise ValueError(f"reducer must be one of {sorted(fold)}: {reducer}")
+    st = np.zeros(n_clients, np.int64)
+    for client, taus in observations.items():
+        if len(taus):
+            st[int(client)] = fold[reducer](list(taus))
     return StalenessSchedule(st)

@@ -1,0 +1,24 @@
+"""Event-driven asynchronous FL simulation (see docs/async_simulator.md).
+
+Layers: ``engine`` (virtual-clock event queue) · ``devices`` (stochastic
+latency/dropout models) · ``policies`` (aggregation triggers) · ``bridge``
+(adapter into ``repro.core.server.Server``) · ``scenarios`` (named,
+seed-reproducible workloads; CLI via ``python -m repro.sim``).
+"""
+
+from repro.sim.bridge import RecordingAggregator, ServerBridge
+from repro.sim.devices import (DeviceFleet, DeviceProfile, LatencyDist,
+                               fleet_from_schedule, homogeneous_fleet,
+                               intertwined_fleet)
+from repro.sim.engine import Arrival, SimEngine
+from repro.sim.policies import (FedBuffK, PureAsync, SemiSyncDeadline,
+                                TriggerPolicy)
+from repro.sim.scenarios import SimRun, build, describe, names, register
+
+__all__ = [
+    "Arrival", "DeviceFleet", "DeviceProfile", "FedBuffK", "LatencyDist",
+    "PureAsync", "RecordingAggregator", "SemiSyncDeadline", "ServerBridge",
+    "SimEngine", "SimRun", "TriggerPolicy", "build", "describe",
+    "fleet_from_schedule", "homogeneous_fleet", "intertwined_fleet", "names",
+    "register",
+]

@@ -1,0 +1,73 @@
+"""Adapter between the event engine and the FL server strategies.
+
+The engine is model-agnostic: it hands an *aggregator* a cohort of
+``(fresh_ids, stale_pairs)`` per aggregation event. ``ServerBridge`` routes
+those cohorts into an existing ``repro.core.server.Server`` via its ``step``
+API, so every strategy the round-synchronous harness supports — including
+the batched-GI "ours" path, whose pow2-bucketed compiles absorb the
+variable-size stale cohorts aggregation events produce — runs unmodified
+under arbitrary arrival processes. Engine versions and ``Server.history``
+indices stay aligned by construction: version ``v`` is ``history[v]``.
+
+``RecordingAggregator`` is the null model: it records cohorts and counts,
+for engine unit tests and events/sec throughput benchmarks where spinning
+up jax would drown the measurement.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+from repro.core.server import Server
+
+
+class RecordingAggregator:
+    """No-op aggregator: remembers every cohort, evaluates to 0."""
+
+    def __init__(self):
+        self.cohorts: List[Dict[str, Any]] = []
+
+    def aggregate(self, version: int, fresh_ids: Sequence[int],
+                  stale_pairs: Sequence[Tuple[int, int]]) -> Dict[str, Any]:
+        self.cohorts.append({"version": version,
+                             "fresh": list(fresh_ids),
+                             "stale": list(stale_pairs)})
+        return {}
+
+    def evaluate(self) -> float:
+        return 0.0
+
+
+class ServerBridge:
+    """Drives a real ``Server`` with externally-determined cohorts.
+
+    Per aggregation event the bridge calls ``Server.step(version, fresh,
+    stale_pairs)``: fresh clients train on the current global model, stale
+    pairs are materialized lazily from ``history[base_version]`` with
+    realized staleness ``version - base_version`` — exactly how the
+    round-synchronous path computes deliveries, so a degenerate simulation
+    (zero latency variance, pipelined deadline) reproduces ``Server.run``
+    bit-for-bit.
+
+    ``eval_mode``: "server" follows ``FLConfig.eval_every`` on the version
+    counter (matches the sync harness — required by the oracle test);
+    "never" defers accuracy entirely to the engine's wall-clock eval ticks,
+    keeping eval cost off the aggregation path; "always" evaluates every
+    aggregation.
+    """
+
+    def __init__(self, server: Server, eval_mode: str = "server"):
+        assert eval_mode in ("server", "never", "always"), eval_mode
+        self.server = server
+        self.eval_mode = eval_mode
+
+    def aggregate(self, version: int, fresh_ids: Sequence[int],
+                  stale_pairs: Sequence[Tuple[int, int]]) -> Dict[str, Any]:
+        assert version == len(self.server.history) - 1, \
+            (version, len(self.server.history))
+        eval_now = {"server": None, "never": False, "always": True}[self.eval_mode]
+        return self.server.step(version, fresh_ids, stale_pairs,
+                                eval_now=eval_now)
+
+    def evaluate(self) -> float:
+        return self.server.evaluate()[0]

@@ -1,0 +1,166 @@
+"""Stochastic device models for the event-driven simulator.
+
+A client device is a ``DeviceProfile``: a compute-latency distribution, a
+network-latency distribution, and an optional dropout process (per-job
+failure probability + downtime distribution). A ``DeviceFleet`` holds one
+profile per client and is the engine's single source of randomness for
+device behaviour — every sample goes through the engine's seeded
+``numpy.random.Generator``, so a (scenario, seed) pair replays exactly.
+
+Heavy-tail latency is the regime the paper targets (*unlimited* staleness):
+``lognormal`` models the bulk of mobile-device variability, ``pareto`` the
+stragglers whose delay has no useful upper bound (FedASMU / FedBuff device
+models use the same two families).
+
+``intertwined_fleet`` keeps the paper's core coupling: device speed tiers
+are assigned to the top holders of a target class, so data heterogeneity
+and device heterogeneity stay correlated exactly as
+``repro.data.staleness.intertwined_schedule`` couples them for the
+round-synchronous server.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.staleness import top_holders
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyDist:
+    """One-parameter-family latency distribution.
+
+    kind="fixed":     always ``loc`` (zero variance — the degenerate oracle).
+    kind="lognormal": median ``loc``, log-space sigma ``spread``.
+    kind="pareto":    scale ``loc``, tail index ``alpha = 1/spread``
+                      (smaller spread = lighter tail; spread >= 1 means
+                      infinite mean — genuinely unlimited staleness).
+    """
+
+    kind: str = "fixed"
+    loc: float = 1.0
+    spread: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("fixed", "lognormal", "pareto"):
+            raise ValueError(f"unknown latency kind: {self.kind}")
+        if self.loc < 0 or self.spread < 0:
+            raise ValueError(f"latency params must be >= 0: {self}")
+
+    def sample(self, rng: np.random.Generator) -> float:
+        if self.kind == "fixed" or self.spread == 0.0:
+            return float(self.loc)
+        if self.kind == "lognormal":
+            return float(self.loc * np.exp(self.spread * rng.standard_normal()))
+        # pareto: inverse-CDF on the open interval so the tail is unbounded
+        u = rng.random()
+        return float(self.loc * (1.0 - u) ** (-self.spread))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    compute: LatencyDist = dataclasses.field(
+        default_factory=lambda: LatencyDist("fixed", 1.0))
+    network: LatencyDist = dataclasses.field(
+        default_factory=lambda: LatencyDist("fixed", 0.0))
+    dropout_prob: float = 0.0      # per-job probability the job is lost
+    downtime: LatencyDist = dataclasses.field(
+        default_factory=lambda: LatencyDist("fixed", 5.0))
+
+    def job_latency(self, rng: np.random.Generator) -> float:
+        return self.compute.sample(rng) + self.network.sample(rng)
+
+
+class DeviceFleet:
+    """One ``DeviceProfile`` per client."""
+
+    def __init__(self, profiles: Sequence[DeviceProfile]):
+        self.profiles: List[DeviceProfile] = list(profiles)
+
+    def __len__(self) -> int:
+        return len(self.profiles)
+
+    def job_latency(self, rng: np.random.Generator, client: int) -> float:
+        return self.profiles[client].job_latency(rng)
+
+    def job_drops(self, rng: np.random.Generator, client: int) -> bool:
+        p = self.profiles[client].dropout_prob
+        return bool(p > 0.0 and rng.random() < p)
+
+    def downtime(self, rng: np.random.Generator, client: int) -> float:
+        return self.profiles[client].downtime.sample(rng)
+
+    def mean_latency(self, client: int, n: int = 256, seed: int = 0) -> float:
+        """Monte-Carlo mean job latency (diagnostics / scenario summaries)."""
+        rng = np.random.default_rng(seed)
+        return float(np.mean(
+            [self.job_latency(rng, client) for _ in range(n)]))
+
+
+# --------------------------------------------------------------------------- #
+# Fleet constructors
+# --------------------------------------------------------------------------- #
+
+
+def homogeneous_fleet(n_clients: int, latency: LatencyDist,
+                      network: Optional[LatencyDist] = None,
+                      dropout_prob: float = 0.0,
+                      downtime: Optional[LatencyDist] = None) -> DeviceFleet:
+    prof = DeviceProfile(
+        compute=latency,
+        network=network or LatencyDist("fixed", 0.0),
+        dropout_prob=dropout_prob,
+        downtime=downtime or LatencyDist("fixed", 5.0))
+    return DeviceFleet([prof] * n_clients)
+
+
+def intertwined_fleet(label_histograms: np.ndarray, target_class: int,
+                      n_slow: int, slow: LatencyDist, fast: LatencyDist,
+                      network: Optional[LatencyDist] = None,
+                      dropout_prob: float = 0.0,
+                      slow_dropout_prob: Optional[float] = None,
+                      downtime: Optional[LatencyDist] = None) -> DeviceFleet:
+    """Device tiers correlated with label skew (the paper's coupling).
+
+    The top-``n_slow`` holders of ``target_class`` get the ``slow`` compute
+    distribution (and optionally a higher dropout rate); everyone else gets
+    ``fast``. Selection goes through ``repro.data.staleness.top_holders`` —
+    the same helper ``intertwined_schedule`` uses — so a fleet and a
+    schedule built from the same histograms pick the same clients.
+    """
+    slow_ids = set(
+        top_holders(label_histograms, target_class, n_slow).tolist())
+    network = network or LatencyDist("fixed", 0.0)
+    downtime = downtime or LatencyDist("fixed", 5.0)
+    if slow_dropout_prob is None:
+        slow_dropout_prob = dropout_prob
+    profiles = []
+    for i in range(label_histograms.shape[0]):
+        is_slow = i in slow_ids
+        profiles.append(DeviceProfile(
+            compute=slow if is_slow else fast,
+            network=network,
+            dropout_prob=slow_dropout_prob if is_slow else dropout_prob,
+            downtime=downtime))
+    return DeviceFleet(profiles)
+
+
+def fleet_from_schedule(staleness: Sequence[int],
+                        round_len: float = 1.0) -> DeviceFleet:
+    """The degenerate zero-variance fleet that replays a static schedule.
+
+    Under a pipelined semi-sync deadline policy (dispatch every client at
+    every round tick, aggregate at every tick), a client with scheduled tau
+    must land its update in the aggregation window ``(s + tau*L, s + (tau+1)*L]``
+    when dispatched at tick ``s`` — fixed latency ``(tau + 0.5) * round_len``
+    puts it mid-window, away from tick-boundary ties. Fast clients (tau=0)
+    get ``0.5 * round_len`` and arrive within their own round. This is the
+    bit-for-bit oracle mapping used by ``tests/test_sim.py``.
+    """
+    return DeviceFleet([
+        DeviceProfile(compute=LatencyDist(
+            "fixed", (float(tau) + 0.5) * round_len))
+        for tau in staleness])

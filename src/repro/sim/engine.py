@@ -1,0 +1,317 @@
+"""Virtual-clock event engine for asynchronous FL simulation.
+
+The engine owns a heap of typed events — ``dispatch``, ``upload``,
+``dropout``, ``rejoin``, ``round`` (policy deadline tick), ``eval`` — ordered
+by ``(time, seq)`` so simultaneous events resolve in scheduling order and a
+(scenario, seed) pair replays *identically*: same event trace, same realized
+staleness, same final model. All randomness flows through one seeded
+``numpy.random.Generator``.
+
+Division of labour:
+
+* the **engine** runs mechanics — the clock, job lifecycles (dispatch →
+  upload-arrival, or loss via device dropout), the arrival buffer, dropout /
+  rejoin bookkeeping, eval ticks, and the trace;
+* the **policy** (``repro.sim.policies``) decides *when to aggregate* and
+  *when to hand out work*;
+* the **aggregator** (``repro.sim.bridge``) turns an aggregation cohort into
+  a model update — normally a real ``repro.core.server.Server`` via
+  ``ServerBridge``, or a ``RecordingAggregator`` for engine-only tests and
+  throughput benchmarks.
+
+Model versions count aggregations: a job dispatched at version ``v`` and
+consumed at version ``v'`` has *realized staleness* ``v' - v`` — zero means
+the update is fresh (nothing was aggregated while it trained), matching the
+round-synchronous server's fast path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.staleness import StalenessSchedule, observed_schedule
+from repro.sim.devices import DeviceFleet
+
+EVENT_KINDS = ("dispatch", "upload", "dropout", "rejoin", "round", "eval")
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One delivered client update, buffered until the policy aggregates."""
+    client: int
+    base_version: int          # model version the client trained from
+    dispatch_time: float
+    arrival_time: float
+    job_id: int
+
+
+class SimEngine:
+    def __init__(self, fleet: DeviceFleet, policy: Any, aggregator: Any,
+                 seed: int = 0, horizon: float = 100.0,
+                 eval_every_time: Optional[float] = None,
+                 max_events: int = 1_000_000):
+        self.fleet = fleet
+        self.policy = policy
+        self.aggregator = aggregator
+        self.rng = np.random.default_rng(seed)
+        self.horizon = float(horizon)
+        self.eval_every_time = eval_every_time
+        self.max_events = max_events
+
+        n = len(fleet)
+        self.n_clients = n
+        self.clock = 0.0
+        self.version = 0
+        self.up = [True] * n
+        self.inflight_count = [0] * n
+
+        self._heap: List[Tuple[float, int, str, int, dict]] = []
+        self._seq = 0
+        self._job_seq = 0
+        self._inflight: Dict[int, Tuple[int, int, float]] = {}  # job -> (client, base, t0)
+        self._doomed: Dict[int, int] = {}        # failing job -> client
+        self._cancelled: set = set()
+        self.buffer: List[Arrival] = []
+
+        self.realized: Dict[int, List[int]] = defaultdict(list)
+        self.trace: List[Tuple[float, str, int, str]] = []
+        self.evals: List[Tuple[float, int, float]] = []
+        self.agg_log: List[Dict[str, Any]] = []
+        self.counters: Dict[str, int] = defaultdict(int)
+
+    # ------------------------------------------------------------------ #
+    # Scheduling primitives
+    # ------------------------------------------------------------------ #
+    def schedule(self, delay: float, kind: str, client: int = -1,
+                 **payload) -> None:
+        assert kind in EVENT_KINDS, kind
+        heapq.heappush(self._heap,
+                       (self.clock + float(delay), self._seq, kind, client,
+                        payload))
+        self._seq += 1
+
+    def request_dispatch(self, client: int, delay: float = 0.0,
+                         force: bool = False) -> None:
+        """Queue a dispatch event; ``force`` allows pipelined dispatch (a new
+        job even while previous ones are in flight — the round-synchronous
+        model dispatches every client every round)."""
+        self.schedule(delay, "dispatch", client, force=force)
+
+    def dispatch_all(self, force: bool = False) -> None:
+        for i in range(self.n_clients):
+            self.request_dispatch(i, force=force)
+
+    # ------------------------------------------------------------------ #
+    # Event handlers
+    # ------------------------------------------------------------------ #
+    def _trace(self, kind: str, client: int, info: str = "") -> None:
+        self.trace.append((round(self.clock, 9), kind, client, info))
+
+    def _handle_dispatch(self, client: int, force: bool = False) -> None:
+        if not self.up[client]:
+            self.counters["skipped_down"] += 1
+            return
+        if self.inflight_count[client] > 0 and not force:
+            self.counters["skipped_busy"] += 1
+            return
+        latency = self.fleet.job_latency(self.rng, client)
+        job_id = self._job_seq
+        self._job_seq += 1
+        self.counters["dispatches"] += 1
+        if self.fleet.job_drops(self.rng, client):
+            # the job dies partway through: the device goes down at a random
+            # fraction of the would-be latency and the upload never happens
+            frac = self.rng.random()
+            self._doomed[job_id] = client
+            self.inflight_count[client] += 1
+            self.schedule(latency * frac, "dropout", client, job=job_id)
+            self._trace("dispatch", client, f"v{self.version} doomed")
+        else:
+            self._inflight[job_id] = (client, self.version, self.clock)
+            self.inflight_count[client] += 1
+            self.schedule(latency, "upload", client, job=job_id)
+            self._trace("dispatch", client, f"v{self.version}")
+
+    def _handle_upload(self, client: int, job: int) -> None:
+        if job in self._cancelled:
+            self._cancelled.discard(job)
+            self.counters["cancelled_uploads"] += 1
+            self._trace("upload", client, "cancelled")
+            return
+        _, base, t0 = self._inflight.pop(job)
+        self.inflight_count[client] -= 1
+        arrival = Arrival(client, base, t0, self.clock, job)
+        self.buffer.append(arrival)
+        self.counters["arrivals"] += 1
+        self._trace("upload", client, f"v{base}")
+        self.policy.on_upload(self, arrival)
+
+    def _handle_dropout(self, client: int, job: int) -> None:
+        if job in self._cancelled:             # killed by an earlier dropout
+            self._cancelled.discard(job)
+            self._trace("dropout", client, "cancelled")
+            return
+        self._doomed.pop(job, None)
+        lost = 1                               # the job that failed
+        for jid, (c, _, _) in list(self._inflight.items()):
+            if c == client:                    # concurrent jobs die with it
+                del self._inflight[jid]
+                self._cancelled.add(jid)
+                lost += 1
+        for jid, c in list(self._doomed.items()):
+            if c == client:
+                del self._doomed[jid]
+                self._cancelled.add(jid)
+                lost += 1
+        self.inflight_count[client] = 0
+        self.counters["lost_jobs"] += lost
+        if self.up[client]:
+            self.up[client] = False
+            self.counters["dropouts"] += 1
+            down = self.fleet.downtime(self.rng, client)
+            self.schedule(down, "rejoin", client)
+            self._trace("dropout", client, f"lost{lost} down{down:.3f}")
+        else:
+            self._trace("dropout", client, f"lost{lost} already-down")
+
+    def _handle_rejoin(self, client: int) -> None:
+        if not self.up[client]:
+            self.up[client] = True
+            self.counters["rejoins"] += 1
+            self._trace("rejoin", client)
+            self.policy.on_rejoin(self, client)
+
+    def _handle_eval(self) -> None:
+        acc = float(self.aggregator.evaluate())
+        self.evals.append((self.clock, self.version, acc))
+        self.counters["evals"] += 1
+        # accuracy deliberately stays OUT of the trace: the trace fingerprints
+        # the event process, which must be identical across server strategies
+        self._trace("eval", -1, f"v{self.version}")
+        if self.eval_every_time:
+            nxt = self.clock + self.eval_every_time
+            if nxt <= self.horizon:
+                self.schedule(self.eval_every_time, "eval")
+
+    # ------------------------------------------------------------------ #
+    # Aggregation
+    # ------------------------------------------------------------------ #
+    def aggregate(self) -> Optional[Dict[str, Any]]:
+        """Flush the arrival buffer through the aggregator as one cohort.
+
+        Arrivals are deduped per client (freshest base version wins; the
+        superseded count is tracked) and sorted by client index so cohort
+        order is deterministic and matches the round-synchronous server's
+        (ascending-index) ordering. Realized staleness is measured against
+        the CURRENT version, at consumption time.
+        """
+        if not self.buffer:
+            self.counters["empty_triggers"] += 1
+            self._trace("aggregate", -1, "empty")
+            return None
+        best: Dict[int, Arrival] = {}
+        for a in self.buffer:
+            b = best.get(a.client)
+            if b is None or (a.base_version, a.arrival_time) > \
+                    (b.base_version, b.arrival_time):
+                best[a.client] = a
+        self.counters["superseded"] += len(self.buffer) - len(best)
+        self.buffer = []
+        cohort = sorted(best.values(), key=lambda a: a.client)
+
+        fresh: List[int] = []
+        stale: List[Tuple[int, int]] = []
+        taus = []
+        for a in cohort:
+            tau = self.version - a.base_version
+            self.realized[a.client].append(tau)
+            taus.append(tau)
+            if tau == 0:
+                fresh.append(a.client)
+            else:
+                stale.append((a.client, a.base_version))
+        self._trace("aggregate", -1,
+                    f"v{self.version} fresh{len(fresh)} stale{len(stale)}")
+        row = self.aggregator.aggregate(self.version, fresh, stale) or {}
+        self.agg_log.append({"time": self.clock, "version": self.version,
+                             "fresh": fresh, "stale": stale,
+                             "taus": taus, **row})
+        self.version += 1
+        self.counters["aggregations"] += 1
+        return row
+
+    # ------------------------------------------------------------------ #
+    # Main loop
+    # ------------------------------------------------------------------ #
+    def run(self, until: Optional[float] = None) -> Dict[str, Any]:
+        if until is not None:
+            self.horizon = float(until)
+        self.policy.start(self)
+        if self.eval_every_time and self.eval_every_time <= self.horizon:
+            self.schedule(self.eval_every_time, "eval")
+        while self._heap:
+            if self.counters["events"] >= self.max_events:
+                self._trace("halt", -1, "max_events")
+                break
+            t, _, kind, client, payload = self._heap[0]
+            if t > self.horizon:
+                break
+            heapq.heappop(self._heap)
+            self.clock = t
+            self.counters["events"] += 1
+            if kind == "dispatch":
+                self._handle_dispatch(client, payload.get("force", False))
+            elif kind == "upload":
+                self._handle_upload(client, payload["job"])
+            elif kind == "dropout":
+                self._handle_dropout(client, payload["job"])
+            elif kind == "rejoin":
+                self._handle_rejoin(client)
+            elif kind == "round":
+                self.policy.on_timer(self, payload)
+            elif kind == "eval":
+                self._handle_eval()
+        return self.summary()
+
+    # ------------------------------------------------------------------ #
+    # Reporting
+    # ------------------------------------------------------------------ #
+    def trace_digest(self) -> str:
+        lines = "\n".join(f"{t:.9f}|{k}|{c}|{i}" for t, k, c, i in self.trace)
+        return hashlib.sha256(lines.encode()).hexdigest()[:16]
+
+    def realized_schedule(self, reducer: str = "mean") -> StalenessSchedule:
+        """Observed-staleness view compatible with schedule consumers."""
+        return observed_schedule(self.n_clients, self.realized, reducer)
+
+    def summary(self) -> Dict[str, Any]:
+        all_taus = [t for v in self.realized.values() for t in v]
+        c = self.counters
+        return {
+            "clock": self.clock,
+            "version": self.version,
+            "events": c["events"],
+            "aggregations": c["aggregations"],
+            "dispatches": c["dispatches"],
+            "arrivals": c["arrivals"],
+            "lost_jobs": c["lost_jobs"],
+            "dropouts": c["dropouts"],
+            "rejoins": c["rejoins"],
+            "superseded": c["superseded"],
+            "empty_triggers": c["empty_triggers"],
+            "skipped_down": c["skipped_down"],
+            "buffer_pending": len(self.buffer),
+            "inflight": len(self._inflight) + len(self._doomed),
+            "clients_down": sum(1 for u in self.up if not u),
+            "mean_realized_tau": (float(sum(all_taus) / len(all_taus))
+                                  if all_taus else 0.0),
+            "max_realized_tau": max(all_taus) if all_taus else 0,
+            "trace_digest": self.trace_digest(),
+            "n_evals": len(self.evals),
+        }

@@ -1,0 +1,92 @@
+"""Server trigger policies: WHEN to aggregate and WHEN to hand out work.
+
+Three families cover the async-FL design space the paper's baselines live in:
+
+* ``SemiSyncDeadline`` — a wall-clock deadline every ``round_len``: aggregate
+  whatever arrived, then dispatch. With ``pipelined=True`` every up client is
+  re-dispatched at every tick even with jobs still in flight — the exact
+  model of the round-synchronous ``Server`` (a slow client has tau
+  concurrent jobs), which is what makes the degenerate zero-variance
+  scenario reproduce it bit-for-bit.
+* ``PureAsync`` — every arrival triggers an aggregation of that single
+  update (FedAsync-style); the client is re-dispatched with the new model.
+* ``FedBuffK`` — buffer arrivals and aggregate every K-th (FedBuff-style);
+  clients are re-dispatched immediately on arrival, so the buffer mixes
+  base versions.
+
+A policy only talks to the engine through ``engine.aggregate()``,
+``engine.request_dispatch()`` / ``dispatch_all()`` and ``engine.schedule()``
+— all state lives in the engine, so policies stay stateless-ish and
+replayable.
+"""
+
+from __future__ import annotations
+
+from repro.sim.engine import Arrival, SimEngine
+
+
+class TriggerPolicy:
+    name = "abstract"
+
+    def start(self, eng: SimEngine) -> None:
+        """Initial dispatches / timers. Default: one job per client."""
+        eng.dispatch_all()
+
+    def on_upload(self, eng: SimEngine, arrival: Arrival) -> None:
+        """An update arrived (already buffered). Decide whether to trigger."""
+
+    def on_timer(self, eng: SimEngine, payload: dict) -> None:
+        """A ``round`` event fired (only policies that schedule them)."""
+
+    def on_rejoin(self, eng: SimEngine, client: int) -> None:
+        """A client came back up. Default: give it work immediately."""
+        eng.request_dispatch(client)
+
+
+class SemiSyncDeadline(TriggerPolicy):
+    def __init__(self, round_len: float = 1.0, pipelined: bool = False):
+        assert round_len > 0
+        self.round_len = float(round_len)
+        self.pipelined = pipelined
+        self.name = "semi_sync" + ("_pipelined" if pipelined else "")
+
+    def start(self, eng: SimEngine) -> None:
+        eng.dispatch_all(force=self.pipelined)
+        if self.round_len <= eng.horizon:
+            eng.schedule(self.round_len, "round")
+
+    def on_timer(self, eng: SimEngine, payload: dict) -> None:
+        eng.aggregate()                       # deadline: take what arrived
+        eng.dispatch_all(force=self.pipelined)
+        if eng.clock + self.round_len <= eng.horizon:
+            eng.schedule(self.round_len, "round")
+
+    def on_rejoin(self, eng: SimEngine, client: int) -> None:
+        pass                                  # waits for the next tick
+
+
+class PureAsync(TriggerPolicy):
+    name = "pure_async"
+
+    def on_upload(self, eng: SimEngine, arrival: Arrival) -> None:
+        eng.aggregate()                       # cohort of exactly this arrival
+        eng.request_dispatch(arrival.client)  # new model goes straight back
+
+
+class FedBuffK(TriggerPolicy):
+    def __init__(self, k: int = 4):
+        assert k >= 1
+        self.k = int(k)
+        self.name = f"fedbuff_k{k}"
+
+    def on_upload(self, eng: SimEngine, arrival: Arrival) -> None:
+        if len(eng.buffer) >= self.k:
+            eng.aggregate()
+        eng.request_dispatch(arrival.client)
+
+
+POLICIES = {
+    "semi_sync": SemiSyncDeadline,
+    "pure_async": PureAsync,
+    "fedbuff": FedBuffK,
+}

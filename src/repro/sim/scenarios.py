@@ -1,0 +1,207 @@
+"""Named, seed-reproducible simulation scenarios.
+
+A scenario is a builder ``fn(seed, horizon, **overrides) -> SimRun`` wiring
+data + model + ``Server`` + device fleet + trigger policy into a ready
+``SimEngine``. Register new ones with ``@register("name")`` — the CLI
+(``python -m repro.sim``), the examples and the benchmarks all resolve
+scenarios by name from this registry, so adding a workload is one decorated
+function.
+
+All stock scenarios share one small-scale FL setup (synthetic feature data,
+Dirichlet label skew, MLP — seconds-scale on CPU) and differ only in device
+models and trigger policy; device speed tiers are assigned to the top
+holders of the target class so data and device heterogeneity stay
+*intertwined* exactly as in the paper's schedule-based harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.client import LocalProgram
+from repro.core.gradient_inversion import GIConfig
+from repro.core.server import FLConfig, Server
+from repro.data.partition import (client_label_histograms, dirichlet_partition,
+                                  pad_client_shards)
+from repro.data.staleness import intertwined_schedule
+from repro.data.synthetic import make_feature_dataset
+from repro.models.small import mlp3
+from repro.sim.bridge import ServerBridge
+from repro.sim.devices import (LatencyDist, fleet_from_schedule,
+                               intertwined_fleet)
+from repro.sim.engine import SimEngine
+from repro.sim.policies import FedBuffK, PureAsync, SemiSyncDeadline
+
+N_CLASSES, N_FEATURES, TARGET = 5, 12, 2
+
+
+@dataclasses.dataclass
+class SimRun:
+    name: str
+    engine: SimEngine
+    server: Server
+    meta: Dict[str, Any]
+
+    def run(self) -> Dict[str, Any]:
+        summary = self.engine.run()
+        summary["final_acc"] = float(self.server.evaluate()[0])
+        summary["scenario"] = self.name
+        summary["realized_taus"] = {
+            int(c): list(map(int, v))
+            for c, v in sorted(self.engine.realized.items())}
+        summary.update(self.meta)
+        return summary
+
+
+_REGISTRY: Dict[str, Callable[..., SimRun]] = {}
+_DOCS: Dict[str, str] = {}
+
+
+def register(name: str, doc: str = ""):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        _DOCS[name] = doc or (fn.__doc__ or "").strip().splitlines()[0]
+        return fn
+    return deco
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def describe() -> Dict[str, str]:
+    return {n: _DOCS[n] for n in names()}
+
+
+def build(name: str, seed: int = 0, horizon: Optional[float] = None,
+          **overrides) -> SimRun:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; have {names()}")
+    kw = dict(overrides)
+    if horizon is not None:
+        kw["horizon"] = horizon
+    return _REGISTRY[name](seed=seed, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Shared small-scale FL setup
+# --------------------------------------------------------------------------- #
+
+
+def _fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
+              n_slow: int = 3, tau=3, gi_iters: int = 8,
+              eval_every: int = 5):
+    x, y = make_feature_dataset(20, n_classes=N_CLASSES,
+                                n_features=N_FEATURES, seed=seed)
+    tx, ty = make_feature_dataset(8, n_classes=N_CLASSES,
+                                  n_features=N_FEATURES, seed=seed + 99)
+    idx = dirichlet_partition(y, n_clients, alpha=0.1, seed=seed)
+    cx, cy, cm = pad_client_shards(x, y, idx, m=16)
+    hist = client_label_histograms(y, idx, N_CLASSES)
+    sched = intertwined_schedule(hist, TARGET, n_slow=n_slow, tau=tau)
+    prog = LocalProgram(steps=5, lr=0.1, momentum=0.5)
+    cfg = FLConfig(strategy=strategy, rounds=0,
+                   gi=GIConfig(n_rec=8, iters=gi_iters, lr=0.1),
+                   eval_every=eval_every, seed=seed)
+    server = Server(mlp3(n_features=N_FEATURES, n_classes=N_CLASSES,
+                         hidden=24),
+                    prog, cfg, cx, cy, cm, sched, tx, ty)
+    return server, hist, sched
+
+
+def _make_run(name, seed, server, fleet, policy, horizon, eval_every_time,
+              eval_mode="server", **meta) -> SimRun:
+    engine = SimEngine(fleet, policy, ServerBridge(server, eval_mode),
+                       seed=seed, horizon=horizon,
+                       eval_every_time=eval_every_time)
+    meta.update({"policy": policy.name, "seed": seed, "horizon": horizon,
+                 "strategy": server.cfg.strategy})
+    return SimRun(name, engine, server, meta)
+
+
+# --------------------------------------------------------------------------- #
+# Stock scenarios
+# --------------------------------------------------------------------------- #
+
+
+@register("degenerate_sync",
+          "zero-variance oracle: replays the round-synchronous Server")
+def degenerate_sync(seed: int = 0, horizon: float = 8.0, strategy: str = "ours",
+                    tau=None, **kw) -> SimRun:
+    """Deterministic latencies + pipelined deadline == the sync harness."""
+    tau = tau if tau is not None else [2, 3, 2]
+    server, hist, sched = _fl_setup(seed, strategy=strategy, tau=tau, **kw)
+    fleet = fleet_from_schedule(sched.staleness, round_len=1.0)
+    policy = SemiSyncDeadline(round_len=1.0, pipelined=True)
+    return _make_run("degenerate_sync", seed, server, fleet, policy,
+                     horizon, eval_every_time=None)
+
+
+@register("semi_sync_deadline",
+          "lognormal device tiers, aggregate at a fixed deadline")
+def semi_sync_deadline(seed: int = 0, horizon: float = 12.0,
+                       strategy: str = "ours", round_len: float = 1.0,
+                       **kw) -> SimRun:
+    """Semi-synchronous FL: a deadline every round_len; stragglers arrive
+    rounds late with lognormal jitter, slow tier correlated with the target
+    class."""
+    server, hist, _ = _fl_setup(seed, strategy=strategy, **kw)
+    fleet = intertwined_fleet(
+        hist, TARGET, n_slow=3,
+        slow=LatencyDist("lognormal", 2.8, 0.35),
+        fast=LatencyDist("lognormal", 0.45, 0.25),
+        network=LatencyDist("lognormal", 0.05, 0.3),
+        dropout_prob=0.01, downtime=LatencyDist("fixed", 2.0))
+    policy = SemiSyncDeadline(round_len=round_len)
+    return _make_run("semi_sync_deadline", seed, server, fleet, policy,
+                     horizon, eval_every_time=horizon / 4)
+
+
+@register("pure_async",
+          "Pareto-tail latencies, aggregate on every arrival (FedAsync-style)")
+def pure_async(seed: int = 0, horizon: float = 10.0, strategy: str = "ours",
+               **kw) -> SimRun:
+    """Pure async: unbounded Pareto tails make realized staleness unlimited —
+    the regime the paper's title claims robustness to."""
+    server, hist, _ = _fl_setup(seed, strategy=strategy, **kw)
+    fleet = intertwined_fleet(
+        hist, TARGET, n_slow=3,
+        slow=LatencyDist("pareto", 1.5, 0.6),
+        fast=LatencyDist("pareto", 0.3, 0.3),
+        network=LatencyDist("fixed", 0.02))
+    return _make_run("pure_async", seed, server, fleet, PureAsync(),
+                     horizon, eval_every_time=horizon / 4)
+
+
+@register("fedbuff_k4",
+          "buffered async: aggregate every K=4 arrivals (FedBuff-style)")
+def fedbuff_k4(seed: int = 0, horizon: float = 12.0, strategy: str = "ours",
+               k: int = 4, **kw) -> SimRun:
+    """Buffered async: arrivals accumulate; every K-th triggers aggregation,
+    so each cohort mixes base versions."""
+    server, hist, _ = _fl_setup(seed, strategy=strategy, **kw)
+    fleet = intertwined_fleet(
+        hist, TARGET, n_slow=3,
+        slow=LatencyDist("lognormal", 2.2, 0.5),
+        fast=LatencyDist("lognormal", 0.4, 0.3),
+        network=LatencyDist("lognormal", 0.05, 0.3),
+        dropout_prob=0.02, downtime=LatencyDist("fixed", 1.5))
+    return _make_run("fedbuff_k4", seed, server, fleet, FedBuffK(k),
+                     horizon, eval_every_time=horizon / 4)
+
+
+@register("heavy_churn",
+          "high dropout/rejoin churn under a FedBuff trigger")
+def heavy_churn(seed: int = 0, horizon: float = 12.0, strategy: str = "ours",
+                **kw) -> SimRun:
+    """Stress the dropout/rejoin machinery: a fifth of jobs die mid-flight."""
+    server, hist, _ = _fl_setup(seed, strategy=strategy, **kw)
+    fleet = intertwined_fleet(
+        hist, TARGET, n_slow=3,
+        slow=LatencyDist("lognormal", 2.0, 0.6),
+        fast=LatencyDist("lognormal", 0.5, 0.4),
+        dropout_prob=0.2, slow_dropout_prob=0.35,
+        downtime=LatencyDist("lognormal", 1.0, 0.5))
+    return _make_run("heavy_churn", seed, server, fleet, FedBuffK(3),
+                     horizon, eval_every_time=horizon / 4)

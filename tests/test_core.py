@@ -158,6 +158,27 @@ def test_tier_clustering_separates_staleness():
     assert all(staleness[i] == 0 for i in fast)
 
 
+def test_cluster_tiers_tied_gaps_deterministic():
+    # all gaps equal: the stable sort must cut at the EARLIEST positions on
+    # every platform (the old argsort[::-1] picked platform-dependent ones)
+    t = tiers.cluster_tiers([0, 10, 20, 30], n_tiers=2)
+    assert t == [[0], [1, 2, 3]]
+    t3 = tiers.cluster_tiers([0, 10, 20, 30], n_tiers=3)
+    assert t3 == [[0], [1], [2, 3]]
+
+
+def test_cluster_tiers_all_equal_taus():
+    assert tiers.cluster_tiers([5, 5, 5], n_tiers=3) == [[0, 1, 2]]
+
+
+def test_cluster_tiers_more_tiers_than_levels():
+    # only 2 distinct levels: never split equal-tau clients to fill tiers
+    t = tiers.cluster_tiers([0, 0, 7, 7], n_tiers=3)
+    assert t == [[0, 1], [2, 3]]
+    t = tiers.cluster_tiers([0, 0, 0, 5, 5], n_tiers=4)
+    assert t == [[0, 1, 2], [3, 4]]
+
+
 def test_tiered_aggregate_shape():
     ups = [small_tree(i) for i in range(4)]
     agg = tiers.tiered_aggregate(ups, [0, 0, 10, 10], [1, 1, 1, 1], 2)

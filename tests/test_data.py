@@ -5,7 +5,8 @@ import pytest
 
 from repro.data.partition import (client_label_histograms, dirichlet_partition,
                                   one_class_partition, pad_client_shards)
-from repro.data.staleness import intertwined_schedule, uniform_random_schedule
+from repro.data.staleness import (intertwined_schedule, observed_schedule,
+                                  uniform_random_schedule)
 from repro.data.synthetic import (make_feature_dataset, make_image_dataset,
                                   make_timeseries_dataset)
 from repro.data.variant import VariantDataStream
@@ -70,6 +71,44 @@ def test_intertwined_schedule_targets_class_holders():
 def test_uniform_schedule_count():
     s = uniform_random_schedule(20, 5, 10, seed=0)
     assert len(s.slow_clients) == 5
+
+
+def test_intertwined_schedule_heterogeneous_tau_array():
+    hist = np.array([[0, 10], [0, 8], [5, 5], [10, 0]])
+    # taus assigned in rank order: heaviest holder of the class gets tau[0]
+    sched = intertwined_schedule(hist, target_class=1, n_slow=2, tau=[3, 7])
+    assert sched.tau(0) == 3 and sched.tau(1) == 7
+    assert sched.tau(2) == 0 and sched.tau(3) == 0
+    assert sched.max_tau == 7
+
+
+def test_intertwined_schedule_tau_sampler():
+    hist = np.array([[0, 9], [0, 7], [0, 5], [4, 1]])
+    rng = np.random.RandomState(0)
+    sched = intertwined_schedule(hist, 1, n_slow=3,
+                                 tau=lambda n: rng.randint(1, 20, n))
+    assert set(sched.slow_clients) == {0, 1, 2}
+    assert all(1 <= sched.tau(i) < 20 for i in sched.slow_clients)
+    # scalar backward-compat path unchanged
+    s2 = intertwined_schedule(hist, 1, n_slow=3, tau=6)
+    assert all(s2.tau(i) == 6 for i in s2.slow_clients)
+
+
+def test_intertwined_schedule_bad_tau_specs():
+    hist = np.array([[0, 9], [0, 7], [4, 1]])
+    with pytest.raises(ValueError):
+        intertwined_schedule(hist, 1, n_slow=2, tau=[1, 2, 3])  # wrong length
+    with pytest.raises(ValueError):
+        intertwined_schedule(hist, 1, n_slow=2, tau=[1, 0])     # tau < 1
+
+
+def test_observed_schedule_view():
+    sched = observed_schedule(4, {0: [2, 4], 2: [5]}, reducer="mean")
+    assert sched.staleness.tolist() == [3, 0, 5, 0]
+    assert observed_schedule(4, {0: [2, 4]}, "max").tau(0) == 4
+    assert observed_schedule(4, {0: [2, 4]}, "last").tau(0) == 4
+    with pytest.raises(ValueError):
+        observed_schedule(4, {}, "median")
 
 
 def test_variant_stream_drifts_with_rate():

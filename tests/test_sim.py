@@ -1,0 +1,226 @@
+"""Tests for the event-driven async FL simulator (repro.sim).
+
+Covers: deterministic replay (same seed => identical event trace), trigger
+policy semantics (FedBuff-K counts, pure-async, semi-sync deadlines),
+dropout/rejoin bookkeeping invariants, the observed-staleness view, and the
+acceptance oracle — a degenerate scenario (zero latency variance, no
+dropout, pipelined deadline) reproduces the round-synchronous ``Server``
+trajectory bit-for-bit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.staleness import observed_schedule
+from repro.sim import (DeviceFleet, DeviceProfile, FedBuffK, LatencyDist,
+                       PureAsync, RecordingAggregator, SemiSyncDeadline,
+                       SimEngine, homogeneous_fleet, intertwined_fleet)
+from repro.sim import scenarios
+
+
+# --------------------------------------------------------------------------- #
+# Device models
+# --------------------------------------------------------------------------- #
+
+
+def test_latency_dists():
+    rng = np.random.default_rng(0)
+    assert LatencyDist("fixed", 2.5).sample(rng) == 2.5
+    # spread=0 degenerates to loc for every family
+    assert LatencyDist("lognormal", 3.0, 0.0).sample(rng) == 3.0
+    assert LatencyDist("pareto", 1.5, 0.0).sample(rng) == 1.5
+    ln = [LatencyDist("lognormal", 1.0, 0.5).sample(rng) for _ in range(200)]
+    pa = [LatencyDist("pareto", 1.0, 0.5).sample(rng) for _ in range(200)]
+    assert all(v > 0 for v in ln)
+    assert all(v >= 1.0 for v in pa)        # pareto scale is a lower bound
+    assert max(pa) > 3.0                    # heavy tail actually shows up
+    with pytest.raises(ValueError):
+        LatencyDist("weird")
+
+
+def test_intertwined_fleet_couples_speed_with_label_skew():
+    hist = np.array([[0, 10], [0, 8], [5, 5], [10, 0]])
+    fleet = intertwined_fleet(hist, target_class=1, n_slow=2,
+                              slow=LatencyDist("fixed", 9.0),
+                              fast=LatencyDist("fixed", 0.5))
+    rng = np.random.default_rng(0)
+    lats = [fleet.job_latency(rng, i) for i in range(4)]
+    # clients 0 and 1 hold the most of class 1 -> slow tier
+    assert lats[0] == 9.0 and lats[1] == 9.0
+    assert lats[2] == 0.5 and lats[3] == 0.5
+
+
+# --------------------------------------------------------------------------- #
+# Engine: determinism, policies, bookkeeping
+# --------------------------------------------------------------------------- #
+
+
+def _run_engine(policy, seed=0, horizon=20.0, n=8, dropout=0.0,
+                latency=LatencyDist("lognormal", 1.0, 0.3)):
+    fleet = homogeneous_fleet(n, latency, dropout_prob=dropout,
+                              downtime=LatencyDist("fixed", 1.0))
+    eng = SimEngine(fleet, policy, RecordingAggregator(), seed=seed,
+                    horizon=horizon)
+    return eng, eng.run()
+
+
+def test_deterministic_replay():
+    _, s1 = _run_engine(FedBuffK(4), seed=7)
+    _, s2 = _run_engine(FedBuffK(4), seed=7)
+    assert s1 == s2                          # full summary, incl. digest
+    e1, _ = _run_engine(FedBuffK(4), seed=7)
+    e2, _ = _run_engine(FedBuffK(4), seed=7)
+    assert e1.trace == e2.trace              # identical event-by-event
+    _, s3 = _run_engine(FedBuffK(4), seed=8)
+    assert s3["trace_digest"] != s1["trace_digest"]
+
+
+def test_fedbuff_trigger_counts():
+    agg = RecordingAggregator()
+    fleet = homogeneous_fleet(8, LatencyDist("lognormal", 1.0, 0.3))
+    eng = SimEngine(fleet, FedBuffK(4), agg, seed=0, horizon=20.0)
+    s = eng.run()
+    assert s["aggregations"] == s["arrivals"] // 4
+    # every trigger fires on a 4-deep buffer; a client arriving twice within
+    # one buffer is deduped to its freshest update and counted superseded
+    sizes = [len(c["fresh"]) + len(c["stale"]) for c in agg.cohorts]
+    assert all(1 <= n <= 4 for n in sizes)
+    assert sum(sizes) + s["superseded"] + s["buffer_pending"] == s["arrivals"]
+
+
+def test_pure_async_aggregates_every_arrival():
+    agg = RecordingAggregator()
+    fleet = homogeneous_fleet(4, LatencyDist("lognormal", 1.0, 0.2))
+    eng = SimEngine(fleet, PureAsync(), agg, seed=0, horizon=15.0)
+    s = eng.run()
+    assert s["aggregations"] == s["arrivals"] > 0
+    assert all(len(c["fresh"]) + len(c["stale"]) == 1 for c in agg.cohorts)
+
+
+def test_semi_sync_deadline_tick_count():
+    _, s = _run_engine(SemiSyncDeadline(1.0), horizon=10.0, n=4,
+                       latency=LatencyDist("fixed", 0.5))
+    assert s["aggregations"] == 10           # one per deadline tick
+    assert s["arrivals"] == 40               # everyone lands every round
+    assert s["mean_realized_tau"] == 0.0     # nobody is ever stale
+
+
+def test_dropout_rejoin_bookkeeping():
+    for seed in range(5):
+        _, s = _run_engine(PureAsync(), seed=seed, horizon=30.0, n=6,
+                           dropout=0.3,
+                           latency=LatencyDist("lognormal", 1.0, 0.5))
+        assert s["dropouts"] > 0             # churn actually happened
+        # every dispatched job is delivered, lost, or still pending
+        assert s["dispatches"] == s["arrivals"] + s["lost_jobs"] + s["inflight"]
+        # every dropout is either rejoined or still down at the horizon
+        assert s["dropouts"] == s["rejoins"] + s["clients_down"]
+
+
+def test_buffer_dedup_counts_superseded():
+    # one fast client under FedBuff-5: its own arrivals pile up in the
+    # buffer, the cohort dedupes to the freshest and counts the rest
+    agg = RecordingAggregator()
+    fleet = homogeneous_fleet(1, LatencyDist("fixed", 0.3))
+    eng = SimEngine(fleet, FedBuffK(5), agg, seed=0, horizon=10.0)
+    s = eng.run()
+    assert s["aggregations"] > 0
+    assert all(len(c["fresh"]) + len(c["stale"]) == 1 for c in agg.cohorts)
+    assert s["superseded"] == s["arrivals"] - s["aggregations"] \
+        - s["buffer_pending"]
+
+
+def test_eval_ticks_and_realized_view():
+    # three fast clients keep versions advancing; client 3 trains through
+    # ~2 aggregations per job, so its observed staleness is 2 versions
+    fleet = DeviceFleet(
+        [DeviceProfile(compute=LatencyDist("fixed", 0.4))] * 3 +
+        [DeviceProfile(compute=LatencyDist("fixed", 2.5))])
+    eng = SimEngine(fleet, SemiSyncDeadline(1.0), RecordingAggregator(),
+                    seed=0, horizon=12.0, eval_every_time=4.0)
+    eng.run()
+    assert [t for t, _, _ in eng.evals] == [4.0, 8.0, 12.0]
+    sched = eng.realized_schedule()
+    assert sched.slow_clients == [3]
+    assert sched.tau(3) == 2
+    assert all(sched.tau(i) == 0 for i in range(3))
+
+
+def test_observed_schedule_reducers():
+    obs = {0: [2, 4], 2: [5]}
+    assert observed_schedule(4, obs, "mean").staleness.tolist() == [3, 0, 5, 0]
+    assert observed_schedule(4, obs, "max").tau(0) == 4
+    assert observed_schedule(4, obs, "last").tau(0) == 4
+    assert observed_schedule(4, {1: []}).tau(1) == 0
+    with pytest.raises(ValueError):
+        observed_schedule(4, obs, "median")
+
+
+# --------------------------------------------------------------------------- #
+# Bridge + scenarios (real Server in the loop)
+# --------------------------------------------------------------------------- #
+
+
+def test_degenerate_oracle_matches_sync_server_bit_for_bit():
+    """Acceptance criterion: zero-variance latencies + pipelined deadline
+    reproduce the round-synchronous `ours` trajectory exactly — same PRNG
+    stream, same cohorts, same params at every version."""
+    R, taus = 5, [2, 3, 2]
+    run = scenarios.build("degenerate_sync", seed=0, horizon=float(R),
+                          tau=taus, gi_iters=4)
+    summary = run.run()
+    assert summary["aggregations"] == R
+
+    sync_srv, _, _ = scenarios._fl_setup(0, strategy="ours", tau=taus,
+                                         gi_iters=4)
+    for t in range(R):
+        sync_srv.round(t)
+
+    assert len(run.server.history) == len(sync_srv.history) == R + 1
+    for v, (wa, wb) in enumerate(zip(run.server.history, sync_srv.history)):
+        for a, b in zip(jax.tree_util.tree_leaves(wa),
+                        jax.tree_util.tree_leaves(wb)):
+            assert bool(jnp.array_equal(a, b)), f"version {v} diverged"
+    # same gi activity and metrics rows
+    assert run.server.gi_log == sync_srv.gi_log
+    assert [m["gi_iters"] for m in run.server.metrics] == \
+        [m["gi_iters"] for m in sync_srv.metrics]
+
+
+def test_named_scenario_end_to_end():
+    run = scenarios.build("fedbuff_k4", seed=0, horizon=3.0, gi_iters=2)
+    summary = run.run()
+    assert summary["aggregations"] > 0
+    assert 0.0 <= summary["final_acc"] <= 1.0
+    assert summary["policy"] == "fedbuff_k4"
+    # version counter and Server history stayed aligned
+    assert len(run.server.history) == summary["version"] + 1
+
+
+def test_cli_list_and_registry():
+    from repro.sim.__main__ import main
+    assert main(["--list"]) == 0
+    assert {"degenerate_sync", "semi_sync_deadline", "pure_async",
+            "fedbuff_k4"} <= set(scenarios.names())
+    with pytest.raises(KeyError):
+        scenarios.build("no_such_scenario")
+
+
+@pytest.mark.slow
+def test_all_named_scenarios_run(tmp_path):
+    from repro.sim.__main__ import main
+    for name in scenarios.names():
+        out = tmp_path / f"{name}.json"
+        assert main(["--scenario", name, "--seed", "1", "--horizon", "4",
+                     "--gi-iters", "2", "--out", str(out)]) == 0
+        assert out.exists()
+
+
+@pytest.mark.slow
+def test_sim_replay_with_real_server():
+    a = scenarios.build("pure_async", seed=3, horizon=4.0, gi_iters=2).run()
+    b = scenarios.build("pure_async", seed=3, horizon=4.0, gi_iters=2).run()
+    assert a["trace_digest"] == b["trace_digest"]
+    assert a["final_acc"] == b["final_acc"]
