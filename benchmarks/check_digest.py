@@ -1,0 +1,61 @@
+"""Golden trace-digest gate: engine determinism must not regress silently.
+
+    PYTHONPATH=src python -m repro.sim --scenario fedbuff_k4 --seed 0 \
+        --strategy unweighted --out /tmp/sim.json
+    PYTHONPATH=src python -m benchmarks.check_digest --summary /tmp/sim.json \
+        --golden benchmarks/golden/fedbuff_k4_seed0.digest
+
+The trace digest fingerprints the event process (dispatch/upload/dropout/
+rejoin/aggregate/eval ordering) and is strategy-independent by design
+(``examples/simulate_async_fl.py`` asserts this), so CI runs the cheap
+``unweighted`` strategy. A mismatch means the engine's determinism contract
+changed — if intentional (new event kind, RNG draw order, policy change),
+regenerate the golden file with ``--update`` and say so in the PR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.check_digest")
+    ap.add_argument("--summary", required=True,
+                    help="JSON written by python -m repro.sim --out")
+    ap.add_argument("--golden", required=True,
+                    help="committed digest file (one hex digest per line 1)")
+    ap.add_argument("--update", action="store_true",
+                    help="write the observed digest to --golden instead of "
+                         "comparing")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.summary) as f:
+            digest = json.load(f)["trace_digest"]
+    except (OSError, ValueError, KeyError) as e:
+        print(f"error reading summary: {e}", file=sys.stderr)
+        return 2
+    if args.update:
+        with open(args.golden, "w") as f:
+            f.write(digest + "\n")
+        print(f"wrote {digest} to {args.golden}")
+        return 0
+    try:
+        with open(args.golden) as f:
+            golden = f.read().strip().splitlines()[0].strip()
+    except (OSError, IndexError) as e:
+        print(f"error reading golden file: {e}", file=sys.stderr)
+        return 2
+    if digest != golden:
+        print(f"trace digest mismatch: observed {digest}, golden {golden}\n"
+              f"the event engine's determinism contract changed — if "
+              f"intentional, regenerate with --update and flag it in the PR",
+              file=sys.stderr)
+        return 1
+    print(f"trace digest ok ({digest})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

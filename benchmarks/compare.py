@@ -1,0 +1,165 @@
+"""Benchmark-regression gate: fresh bench-v1 JSON vs a committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline benchmarks/BENCH_baseline.json --fresh /tmp/bench.json
+
+Gated rows (everything else is informational):
+
+* ``sim/engine_*``  — engine throughput; FAILS when fresh ``events_per_sec``
+  drops below baseline / factor;
+* ``server/*``      — batched-GI hot-path wall time; FAILS when fresh
+  ``us_per_call`` exceeds baseline * factor.
+
+``--max-slowdown-factor`` defaults to 1.25 (the >25% gate). Slowdowns are
+**canary-normalized**: both JSONs carry ``calibration/*`` rows (fixed
+reference workloads measured in the same process), and the gate divides the
+baseline/fresh canary ratio out of every gated row — a uniformly slower or
+busier machine does not fail the gate; only code-specific slowdowns do.
+Rows present in the baseline but missing from the fresh run FAIL (a renamed
+or dropped benchmark must be an explicit baseline refresh, not a silent
+skip).
+Zero/absent measurements are asymmetric on purpose: a zero in the
+*baseline* ungates the row (it was recorded as skipped, e.g. a mesh row
+captured on a single-device host), but a zero in the *fresh* run FAILS —
+if the baseline measured it, the fresh environment losing the measurement
+(say, the CI job dropping ``XLA_FLAGS``) would otherwise silently ungate
+the sharded path. Exit status: 0 pass, 1 regression, 2 usage/file errors.
+
+Refreshing the baseline after an intentional perf change:
+
+    PYTHONPATH=src python -m benchmarks.run --only sim,server \
+        --json benchmarks/BENCH_baseline.json
+
+(or download the ``bench-fresh`` artifact from the CI run and commit it —
+see docs/sharded_server.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+GATED_PREFIXES = ("sim/engine_", "server/")
+
+# calibration canaries (benchmarks/run.py::calibrate): fixed reference
+# workloads whose baseline/fresh ratio measures machine-wide speed, which
+# the gate divides out so only code-specific slowdowns fail. Rows fall back
+# to raw comparison when either file lacks the canary.
+CANARY_FOR = {"events_per_sec": "calibration/python_loop",
+              "us_per_call": "calibration/jax_spmv"}
+
+
+def _load(path: str) -> Dict[str, Dict[str, Any]]:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "bench-v1":
+        raise ValueError(f"{path}: not a bench-v1 document")
+    return {r["name"]: r for r in doc["rows"]}
+
+
+def _gate_value(row: Dict[str, Any]) -> Optional[Tuple[str, float, bool]]:
+    """(metric_name, value, higher_is_better) for a gated row, else None."""
+    if not any(row["name"].startswith(p) for p in GATED_PREFIXES):
+        return None
+    eps = row.get("metrics") or {}
+    if "events_per_sec" in eps:
+        v = float(eps["events_per_sec"])
+        return ("events_per_sec", v, True) if v > 0 else None
+    v = float(row.get("us_per_call") or 0.0)
+    return ("us_per_call", v, False) if v > 0 else None
+
+
+def _canary_scale(baseline: Dict[str, Dict[str, Any]],
+                  fresh: Dict[str, Dict[str, Any]], metric: str,
+                  brow: Dict[str, Any], frow: Dict[str, Any]) -> float:
+    """fresh-machine slowdown factor for one gated row (1.0 = no canary).
+
+    Prefers the row's own paired canary (``metrics.canary_us``, measured
+    interleaved with the row so both saw the same load window); falls back
+    to the run-level ``calibration/*`` rows."""
+    bv = float((brow.get("metrics") or {}).get("canary_us") or 0.0)
+    fv = float((frow.get("metrics") or {}).get("canary_us") or 0.0)
+    if bv > 0 and fv > 0:
+        return fv / bv
+    name = CANARY_FOR.get(metric)
+    bcal = baseline.get(name) if name else None
+    fcal = fresh.get(name) if name else None
+    if not bcal or not fcal:
+        return 1.0
+    bv = float(bcal.get("us_per_call") or 0.0)
+    fv = float(fcal.get("us_per_call") or 0.0)
+    return fv / bv if bv > 0 and fv > 0 else 1.0
+
+
+def compare(baseline: Dict[str, Dict[str, Any]],
+            fresh: Dict[str, Dict[str, Any]],
+            factor: float) -> List[str]:
+    """Returns failure messages (empty = gate passes)."""
+    failures: List[str] = []
+    for name, brow in sorted(baseline.items()):
+        gate = _gate_value(brow)
+        if gate is None:
+            continue
+        metric, bval, higher_better = gate
+        frow = fresh.get(name)
+        if frow is None:
+            failures.append(f"{name}: present in baseline but missing from "
+                            f"the fresh run")
+            continue
+        fgate = _gate_value(frow)
+        if fgate is None:
+            failures.append(f"{name}: fresh run has no usable {metric} "
+                            f"measurement")
+            continue
+        fval = fgate[1]
+        scale = _canary_scale(baseline, fresh, metric, brow, frow)
+        if higher_better:
+            # credit throughput for machine-wide slowdown before gating
+            adj = fval * scale
+            ratio = bval / adj
+            verdict = f"{fval:.0f} vs baseline {bval:.0f} {metric}"
+        else:
+            adj = fval / scale
+            ratio = adj / bval
+            verdict = f"{fval:.1f} vs baseline {bval:.1f} {metric}"
+        ok = ratio <= factor
+        line = (f"{name}: {verdict} (machine x{scale:.2f}, code slowdown "
+                f"x{ratio:.2f}, gate x{factor:.2f})")
+        if ok:
+            print(f"PASS {line}")
+        else:
+            failures.append(line)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.compare")
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--max-slowdown-factor", type=float, default=1.25,
+                    help="fail when slower than baseline by more than this "
+                         "factor (default 1.25 = the >25%% gate)")
+    args = ap.parse_args(argv)
+    try:
+        baseline = _load(args.baseline)
+        fresh = _load(args.fresh)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    failures = compare(baseline, fresh, args.max_slowdown_factor)
+    if failures:
+        for msg in failures:
+            print(f"FAIL {msg}", file=sys.stderr)
+        print(f"{len(failures)} benchmark regression(s) beyond the "
+              f"{(args.max_slowdown_factor - 1) * 100:.0f}% gate; if "
+              f"intentional, refresh benchmarks/BENCH_baseline.json "
+              f"(see module docstring)", file=sys.stderr)
+        return 1
+    print("benchmark gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,6 +36,22 @@ def tree_stack(trees) -> Any:
     return jax.tree_util.tree_map(lambda *a: jnp.stack(a), *trees)
 
 
+def tree_pad_leading(tree: Any, pad: int) -> Any:
+    """Pad every leaf's leading (cohort) axis by repeating row 0 ``pad``
+    times — how the batched/sharded engines fill compile buckets (padded
+    lanes run with a zero iteration budget and are discarded)."""
+    if pad == 0:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])], axis=0), tree)
+
+
+def tree_take_leading(tree: Any, n: int) -> Any:
+    """Drop bucket padding: the first ``n`` rows of every leaf."""
+    return jax.tree_util.tree_map(lambda a: a[:n], tree)
+
+
 def tree_sub(a: Any, b: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)

@@ -32,6 +32,14 @@ Two execution engines:
   ``(w_base, w_stale, mask, drec_init)`` pytrees in, stacked ``D_rec`` out —
   no per-iteration or per-client Python dispatch. Batch sizes are padded to
   the next power of two so recompiles are O(log B) instead of O(#distinct B).
+
+Passing ``mesh=`` (a ``(pod, data)`` mesh from
+``repro.launch.mesh.make_server_mesh``) shards the batched engine over
+devices with ``shard_map``: the cohort axis splits across shards, each shard
+runs its own vmapped while_loop (so a shard whose lanes all early-stop
+finishes independently — no cross-device lockstep), and the pow2 compile
+buckets become *per-shard* buckets. A 1-device mesh dispatches to the
+unsharded engine and is therefore bit-for-bit identical to ``mesh=None``.
 """
 
 from __future__ import annotations
@@ -44,7 +52,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.client import LocalProgram, make_local_update
-from repro.core.disparity import l1_disparity, tree_sub, tree_to_vector
+from repro.core.disparity import (l1_disparity, tree_pad_leading, tree_sub,
+                                  tree_take_leading, tree_to_vector)
+from repro.launch.mesh import mesh_shard_count, shard_map_compat
+from repro.launch.sharding import cohort_spec, replicated_spec, shard_bucket
 from repro.optim import adam, apply_updates
 
 
@@ -60,29 +71,26 @@ class GIConfig:
     warm_start: bool = True
 
 
-def _pad_leading(tree: Any, pad: int) -> Any:
-    """Pad every leaf's leading (batch) axis by repeating row 0 ``pad`` times."""
-    if pad == 0:
-        return tree
-    return jax.tree_util.tree_map(
-        lambda a: jnp.concatenate(
-            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])], axis=0), tree)
-
-
-def _take_leading(tree: Any, n: int) -> Any:
-    return jax.tree_util.tree_map(lambda a: a[:n], tree)
+# kept under their historic names for the module's internal call sites
+_pad_leading = tree_pad_leading
+_take_leading = tree_take_leading
 
 
 class GradientInverter:
     """Builds and runs the jitted GI optimization for a given small model."""
 
     def __init__(self, apply_fn: Callable, input_shape: Tuple[int, ...],
-                 n_classes: int, program: LocalProgram, cfg: GIConfig):
+                 n_classes: int, program: LocalProgram, cfg: GIConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         self.apply_fn = apply_fn
         self.input_shape = tuple(input_shape)
         self.n_classes = n_classes
         self.program = program
         self.cfg = cfg
+        # (pod, data) cohort mesh; >1 shard routes the batched engine
+        # through shard_map (a 1-shard mesh is bit-for-bit the plain engine)
+        self.mesh = mesh
+        self.n_shards = mesh_shard_count(mesh)
         self.local_update = make_local_update(apply_fn, program)
         self._step = jax.jit(self._make_step())
         # single-compile engines (cached jits; satellite: no per-call re-jit)
@@ -96,6 +104,9 @@ class GradientInverter:
         # max_iters (normally just cfg.iters) — every dynamic per-client
         # iteration budget <= max_iters reuses the same executable
         self._invert_many_cache: Dict[int, Callable] = {}
+        # sharded variants, keyed by (max_iters, has_mask)
+        self._invert_sharded_cache: Dict[Tuple[int, bool], Callable] = {}
+        self._estimate_sharded: Optional[Callable] = None
 
     def _get_invert_many(self, max_iters: int) -> Callable:
         fn = self._invert_many_cache.get(max_iters)
@@ -103,6 +114,31 @@ class GradientInverter:
             core = partial(self._invert_core, max_iters=max_iters)
             fn = jax.jit(jax.vmap(core, in_axes=(0, 0, 0, 0, 0)))
             self._invert_many_cache[max_iters] = fn
+        return fn
+
+    def _get_invert_many_sharded(self, max_iters: int, has_mask: bool
+                                 ) -> Callable:
+        """shard_map over the cohort axis: each shard runs the same vmapped
+        while_loop on its local pow2 bucket. All operands are stacked on the
+        batch axis, so there is no cross-shard communication — shards with
+        early-stopping lanes finish independently instead of waiting for the
+        slowest lane of the whole cohort. Always built over ``self.mesh``
+        (the cache key assumes it)."""
+        mesh = self.mesh
+        key = (max_iters, has_mask)
+        fn = self._invert_sharded_cache.get(key)
+        if fn is None:
+            core = partial(self._invert_core, max_iters=max_iters)
+            vm = jax.vmap(core, in_axes=(0, 0, 0, 0, 0))
+            ax = cohort_spec(mesh)
+            if has_mask:
+                body, n_in = vm, 5
+            else:
+                body = lambda wg, tgt, d0, ni: vm(wg, tgt, None, d0, ni)  # noqa: E731
+                n_in = 4
+            fn = jax.jit(shard_map_compat(
+                body, mesh, in_specs=(ax,) * n_in, out_specs=ax))
+            self._invert_sharded_cache[key] = fn
         return fn
 
     # ------------------------------------------------------------------ #
@@ -210,21 +246,15 @@ class GradientInverter:
         Returns ``((x', y') stacked, info)`` with per-client ``losses``
         (B, max_iters; NaN past the used prefix), ``final_loss`` and
         ``iters_used`` arrays.
+
+        With a multi-shard ``mesh``, the batch is padded to ``n_shards``
+        equal per-shard pow2 buckets and run through the shard_map engine;
+        on a 1-shard mesh (or ``mesh=None``) the bucket reduces to the
+        global pow2 bucket and the plain vmapped engine runs — the same
+        computation, bit for bit.
         """
         B = jax.tree_util.tree_leaves(w_stale)[0].shape[0]
         target = tree_sub(w_stale, w_global_stale)
-
-        fresh = self._init_many(keys)
-        if inits is not None:
-            if init_flags is None:
-                drec0 = inits
-            else:
-                drec0 = jax.tree_util.tree_map(
-                    lambda w, c: jnp.where(
-                        init_flags.reshape((B,) + (1,) * (w.ndim - 1)), w, c),
-                    inits, fresh)
-        else:
-            drec0 = fresh
 
         max_iters = int(self.cfg.iters)
         if iters is None:
@@ -234,20 +264,52 @@ class GradientInverter:
             max_iters = max(max_iters, int(jnp.max(n_arr)))
             n_iters = jnp.broadcast_to(n_arr, (B,))
 
-        # pad the batch to the next power of two: one compile per bucket,
-        # padded lanes get n_iters=0 so the vmapped while_loop masks them out
-        Bp = 1
-        while Bp < B:
-            Bp *= 2
+        # pad the batch to per-shard pow2 buckets (global pow2 when
+        # unsharded): one compile per bucket, padded lanes get n_iters=0 so
+        # the vmapped while_loop masks them out
+        Bp = shard_bucket(B, self.n_shards)
         pad = Bp - B
+
+        # cold-start inits are padded BEFORE blending so warm starts may
+        # arrive either unpadded (B) or already bucketed (Bp, e.g. from
+        # ``WarmStartCache.gather_sharded``); padded lanes always run from
+        # the repeated fresh row and are discarded
+        fresh = _pad_leading(self._init_many(keys), pad)
+        if inits is not None:
+            Bi = jax.tree_util.tree_leaves(inits)[0].shape[0]
+            if Bi == B:
+                inits = _pad_leading(inits, pad)
+            elif Bi != Bp:
+                raise ValueError(f"inits leading dim {Bi} is neither the "
+                                 f"cohort size {B} nor its bucket {Bp}")
+            if init_flags is None:
+                drec0 = inits
+            else:
+                flags = jnp.concatenate(
+                    [jnp.asarray(init_flags, bool),
+                     jnp.zeros((Bp - init_flags.shape[0],), bool)])
+                drec0 = jax.tree_util.tree_map(
+                    lambda w, c: jnp.where(
+                        flags.reshape((Bp,) + (1,) * (w.ndim - 1)), w, c),
+                    inits, fresh)
+        else:
+            drec0 = fresh
+
         args = (_pad_leading(w_global_stale, pad), _pad_leading(target, pad),
                 None if masks is None else _pad_leading(masks, pad),
-                _pad_leading(drec0, pad),
+                drec0,
                 jnp.concatenate([n_iters, jnp.zeros((pad,), jnp.int32)]))
-        drec, losses, final_loss, used = self._get_invert_many(max_iters)(*args)
+        if self.n_shards > 1:
+            fn = self._get_invert_many_sharded(max_iters, masks is not None)
+            args = args[:2] + args[3:] if masks is None else args
+            drec, losses, final_loss, used = fn(*args)
+        else:
+            drec, losses, final_loss, used = \
+                self._get_invert_many(max_iters)(*args)
         drec = _take_leading(drec, B)
         info = {"losses": losses[:B], "final_loss": final_loss[:B],
-                "iters_used": used[:B], "batch": B, "padded_to": Bp}
+                "iters_used": used[:B], "batch": B, "padded_to": Bp,
+                "n_shards": self.n_shards}
         return drec, info
 
     # ------------------------------------------------------------------ #
@@ -293,6 +355,24 @@ class GradientInverter:
 
     def estimate_unstale_batch(self, w_global_now: Any,
                                drec: Tuple[jax.Array, jax.Array]) -> Any:
-        """Stacked w_hat for a batch of D_rec (one jitted vmap call)."""
+        """Stacked w_hat for a batch of D_rec (one jitted vmap call).
+
+        On a multi-shard mesh the D_rec batch shards on the cohort axis and
+        ``w_global_now`` replicates (it is the one cohort-invariant
+        operand); a 1-shard mesh uses the plain vmap bit-for-bit.
+        """
         x, y = drec
-        return self._estimate_many(w_global_now, x, y)
+        if self.n_shards <= 1:
+            return self._estimate_many(w_global_now, x, y)
+        if self._estimate_sharded is None:
+            ax = cohort_spec(self.mesh)
+            self._estimate_sharded = jax.jit(shard_map_compat(
+                jax.vmap(lambda w, xx, yy: self.local_update(w, xx, yy)[0],
+                         in_axes=(None, 0, 0)),
+                self.mesh,
+                in_specs=(replicated_spec(), ax, ax), out_specs=ax))
+        B = x.shape[0]
+        Bp = shard_bucket(B, self.n_shards)
+        w_hat = self._estimate_sharded(
+            w_global_now, _pad_leading(x, Bp - B), _pad_leading(y, Bp - B))
+        return _take_leading(w_hat, B)

@@ -12,8 +12,10 @@ Strategies (paper §4 baselines + ours):
 
 The cohort is vectorized: fast clients are vmapped over a stacked shard
 tensor; slow clients are vmapped per staleness group; GI runs vmapped over
-all unique stale clients. At production scale the same cohort axis is what
-``repro.launch`` shards over the (pod, data) mesh axes.
+all unique stale clients. Passing ``mesh=`` (a (pod, data) cohort mesh from
+``repro.launch.mesh.make_server_mesh``) shard_maps that cohort axis over
+devices — see docs/sharded_server.md; a 1-shard mesh is bit-for-bit the
+single-device engine.
 """
 
 from __future__ import annotations
@@ -27,12 +29,16 @@ import numpy as np
 
 from repro.core import aggregation, compensation, tiers
 from repro.core.client import LocalProgram, make_local_update, soft_ce_loss
-from repro.core.disparity import tree_scale, tree_stack, tree_sub
+from repro.core.disparity import (tree_pad_leading, tree_scale, tree_stack,
+                                  tree_sub, tree_take_leading)
 from repro.core.gradient_inversion import GIConfig, GradientInverter
 from repro.core.sparsify import WarmStartCache, topk_mask_batch
 from repro.core.switching import SwitchMonitor
 from repro.core.uniqueness import is_unique_batch
 from repro.data.staleness import StalenessSchedule
+from repro.launch.mesh import mesh_shard_count, shard_map_compat
+from repro.launch.sharding import (cohort_spec, replicated_spec,
+                                   shard_bucket)
 
 STRATEGIES = ("unweighted", "weighted", "first_order", "w_pred",
               "asyn_tiers", "ours", "unstale")
@@ -61,7 +67,8 @@ class Server:
                  client_x: np.ndarray, client_y: np.ndarray,
                  client_mask: np.ndarray, schedule: StalenessSchedule,
                  test_x: np.ndarray, test_y: np.ndarray,
-                 variant_stream=None):
+                 variant_stream=None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         assert cfg.strategy in STRATEGIES, cfg.strategy
         self.model = model
         self.program = program
@@ -70,6 +77,16 @@ class Server:
         self.variant = variant_stream
         self.test_x = jnp.asarray(test_x)
         self.test_y = jnp.asarray(test_y)
+
+        # (pod, data) cohort mesh (repro.launch.mesh.make_server_mesh): with
+        # >1 shard every cohort-batched hot path — fresh/stale LocalUpdates,
+        # top-K masks, warm-start gathers, the batched GI while_loop and the
+        # unstale estimates — runs under shard_map with the client axis
+        # split across shards. A 1-shard mesh (or None) dispatches to the
+        # single-device engines, bit for bit.
+        self.mesh = mesh
+        self._n_shards = mesh_shard_count(mesh)
+        self._cohort_update_sharded = None     # built lazily on first use
 
         self.key = jax.random.PRNGKey(cfg.seed)
         self.global_params = model.init(jax.random.PRNGKey(cfg.seed + 1))
@@ -81,6 +98,7 @@ class Server:
         self.n_clients = client_x.shape[0]
 
         _lu = make_local_update(model.apply, program)
+        self._lu_fn = _lu
         self._local_update = jax.jit(_lu)
         self._cohort_update = jax.jit(
             jax.vmap(lambda p, x, y, m: _lu(p, x, y, m)[0],
@@ -89,7 +107,8 @@ class Server:
 
         # "ours" machinery
         self.inverter = GradientInverter(
-            model.apply, model.input_shape, model.n_classes, program, cfg.gi)
+            model.apply, model.input_shape, model.n_classes, program, cfg.gi,
+            mesh=mesh)
         self.warm = WarmStartCache()
         self.monitor = SwitchMonitor()
         # due_round -> [(scheduled_round, client, w_hat, w_stale), ...]
@@ -121,6 +140,30 @@ class Server:
         return (jnp.asarray(self.cx[i]), jnp.asarray(self.cy[i]),
                 jnp.asarray(self.cmask[i]))
 
+    def _run_cohort(self, w_base, xs, ys, ms):
+        """Vectorized LocalUpdate over a stacked cohort.
+
+        With a multi-shard mesh the cohort axis splits across shards
+        (clients are independent — no collectives), padded to the cohort
+        shard bucket; otherwise the plain jitted vmap runs unchanged.
+        """
+        if self._n_shards <= 1:
+            return self._cohort_update(w_base, xs, ys, ms)
+        if self._cohort_update_sharded is None:
+            ax = cohort_spec(self.mesh)
+            lu = self._lu_fn
+            self._cohort_update_sharded = jax.jit(shard_map_compat(
+                jax.vmap(lambda p, x, y, m: lu(p, x, y, m)[0],
+                         in_axes=(None, 0, 0, 0)),
+                self.mesh,
+                in_specs=(replicated_spec(), ax, ax, ax), out_specs=ax))
+        B = xs.shape[0]
+        pad = shard_bucket(B, self._n_shards) - B
+        ws = self._cohort_update_sharded(
+            w_base, tree_pad_leading(xs, pad), tree_pad_leading(ys, pad),
+            tree_pad_leading(ms, pad))
+        return tree_take_leading(ws, B)
+
     def compute_deliveries(self, t: int, pairs: Sequence[Tuple[int, int]]
                            ) -> Dict[int, Tuple[Any, Any, int]]:
         """Materialize stale deliveries ``{client: (w_stale, w_base, tau_eff)}``.
@@ -142,7 +185,7 @@ class Server:
             xs = jnp.stack([self.cx[i] for i in members])
             ys = jnp.stack([self.cy[i] for i in members])
             ms = jnp.stack([self.cmask[i] for i in members])
-            ws = self._cohort_update(w_base, xs, ys, ms)
+            ws = self._run_cohort(w_base, xs, ys, ms)
             for j, i in enumerate(members):
                 w_i = jax.tree_util.tree_map(lambda a: a[j], ws)
                 out[i] = (w_i, w_base, t - base_t)
@@ -184,7 +227,7 @@ class Server:
             xs = jnp.stack([self.cx[i] for i in fast])
             ys = jnp.stack([self.cy[i] for i in fast])
             ms = jnp.stack([self.cmask[i] for i in fast])
-            w_fast = self._cohort_update(self.global_params, xs, ys, ms)
+            w_fast = self._run_cohort(self.global_params, xs, ys, ms)
             fast_updates = [
                 tree_sub(jax.tree_util.tree_map(lambda a: a[j], w_fast),
                          self.global_params)
@@ -310,7 +353,7 @@ class Server:
         masks = None
         if cfg.gi.keep_fraction < 1.0:
             masks = topk_mask_batch([stale_deltas[i] for i in gi_ids],
-                                    cfg.gi.keep_fraction)
+                                    cfg.gi.keep_fraction, mesh=self.mesh)
 
         # split per client in delivery order — reproduces the seed engine's
         # exact PRNG stream, so cold-start inits match the sequential path
@@ -323,7 +366,14 @@ class Server:
         if cfg.batched_gi:
             inits, flags = None, None
             if cfg.gi.warm_start:
-                xs, ys, warm = self.warm.gather(gi_ids)
+                if self._n_shards > 1:
+                    # pre-bucketed + mesh-placed; survives round-to-round
+                    # reshards because the cache itself is host-resident
+                    xs, ys, warm = self.warm.gather_sharded(
+                        gi_ids, self.mesh,
+                        pad_to=shard_bucket(len(gi_ids), self._n_shards))
+                else:
+                    xs, ys, warm = self.warm.gather(gi_ids)
                 if xs is not None:
                     inits, flags = (xs, ys), jnp.asarray(warm)
             drec, info = self.inverter.invert_batch(

@@ -29,9 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.disparity import tree_to_vector
+from repro.core.disparity import tree_pad_leading, tree_to_vector
 from repro.kernels.sparsify_mask import (topk_binary_mask,
-                                         topk_binary_mask_batch)
+                                         topk_binary_mask_batch,
+                                         topk_binary_mask_batch_sharded)
+from repro.launch.mesh import mesh_shard_count
+from repro.launch.sharding import cohort_sharding, shard_bucket
 
 # below this many coordinates the top_k + compare is cheaper than a kernel
 # launch (and the Pallas interpreter), so stay in pure jnp
@@ -65,12 +68,25 @@ def topk_mask(update: Any, keep_fraction: float,
 
 
 def topk_mask_batch(updates: Sequence[Any], keep_fraction: float,
-                    use_kernel: Optional[bool] = None) -> jax.Array:
-    """(B, n) boolean masks for a batch of update pytrees in one launch."""
+                    use_kernel: Optional[bool] = None,
+                    mesh=None) -> jax.Array:
+    """(B, n) boolean masks for a batch of update pytrees in one launch.
+
+    With a multi-shard ``mesh`` the rows are padded to the cohort shard
+    bucket and masked per shard (kernel grid per shard, jnp fallback on CPU
+    shards); thresholds are row-local so the sharded masks equal the
+    unsharded ones exactly. The returned array is always unpadded (B, n).
+    """
     vecs = jnp.stack([tree_to_vector(u) for u in updates])
     B, n = vecs.shape
     if keep_fraction >= 1.0:
         return jnp.ones((B, n), bool)
+    n_shards = mesh_shard_count(mesh)
+    if mesh is not None and n_shards > 1:
+        Bp = shard_bucket(B, n_shards)
+        vecs = tree_pad_leading(vecs, Bp - B)   # row-0 pads, masked out after
+        return topk_binary_mask_batch_sharded(
+            vecs, float(keep_fraction), mesh)[:B]
     if use_kernel is None:
         use_kernel = _kernel_default(n)
     if use_kernel:
@@ -160,9 +176,40 @@ class WarmStartCache:
         ys[~warm] = 0
         return jnp.asarray(xs), jnp.asarray(ys), warm
 
+    def gather_sharded(self, client_ids: Sequence[int], mesh,
+                       pad_to: Optional[int] = None
+                       ) -> Tuple[Optional[jax.Array], Optional[jax.Array],
+                                  np.ndarray]:
+        """``gather`` placed onto a cohort mesh.
+
+        Because storage is host-resident numpy keyed by client id, warm
+        starts survive arbitrary *resharding* between rounds: a batch put
+        from a 4-shard mesh gathers identically onto a 2-shard (or fresh)
+        mesh the next round. ``pad_to`` zero-pads rows up to the cohort
+        shard bucket so the placed arrays divide the mesh evenly; padded
+        ``warm`` entries are False. Returns unsharded host values when
+        ``mesh`` is a single shard (bit-for-bit the plain ``gather``).
+        """
+        xs, ys, warm = self.gather(client_ids)
+        n = len(client_ids) if pad_to is None else int(pad_to)
+        if n > len(warm):
+            warm = np.concatenate([warm, np.zeros(n - len(warm), bool)])
+        if xs is None or mesh is None or mesh_shard_count(mesh) <= 1:
+            return xs, ys, warm
+        pad = n - xs.shape[0]
+        if pad > 0:
+            xs = jnp.concatenate(
+                [xs, jnp.zeros((pad, *xs.shape[1:]), xs.dtype)])
+            ys = jnp.concatenate(
+                [ys, jnp.zeros((pad, *ys.shape[1:]), ys.dtype)])
+        sh = cohort_sharding(mesh)
+        return jax.device_put(xs, sh), jax.device_put(ys, sh), warm
+
     def put_stacked(self, client_ids: Sequence[int],
                     xs: jax.Array, ys: jax.Array) -> None:
-        """Store a round's recovered D_rec batch: row b -> client_ids[b]."""
+        """Store a round's recovered D_rec batch: row b -> client_ids[b]
+        (device layout is irrelevant: rows land in the host buffers, so a
+        batch recovered on one mesh warm-starts any future mesh)."""
         xs = np.asarray(xs)
         ys = np.asarray(ys)
         for b, i in enumerate(client_ids):

@@ -1,6 +1,7 @@
 from repro.kernels.sparsify_mask.ops import (sparsify_mask,  # noqa: F401
                                              topk_binary_mask,
                                              topk_binary_mask_batch,
+                                             topk_binary_mask_batch_sharded,
                                              topk_threshold,
                                              topk_threshold_batch)
 from repro.kernels.sparsify_mask.ref import sparsify_mask_reference  # noqa: F401

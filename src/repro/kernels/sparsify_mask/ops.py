@@ -80,3 +80,54 @@ def topk_binary_mask_batch(u2: jax.Array, keep_fraction: float,
     out = sparsify_mask_batch_pallas(u3d, thresh.reshape(B, 1), binary=True,
                                      interpret=interpret)
     return out.reshape(B, -1)[:, :n] >= 0.5
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_mask_fn(mesh, keep_fraction: float):
+    """One jitted shard_map executable per (mesh, keep_fraction) — cached so
+    round-to-round calls with the same cohort bucket reuse the compile."""
+    from repro.launch.mesh import shard_map_compat
+    from repro.launch.sharding import cohort_spec
+
+    # kernel only on TPU, matching the unsharded path's backend policy
+    # (repro.core.sparsify._kernel_default): on CPU it would run
+    # interpreted inside every shard, and the TPU memory spaces don't
+    # lower on GPU — both take the exactly-equivalent jnp compare
+    on_tpu = jax.default_backend() == "tpu"
+
+    def body(u_local: jax.Array) -> jax.Array:
+        if not on_tpu:
+            thresh = topk_threshold_batch(u_local, keep_fraction)
+            return jnp.abs(u_local) >= thresh[:, None]
+        # TPU shards reuse the single-launch batched kernel on their local
+        # (B_local, tiles) grid
+        return topk_binary_mask_batch(jnp.abs(u_local), keep_fraction,
+                                      interpret=False)
+
+    ax = cohort_spec(mesh)
+    return jax.jit(shard_map_compat(body, mesh, in_specs=(ax,),
+                                    out_specs=ax))
+
+
+def topk_binary_mask_batch_sharded(u2: jax.Array, keep_fraction: float,
+                                   mesh) -> jax.Array:
+    """Sharded form of ``topk_binary_mask_batch``: the cohort (row) axis is
+    split over the mesh's data axes and each shard masks its local
+    ``(B_local, tiles)`` grid with one kernel launch. Thresholds are
+    row-local (per-client top-K), so no cross-shard communication happens.
+
+    On CPU shards the batched Pallas grid falls back to the equivalent
+    pure-jnp compare (the kernel only *interprets* on CPU, which inside
+    shard_map would run per shard per call); TPU/accelerator shards keep
+    the kernel's local (B_local, tiles) grid. Rows must already be padded
+    to a multiple of the shard count
+    (``repro.launch.sharding.shard_bucket``); the sharded and unsharded
+    masks are identical booleans, not approximations.
+    """
+    from repro.launch.mesh import mesh_shard_count
+
+    n_shards = mesh_shard_count(mesh)
+    B = u2.shape[0]
+    if B % n_shards:
+        raise ValueError(f"rows B={B} not a multiple of shards {n_shards}")
+    return _sharded_mask_fn(mesh, float(keep_fraction))(u2)

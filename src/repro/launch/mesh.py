@@ -1,18 +1,26 @@
-"""Production mesh definition (TPU v5e).
+"""Production mesh definition (TPU v5e) + the FL server's cohort mesh.
 
 Single pod: 16 x 16 = 256 chips, axes (data, model).
 Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model).
 
-Defined as a FUNCTION so importing this module never touches jax device
+The FL server hot path (batched gradient inversion + aggregation over a
+stale cohort) shards its *client/batch* axis over a ``(pod, data)`` mesh —
+``make_server_mesh`` builds one from however many devices are available
+(on CPU, ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` fabricates
+N host devices). A 1-device server mesh is the oracle: it must reproduce
+the unsharded batched trajectory bit-for-bit (see docs/sharded_server.md).
+
+Defined as FUNCTIONS so importing this module never touches jax device
 state — the dry-run sets XLA_FLAGS before any jax import to fabricate the
 512 host devices.
 """
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 
 def make_mesh_compat(shape: Sequence[int], axes: Sequence[str]
@@ -44,6 +52,58 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate 1x1 mesh for CPU smoke runs of the launcher path."""
     return make_mesh_compat((1, 1), ("data", "model"))
+
+
+# --------------------------------------------------------------------------- #
+# Server cohort mesh (pod, data) — the batch axis the stale cohort shards on
+# --------------------------------------------------------------------------- #
+
+SERVER_MESH_AXES = ("pod", "data")
+
+
+def make_server_mesh(n_devices: Optional[int] = None, pods: int = 1
+                     ) -> jax.sharding.Mesh:
+    """(pod, data) mesh over the first ``n_devices`` available devices.
+
+    The server shards stale cohorts along ``(pod, data)`` jointly (there is
+    no model axis: the paper's GI models are tiny and replicate). Built with
+    ``jax.sharding.Mesh`` directly (not ``jax.make_mesh``) so a 1-device
+    mesh can be made on a multi-device host — that 1-device mesh is the
+    tier-1 bit-for-bit oracle.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_devices={n} not in [1, {len(devs)}]")
+    if n % pods:
+        raise ValueError(f"pods={pods} does not divide n_devices={n}")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(pods, n // pods), SERVER_MESH_AXES)
+
+
+def mesh_shard_count(mesh: Optional[jax.sharding.Mesh],
+                     axes: Sequence[str] = SERVER_MESH_AXES) -> int:
+    """Total shards along ``axes`` (1 for ``mesh=None`` / missing axes)."""
+    if mesh is None:
+        return 1
+    sizes = dict(mesh.shape)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def shard_map_compat(f, mesh: jax.sharding.Mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: new releases expose
+    ``jax.shard_map``; 0.4.x has ``jax.experimental.shard_map.shard_map``
+    (where replication checking must be disabled explicitly — the server's
+    per-shard while_loops have no collectives for it to reason about)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 # v5e hardware constants used by the roofline analysis (benchmarks/roofline).

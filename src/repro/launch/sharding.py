@@ -58,6 +58,48 @@ def data_axes(mesh: Mesh):
 
 
 # --------------------------------------------------------------------------- #
+# Server cohort specs: the stale-cohort batch axis shards on (pod, data)
+# --------------------------------------------------------------------------- #
+
+
+def cohort_spec(mesh: Mesh) -> P:
+    """Spec sharding a leading client/batch axis over every data axis; the
+    remaining dims (params, D_rec, mask coordinates, ...) replicate. This is
+    the one layout rule of the sharded server hot path — every stacked
+    cohort tensor (w_base/w_stale stacks, PRNG keys, masks, warm-start
+    buffers, D_rec) uses it (docs/sharded_server.md)."""
+    return P(data_axes(mesh))
+
+
+def replicated_spec() -> P:
+    """Spec for cohort-invariant operands (the current global model)."""
+    return P()
+
+
+def cohort_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding form of ``cohort_spec`` for host->device placement
+    (e.g. ``WarmStartCache.gather_sharded``)."""
+    return NamedSharding(mesh, cohort_spec(mesh))
+
+
+def shard_bucket(batch: int, n_shards: int) -> int:
+    """Padded cohort size: per-shard pow2 buckets x ``n_shards``.
+
+    Each shard keeps its own power-of-two compile bucket (the unsharded
+    engine's pow2 buckets, per shard), so recompiles stay O(log B) and every
+    shard receives the same local batch. ``n_shards=1`` reduces to the
+    unsharded engine's global pow2 bucket — the bit-for-bit anchor.
+    """
+    if batch <= 0:
+        return 0
+    local = -(-batch // n_shards)        # ceil
+    p = 1
+    while p < local:
+        p *= 2
+    return p * n_shards
+
+
+# --------------------------------------------------------------------------- #
 # Parameter specs
 # --------------------------------------------------------------------------- #
 

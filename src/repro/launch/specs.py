@@ -58,6 +58,31 @@ def decode_specs(cfg: ModelConfig, shape: InputShape
     return toks, cache, extras
 
 
+def gi_cohort_specs(params_shape: Any, input_shape: Tuple[int, ...],
+                    n_classes: int, n_rec: int, batch: int,
+                    masked: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one sharded batched-GI call over a ``batch``-
+    client stale cohort — what ``GradientInverter.invert_batch`` consumes
+    after bucketing (stacked base/stale weight pytrees, per-client PRNG
+    keys, optional flat masks, warm-start D_rec). Used by the dry-run and
+    the mesh tests to lower the sharded hot path without real weights.
+    """
+    stack = jax.tree_util.tree_map(
+        lambda l: SDS((batch, *l.shape), l.dtype), params_shape)
+    n_params = sum(int(jnp.prod(jnp.asarray(l.shape)))
+                   for l in jax.tree_util.tree_leaves(params_shape))
+    out: Dict[str, Any] = {
+        "w_base": stack,
+        "w_stale": stack,
+        "keys": SDS((batch, 2), jnp.uint32),
+        "drec_x": SDS((batch, n_rec, *input_shape), jnp.float32),
+        "drec_y": SDS((batch, n_rec, n_classes), jnp.float32),
+    }
+    if masked:
+        out["masks"] = SDS((batch, n_params), jnp.bool_)
+    return out
+
+
 def concrete_train_batch(cfg: ModelConfig, B: int, S: int, key) -> Dict[str, Any]:
     """Small concrete batch of the same structure (smoke tests / examples)."""
     ks = jax.random.split(key, 3)

@@ -39,6 +39,9 @@ def main(argv=None) -> int:
     ap.add_argument("--strategy", default=None,
                     help="FL server strategy override (default: scenario's)")
     ap.add_argument("--gi-iters", type=_gi_iters, default=None)
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="shard the server hot path over the first N devices "
+                         "((pod, data) cohort mesh; default: unsharded)")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args(argv)
 
@@ -52,6 +55,9 @@ def main(argv=None) -> int:
         overrides["strategy"] = args.strategy
     if args.gi_iters is not None:
         overrides["gi_iters"] = args.gi_iters
+    if args.mesh is not None:
+        from repro.launch.mesh import make_server_mesh
+        overrides["mesh"] = make_server_mesh(args.mesh)
     run = scenarios.build(args.scenario, seed=args.seed,
                           horizon=args.horizon, **overrides)
     summary = run.run()

@@ -16,6 +16,7 @@ up jax would drown the measurement.
 
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, List, Sequence, Tuple
 
 from repro.core.server import Server
@@ -60,14 +61,24 @@ class ServerBridge:
         assert eval_mode in ("server", "never", "always"), eval_mode
         self.server = server
         self.eval_mode = eval_mode
+        # per-aggregation wall-time rows: the batched-GI hot path's cost per
+        # trigger, consumed by ``benchmarks.run --only server`` and the
+        # ``repro.sweep`` trajectories
+        self.rows: List[Dict[str, Any]] = []
 
     def aggregate(self, version: int, fresh_ids: Sequence[int],
                   stale_pairs: Sequence[Tuple[int, int]]) -> Dict[str, Any]:
         assert version == len(self.server.history) - 1, \
             (version, len(self.server.history))
         eval_now = {"server": None, "never": False, "always": True}[self.eval_mode]
-        return self.server.step(version, fresh_ids, stale_pairs,
-                                eval_now=eval_now)
+        t0 = time.perf_counter()
+        row = self.server.step(version, fresh_ids, stale_pairs,
+                               eval_now=eval_now)
+        self.rows.append({"version": version, "n_fresh": len(fresh_ids),
+                          "n_stale": len(stale_pairs),
+                          "wall_s": time.perf_counter() - t0,
+                          "gi_iters": row.get("gi_iters", 0)})
+        return row
 
     def evaluate(self) -> float:
         return self.server.evaluate()[0]

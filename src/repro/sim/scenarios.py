@@ -91,7 +91,11 @@ def build(name: str, seed: int = 0, horizon: Optional[float] = None,
 
 def _fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
               n_slow: int = 3, tau=3, gi_iters: int = 8,
-              eval_every: int = 5):
+              eval_every: int = 5, mesh=None):
+    """``mesh`` is a (pod, data) cohort mesh from
+    ``repro.launch.mesh.make_server_mesh``: the scenario's Server then runs
+    its batched hot path sharded (every stock scenario accepts ``mesh=`` as
+    an override, and ``repro.sweep`` passes it when fanning seeds)."""
     x, y = make_feature_dataset(20, n_classes=N_CLASSES,
                                 n_features=N_FEATURES, seed=seed)
     tx, ty = make_feature_dataset(8, n_classes=N_CLASSES,
@@ -106,7 +110,7 @@ def _fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
                    eval_every=eval_every, seed=seed)
     server = Server(mlp3(n_features=N_FEATURES, n_classes=N_CLASSES,
                          hidden=24),
-                    prog, cfg, cx, cy, cm, sched, tx, ty)
+                    prog, cfg, cx, cy, cm, sched, tx, ty, mesh=mesh)
     return server, hist, sched
 
 
@@ -116,7 +120,8 @@ def _make_run(name, seed, server, fleet, policy, horizon, eval_every_time,
                        seed=seed, horizon=horizon,
                        eval_every_time=eval_every_time)
     meta.update({"policy": policy.name, "seed": seed, "horizon": horizon,
-                 "strategy": server.cfg.strategy})
+                 "strategy": server.cfg.strategy,
+                 "mesh_shards": server._n_shards})
     return SimRun(name, engine, server, meta)
 
 

@@ -1,0 +1,203 @@
+"""Sharded sweep runner: fan a sim scenario across seeds (and policies).
+
+    PYTHONPATH=src python -m repro.sweep --scenario fedbuff_k4 --seeds 8
+    PYTHONPATH=src python -m repro.sweep --scenario pure_async,fedbuff_k4 \
+        --seeds 4 --horizon 6 --gi-iters 3 --out /tmp/sweep
+
+Every (scenario, seed) pair is one event-driven simulation (repro.sim)
+whose Server runs the sharded cohort hot path when a mesh is available
+(``--mesh N``; ``auto`` uses every device, so under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` the whole sweep
+exercises the 4-shard engine). After the fan-out, all final models are
+evaluated in ONE sharded computation: the per-run parameters, test inputs
+and labels stack on a run axis that shard_maps over the same (pod, data)
+mesh — the sweep-level analogue of the server's cohort axis.
+
+Outputs:
+* ``<out>/trajectory_<scenario>_seed<k>.json`` — per-seed trajectory
+  (summary + eval curve + per-aggregation server metrics + step wall times);
+* ``<out>/sweep.json`` — merged rows in the same ``bench-v1`` schema that
+  ``benchmarks/run.py --json`` emits, so ``benchmarks/compare.py`` and the
+  CI artifact tooling consume either file interchangeably.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+SCHEMA = "bench-v1"
+
+
+def _build_mesh(spec: str):
+    """``none`` | ``auto`` | an integer device count -> mesh or None."""
+    import jax
+
+    from repro.launch.mesh import make_server_mesh
+    if spec == "none":
+        return None
+    if spec == "auto":
+        n = len(jax.devices())
+        return make_server_mesh(n) if n > 1 else None
+    return make_server_mesh(int(spec))
+
+
+def _stacked_eval(runs, mesh) -> Optional[np.ndarray]:
+    """Final accuracy of every run's model as one sharded computation.
+
+    Stacks (params, test_x, test_y) on a leading run axis and shard_maps the
+    vmapped eval over the cohort mesh (plain vmap when unsharded). Falls
+    back to None when the runs don't share one model/test geometry (mixed
+    custom scenarios) — callers then keep the per-run accuracies.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.disparity import (tree_pad_leading, tree_stack,
+                                      tree_take_leading)
+    from repro.launch.mesh import mesh_shard_count, shard_map_compat
+    from repro.launch.sharding import cohort_spec, shard_bucket
+
+    shapes = {(tuple(r.server.test_x.shape), tuple(r.server.test_y.shape))
+              for r in runs}
+    if len(shapes) != 1:
+        return None
+    model = runs[0].server.model
+    params = tree_stack([r.server.global_params for r in runs])
+    tx = jnp.stack([r.server.test_x for r in runs])
+    ty = jnp.stack([r.server.test_y for r in runs])
+
+    def acc_one(p, x, y):
+        pred = jnp.argmax(model.apply(p, x), -1)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+    vm = jax.vmap(acc_one)
+    n_shards = mesh_shard_count(mesh)
+    if n_shards <= 1:
+        return np.asarray(jax.jit(vm)(params, tx, ty))
+    R = len(runs)
+    pad = shard_bucket(R, n_shards) - R
+    ax = cohort_spec(mesh)
+    fn = jax.jit(shard_map_compat(vm, mesh, in_specs=(ax, ax, ax),
+                                  out_specs=ax))
+    accs = fn(tree_pad_leading(params, pad), tree_pad_leading(tx, pad),
+              tree_pad_leading(ty, pad))
+    return np.asarray(tree_take_leading(accs, R))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sweep")
+    ap.add_argument("--scenario", required=True,
+                    help="scenario name, or comma-separated list "
+                         "(see python -m repro.sim --list)")
+    ap.add_argument("--seeds", type=int, default=4,
+                    help="fan seeds 0..N-1 per scenario (default 4)")
+    ap.add_argument("--horizon", type=float, default=None)
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--gi-iters", type=int, default=None)
+    ap.add_argument("--mesh", default="auto",
+                    help="'auto' (all devices), 'none', or a device count "
+                         "for the (pod, data) cohort mesh")
+    ap.add_argument("--out", default="sweep_out",
+                    help="output directory (default ./sweep_out)")
+    args = ap.parse_args(argv)
+
+    from repro.sim import scenarios
+
+    names = [s for s in args.scenario.split(",") if s]
+    unknown = [s for s in names if s not in scenarios.names()]
+    if unknown:
+        print(f"unknown scenario(s) {unknown}; have {scenarios.names()}",
+              file=sys.stderr)
+        return 2
+    if args.seeds < 1:
+        print("--seeds must be >= 1", file=sys.stderr)
+        return 2
+
+    mesh = _build_mesh(args.mesh)
+    overrides: Dict[str, Any] = {"mesh": mesh}
+    if args.strategy:
+        overrides["strategy"] = args.strategy
+    if args.gi_iters is not None:
+        overrides["gi_iters"] = args.gi_iters
+
+    os.makedirs(args.out, exist_ok=True)
+    runs, rows = [], []
+    for scen in names:
+        for seed in range(args.seeds):
+            t0 = time.perf_counter()
+            run = scenarios.build(scen, seed=seed, horizon=args.horizon,
+                                  **overrides)
+            summary = run.run()
+            wall = time.perf_counter() - t0
+            runs.append(run)
+            traj = {
+                "scenario": scen, "seed": seed, "wall_s": wall,
+                "summary": summary,
+                "evals": [{"time": t, "version": v, "acc": a}
+                          for t, v, a in run.engine.evals],
+                "server_metrics": run.server.metrics,
+                "step_walls": getattr(run.engine.aggregator, "rows", []),
+            }
+            tpath = os.path.join(args.out,
+                                 f"trajectory_{scen}_seed{seed}.json")
+            with open(tpath, "w") as f:
+                json.dump(traj, f, indent=2, default=float)
+            rows.append({
+                "name": f"sweep/{scen}_seed{seed}",
+                "us_per_call": wall * 1e6,
+                "derived": (f"acc={summary['final_acc']:.3f} "
+                            f"aggs={summary['aggregations']} "
+                            f"mean_tau={summary['mean_realized_tau']:.2f} "
+                            f"digest={summary['trace_digest']}"),
+                "metrics": {"final_acc": summary["final_acc"],
+                            "aggregations": summary["aggregations"],
+                            "mean_realized_tau":
+                                summary["mean_realized_tau"]},
+            })
+            print(f"{rows[-1]['name']},{rows[-1]['us_per_call']:.1f},"
+                  f"{rows[-1]['derived']}", flush=True)
+
+    t0 = time.perf_counter()
+    accs = _stacked_eval(runs, mesh)
+    if accs is not None:
+        from repro.launch.mesh import mesh_shard_count
+        merged_us = (time.perf_counter() - t0) * 1e6
+        per_run = {r["name"]: float(a) for r, a in zip(rows, accs)}
+        # the sharded merged eval must agree with each run's own eval
+        drift = max(abs(float(a) - r["metrics"]["final_acc"])
+                    for r, a in zip(rows, accs))
+        rows.append({
+            "name": "sweep/merged_eval",
+            "us_per_call": merged_us,
+            "derived": (f"{len(runs)} models evaluated in one "
+                        f"{mesh_shard_count(mesh)}-shard computation; "
+                        f"max drift vs per-run eval {drift:.2e}"),
+            "metrics": {"n_runs": len(runs), "max_drift": drift,
+                        "mesh_shards": mesh_shard_count(mesh)},
+        })
+        print(f"sweep/merged_eval,{merged_us:.1f},{rows[-1]['derived']}",
+              flush=True)
+    else:
+        per_run = {}
+
+    merged = {"schema": SCHEMA, "generated_by": "repro.sweep",
+              "config": {"scenarios": names, "seeds": args.seeds,
+                         "horizon": args.horizon, "strategy": args.strategy,
+                         "gi_iters": args.gi_iters, "mesh": args.mesh},
+              "rows": rows, "final_accs": per_run}
+    mpath = os.path.join(args.out, "sweep.json")
+    with open(mpath, "w") as f:
+        json.dump(merged, f, indent=2, default=float)
+    print(f"wrote {mpath}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,3 +38,31 @@ def test_masked_vector_sparsity_pattern():
     nz = out != 0
     mags = np.abs(np.asarray(u))
     assert mags[nz].min() >= mags[~nz].max() - 1e-6
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_sharded_batch_mask_matches_unsharded(n_devices):
+    """The per-shard grid (jnp fallback on CPU shards) produces booleans
+    identical to the single-launch batched kernel — thresholds are row-local
+    so sharding the cohort axis must not change a single bit."""
+    from repro.kernels.sparsify_mask import (topk_binary_mask_batch,
+                                             topk_binary_mask_batch_sharded)
+    from repro.launch.mesh import make_server_mesh
+    if len(jax.devices()) < n_devices:
+        pytest.skip(f"needs {n_devices} devices "
+                    f"(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    u2 = jax.random.normal(KEY, (4, 6000))
+    ref = np.asarray(topk_binary_mask_batch(jnp.abs(u2), 0.05))
+    got = np.asarray(topk_binary_mask_batch_sharded(
+        u2, 0.05, make_server_mesh(n_devices)))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_sharded_batch_mask_rejects_indivisible_rows():
+    from repro.kernels.sparsify_mask import topk_binary_mask_batch_sharded
+    from repro.launch.mesh import make_server_mesh
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices")
+    u2 = jax.random.normal(KEY, (3, 512))
+    with pytest.raises(ValueError, match="not a multiple"):
+        topk_binary_mask_batch_sharded(u2, 0.05, make_server_mesh(2))

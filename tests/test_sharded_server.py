@@ -1,0 +1,355 @@
+"""Mesh-sharded server hot path: equivalence, bucketing and reshard tests.
+
+Tier-1 anchors (run on any device count):
+* a 1-device (pod, data) mesh reproduces the unsharded batched trajectory
+  BIT-FOR-BIT (the sharded dispatcher routes 1-shard meshes through the
+  identical single-device engines);
+* the shard_map engine itself — forced even on a 1-shard mesh — matches the
+  plain vmapped engine within 1e-4 per client;
+* shard-bucket arithmetic (pow2 per-shard buckets; empty/odd cohorts).
+
+Multi-device tests (mesh sizes 2/4) skip unless enough devices are visible;
+CI's sharded job fabricates them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import LocalProgram, make_local_update
+from repro.core.disparity import tree_stack, tree_to_vector
+from repro.core.gradient_inversion import GIConfig, GradientInverter
+from repro.core.server import FLConfig, Server
+from repro.core.sparsify import WarmStartCache
+from repro.data.partition import (client_label_histograms, dirichlet_partition,
+                                  pad_client_shards)
+from repro.data.staleness import intertwined_schedule
+from repro.data.synthetic import make_image_dataset
+from repro.launch.mesh import (make_server_mesh, mesh_shard_count,
+                               shard_map_compat)
+from repro.launch.sharding import shard_bucket
+from repro.models.small import lenet, mlp3
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mesh_or_skip(n: int):
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} devices "
+                    f"(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    return make_server_mesh(n)
+
+
+# --------------------------------------------------------------------------- #
+# Shard bucketing
+# --------------------------------------------------------------------------- #
+
+
+def test_shard_bucket_arithmetic():
+    # unsharded reduces to the historic global pow2 bucket
+    assert [shard_bucket(b, 1) for b in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    # per-shard pow2 buckets
+    assert shard_bucket(3, 4) == 4          # local bucket 1
+    assert shard_bucket(5, 4) == 8          # local bucket 2
+    assert shard_bucket(9, 4) == 16         # local bucket 4
+    assert shard_bucket(8, 2) == 8
+    # empty cohorts never allocate
+    assert shard_bucket(0, 1) == 0 and shard_bucket(0, 4) == 0
+
+
+# --------------------------------------------------------------------------- #
+# Batched GI engine equivalence
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def gi_setting():
+    """B=3 stale clients, different data AND base rounds (odd batch on
+    purpose: it exercises uneven shard bucketing on every mesh size)."""
+    model = mlp3(n_features=8, n_classes=3, hidden=16)
+    program = LocalProgram(steps=3, lr=0.1, momentum=0.5)
+    lu = make_local_update(model.apply, program)
+    w = model.init(KEY)
+    bases, stales = [], []
+    for b in range(3):
+        kx, ky = jax.random.split(jax.random.PRNGKey(10 + b))
+        x = jax.random.normal(kx, (12, 8))
+        y = jax.random.randint(ky, (12,), 0, 3)
+        w_stale, _ = lu(w, x, y)
+        bases.append(w)
+        stales.append(w_stale)
+        w, _ = lu(w, jax.random.normal(ky, (12, 8)), y)
+    keys = jax.random.split(jax.random.PRNGKey(42), 3)
+    return model, program, bases, stales, keys
+
+
+def _inverter(model, program, mesh=None, **kw):
+    cfg = GIConfig(**{"n_rec": 6, "iters": 12, "lr": 0.1, **kw})
+    return GradientInverter(model.apply, model.input_shape, model.n_classes,
+                            program, cfg, mesh=mesh)
+
+
+def test_one_shard_mesh_is_bitwise_identical(gi_setting):
+    """Tier-1 anchor: mesh of 1 device == mesh=None, bit for bit."""
+    model, program, bases, stales, keys = gi_setting
+    ref = _inverter(model, program)
+    one = _inverter(model, program, mesh=make_server_mesh(1))
+    d0, i0 = ref.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    d1, i1 = one.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    assert i0["padded_to"] == i1["padded_to"] == 4
+    np.testing.assert_array_equal(np.asarray(d0[0]), np.asarray(d1[0]))
+    np.testing.assert_array_equal(np.asarray(d0[1]), np.asarray(d1[1]))
+    w0 = ref.estimate_unstale_batch(bases[0], d0)
+    w1 = one.estimate_unstale_batch(bases[0], d1)
+    np.testing.assert_array_equal(np.asarray(tree_to_vector(w0)),
+                                  np.asarray(tree_to_vector(w1)))
+
+
+def test_forced_shard_map_engine_matches_plain(gi_setting):
+    """The shard_map engine itself (not the 1-shard dispatch) agrees with
+    the plain vmapped engine — runs in tier-1 on a 1-device mesh."""
+    model, program, bases, stales, keys = gi_setting
+    inv = _inverter(model, program, mesh=make_server_mesh(1))
+    d_ref, _ = inv.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    # call the sharded builder directly with the bucketed batch
+    from repro.core.disparity import tree_pad_leading
+    from repro.core.gradient_inversion import tree_sub
+    B, Bp = 3, shard_bucket(3, 1)
+    target = tree_sub(tree_stack(stales), tree_stack(bases))
+    drec0 = inv._init_many(keys)
+    fn = inv._get_invert_many_sharded(12, has_mask=False)
+    pad = Bp - B
+    d_sm, _, _, _ = fn(
+        tree_pad_leading(tree_stack(bases), pad),
+        tree_pad_leading(target, pad),
+        tree_pad_leading(drec0, pad),
+        jnp.concatenate([jnp.full((B,), 12, jnp.int32),
+                         jnp.zeros((pad,), jnp.int32)]))
+    np.testing.assert_allclose(np.asarray(d_sm[0][:B]), np.asarray(d_ref[0]),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_sharded_gi_matches_unsharded_per_client(gi_setting, n_devices):
+    """Acceptance: 2- and 4-shard meshes agree with the single-device
+    batched engine within 1e-4 per client (masked and unmasked)."""
+    mesh = _mesh_or_skip(n_devices)
+    model, program, bases, stales, keys = gi_setting
+    ref = _inverter(model, program)
+    shd = _inverter(model, program, mesh=mesh)
+    d0, i0 = ref.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    dm, im = shd.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    assert im["n_shards"] == n_devices
+    assert im["padded_to"] == shard_bucket(3, n_devices)
+    np.testing.assert_array_equal(np.asarray(i0["iters_used"]),
+                                  np.asarray(im["iters_used"]))
+    for b in range(3):
+        np.testing.assert_allclose(np.asarray(dm[0][b]), np.asarray(d0[0][b]),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dm[1][b]), np.asarray(d0[1][b]),
+                                   atol=1e-4)
+    # downstream unstale estimates agree per client too
+    w0 = ref.estimate_unstale_batch(bases[0], d0)
+    wm = shd.estimate_unstale_batch(bases[0], dm)
+    np.testing.assert_allclose(np.asarray(tree_to_vector(wm)),
+                               np.asarray(tree_to_vector(w0)), atol=1e-4)
+
+
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_sharded_gi_masked_and_early_stop(gi_setting, n_devices):
+    mesh = _mesh_or_skip(n_devices)
+    model, program, bases, stales, keys = gi_setting
+    from repro.core.disparity import tree_sub
+    from repro.core.sparsify import topk_mask_batch
+    deltas = [tree_sub(s, b) for s, b in zip(stales, bases)]
+    masks_ref = topk_mask_batch(deltas, 0.1)
+    masks_shd = topk_mask_batch(deltas, 0.1, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(masks_shd),
+                                  np.asarray(masks_ref))
+    ref = _inverter(model, program, keep_fraction=0.1)
+    shd = _inverter(model, program, mesh=mesh, keep_fraction=0.1)
+    d0, _ = ref.invert_batch(tree_stack(bases), tree_stack(stales), keys,
+                             masks=masks_ref)
+    dm, _ = shd.invert_batch(tree_stack(bases), tree_stack(stales), keys,
+                             masks=masks_shd)
+    np.testing.assert_allclose(np.asarray(dm[0]), np.asarray(d0[0]),
+                               atol=1e-4)
+    # early stop: per-lane tol predicates survive sharding (iteration
+    # counts must match the unsharded engine exactly)
+    ref_t = _inverter(model, program, iters=40, tol=5e-3)
+    shd_t = _inverter(model, program, mesh=mesh, iters=40, tol=5e-3)
+    _, it0 = ref_t.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    _, itm = shd_t.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    np.testing.assert_array_equal(np.asarray(it0["iters_used"]),
+                                  np.asarray(itm["iters_used"]))
+
+
+# --------------------------------------------------------------------------- #
+# Warm-start cache across reshards
+# --------------------------------------------------------------------------- #
+
+
+def test_warm_cache_survives_resharding(gi_setting):
+    """put from one mesh, gather onto another: values identical (the cache
+    is host-resident and keyed by client id, so mesh geometry is free to
+    change between rounds)."""
+    model, program, bases, stales, keys = gi_setting
+    inv = _inverter(model, program, iters=4)
+    cache = WarmStartCache()
+    drec, _ = inv.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    cache.put_stacked([7, 3, 11], *drec)
+
+    n_dev = len(jax.devices())
+    meshes = [make_server_mesh(1)]
+    if n_dev >= 2:
+        meshes.append(make_server_mesh(2))
+    if n_dev >= 4:
+        meshes.append(make_server_mesh(4))
+    ref_x, ref_y, ref_warm = cache.gather([7, 99, 11])
+    for mesh in meshes:
+        S = mesh_shard_count(mesh)
+        pad_to = shard_bucket(3, S)
+        xs, ys, warm = cache.gather_sharded([7, 99, 11], mesh, pad_to=pad_to)
+        np.testing.assert_array_equal(warm[:3], [True, False, True])
+        assert not warm[3:].any()            # padded rows are cold
+        np.testing.assert_allclose(np.asarray(xs[:3]), np.asarray(ref_x))
+        np.testing.assert_allclose(np.asarray(ys[:3]), np.asarray(ref_y))
+        if S > 1:    # multi-shard gathers come back bucketed + mesh-placed
+            assert xs.shape[0] == pad_to and xs.shape[0] % S == 0
+        else:        # a 1-shard mesh is bit-for-bit the plain gather
+            assert xs.shape[0] == 3
+        # and a put from this mesh's layout round-trips
+        cache.put_stacked([7, 99, 11], xs[:3], ys[:3])
+        x7, _ = cache.get(7)
+        np.testing.assert_allclose(np.asarray(x7), np.asarray(ref_x[0]))
+        cache.drop(99)     # restore: 99 must stay cold for the next mesh
+    assert np.asarray(ref_warm).tolist() == [True, False, True]
+
+
+def test_gather_sharded_empty_cache(gi_setting):
+    cache = WarmStartCache()
+    xs, ys, warm = cache.gather_sharded([1, 2, 3], make_server_mesh(1),
+                                        pad_to=4)
+    assert xs is None and ys is None
+    assert warm.shape == (4,) and not warm.any()
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end Server trajectories
+# --------------------------------------------------------------------------- #
+
+
+def _tiny_server(mesh, rounds=4):
+    x, y = make_image_dataset(60, n_classes=3, hw=8, seed=0)
+    tx, ty = make_image_dataset(15, n_classes=3, hw=8, seed=9)
+    idx = dirichlet_partition(y, 8, alpha=0.5, seed=0)
+    cx, cy, cm = pad_client_shards(x, y, idx, m=12)
+    hist = client_label_histograms(y, idx, 3)
+    sched = intertwined_schedule(hist, target_class=1, n_slow=3, tau=2)
+    prog = LocalProgram(steps=3, lr=0.1, momentum=0.5)
+    cfg = FLConfig(strategy="ours", rounds=rounds,
+                   gi=GIConfig(n_rec=6, iters=5, lr=0.1, keep_fraction=0.2),
+                   uniqueness_check=False, eval_every=rounds,
+                   switch_check_every=1, seed=0)
+    return Server(lenet(n_classes=3, in_hw=8), prog, cfg,
+                  cx, cy, cm, sched, tx, ty, mesh=mesh)
+
+
+def test_server_one_device_mesh_trajectory_bitwise():
+    """Tier-1 anchor: the full training trajectory on a 1-device mesh is
+    bit-for-bit the unsharded batched trajectory — masks, warm starts, GI,
+    pending E1/E2 checks, aggregation, everything."""
+    s_ref = _tiny_server(None)
+    s_one = _tiny_server(make_server_mesh(1))
+    s_ref.run()
+    s_one.run()
+    np.testing.assert_array_equal(
+        np.asarray(tree_to_vector(s_ref.global_params)),
+        np.asarray(tree_to_vector(s_one.global_params)))
+    assert [r["gi_iters"] for r in s_ref.metrics] == \
+        [r["gi_iters"] for r in s_one.metrics]
+    assert len(s_ref.gi_log) == len(s_one.gi_log)
+
+
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_server_sharded_trajectory_matches(n_devices):
+    mesh = _mesh_or_skip(n_devices)
+    s_ref = _tiny_server(None)
+    s_shd = _tiny_server(mesh)
+    s_ref.run()
+    s_shd.run()
+    np.testing.assert_allclose(
+        np.asarray(tree_to_vector(s_shd.global_params)),
+        np.asarray(tree_to_vector(s_ref.global_params)), atol=1e-4)
+    assert len(s_ref.gi_log) == len(s_shd.gi_log) > 0
+
+
+def test_server_sharded_empty_and_odd_cohorts():
+    """Empty stale cohorts, single stale clients and cohorts smaller than
+    the shard count must not crash the bucketing."""
+    n = min(len(jax.devices()), 4)
+    srv = _tiny_server(make_server_mesh(n))
+    slow = srv.schedule.slow_clients
+    fast = [i for i in range(srv.n_clients) if i not in slow]
+    srv.step(0, fast[:2], [])                       # empty stale cohort
+    srv.step(1, [], [(slow[0], 0)])                 # single (odd) stale
+    srv.step(2, [fast[0]], [(c, 1) for c in slow])  # 3 stale over n shards
+    srv.step(3, [], [])                             # fully empty cohort
+    assert len(srv.history) == 5
+
+
+# --------------------------------------------------------------------------- #
+# Sweep runner + cohort specs
+# --------------------------------------------------------------------------- #
+
+
+def test_sweep_runner_merged_json(tmp_path):
+    """repro.sweep fans (scenario, seed) pairs and merges bench-v1 rows the
+    benchmark compare gate can read."""
+    import json
+
+    from repro import sweep
+    rc = sweep.main(["--scenario", "degenerate_sync", "--seeds", "2",
+                     "--horizon", "2", "--gi-iters", "2",
+                     "--mesh", "none", "--out", str(tmp_path)])
+    assert rc == 0
+    merged = json.loads((tmp_path / "sweep.json").read_text())
+    assert merged["schema"] == "bench-v1"
+    names = [r["name"] for r in merged["rows"]]
+    assert "sweep/degenerate_sync_seed0" in names
+    assert "sweep/degenerate_sync_seed1" in names
+    assert "sweep/merged_eval" in names
+    merged_row = merged["rows"][-1]
+    assert merged_row["metrics"]["max_drift"] <= 1e-6
+    for seed in (0, 1):
+        traj = json.loads(
+            (tmp_path / f"trajectory_degenerate_sync_seed{seed}.json")
+            .read_text())
+        assert traj["summary"]["aggregations"] >= 1
+        assert traj["step_walls"], "bridge wall-time rows missing"
+
+    rc = sweep.main(["--scenario", "nope_not_real", "--seeds", "1",
+                     "--out", str(tmp_path)])
+    assert rc == 2
+
+
+def test_gi_cohort_specs_lower_with_sharded_engine(gi_setting):
+    """launch.specs.gi_cohort_specs matches what the sharded engine
+    actually consumes — the stacks lower through the shard_map jit."""
+    model, program, bases, stales, keys = gi_setting
+    from repro.launch.specs import gi_cohort_specs
+    params_shape = jax.eval_shape(lambda: model.init(KEY))
+    specs = gi_cohort_specs(params_shape, model.input_shape, model.n_classes,
+                            n_rec=6, batch=4, masked=True)
+    assert specs["keys"].shape == (4, 2)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params_shape))
+    assert specs["masks"].shape == (4, n_params)
+    inv = _inverter(model, program, mesh=make_server_mesh(1))
+    fn = inv._get_invert_many_sharded(12, has_mask=False)
+    lowered = fn.lower(specs["w_base"], specs["w_base"],
+                       (specs["drec_x"], specs["drec_y"]),
+                       jax.ShapeDtypeStruct((4,), jnp.int32))
+    assert lowered is not None
