@@ -8,7 +8,10 @@ Gated rows (everything else is informational):
 * ``sim/engine_*``  — engine throughput; FAILS when fresh ``events_per_sec``
   drops below baseline / factor;
 * ``server/*``      — batched-GI hot-path wall time; FAILS when fresh
-  ``us_per_call`` exceeds baseline * factor.
+  ``us_per_call`` exceeds baseline * factor;
+* ``gi/*``          — GI executor wall time (one-shot + segmented
+  continuous-batching at a skewed cohort) and the fused-vs-concat disparity
+  reduction; FAILS like ``server/*`` on ``us_per_call``.
 
 ``--max-slowdown-factor`` defaults to 1.25 (the >25% gate). Slowdowns are
 **canary-normalized**: both JSONs carry ``calibration/*`` rows (fixed
@@ -41,7 +44,7 @@ import json
 import sys
 from typing import Any, Dict, List, Optional, Tuple
 
-GATED_PREFIXES = ("sim/engine_", "server/")
+GATED_PREFIXES = ("sim/engine_", "server/", "gi/")
 
 # calibration canaries (benchmarks/run.py::calibrate): fixed reference
 # workloads whose baseline/fresh ratio measures machine-wide speed, which

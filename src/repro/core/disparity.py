@@ -4,6 +4,14 @@ The paper evaluates ``Disparity[LocalUpdate(w_global^{t-tau}; D_rec),
 w_i^{t-tau}]`` with **L1-norm** during gradient inversion (because D_rec is
 large — Appendix D) and uses **cosine distance** for uniqueness detection
 (Eq. 7) and for reporting estimation errors (Table 1, Fig. 4/5).
+
+Both metrics (and their masked §3.3 forms) are built on the
+``repro.kernels.fused_disparity`` reduction terms: leaf-wise fused partial
+sums (Pallas on TPU, exact jnp elsewhere) with a closed-form ``custom_vjp``,
+so evaluating — or differentiating — a disparity never materializes the two
+full ``tree_to_vector`` concatenations the seed implementation paid per GI
+iteration per lane. ``tree_to_vector`` itself stays for callers that need
+the actual flat vector (uniqueness detection, top-K thresholds, tests).
 """
 
 from __future__ import annotations
@@ -12,6 +20,9 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.fused_disparity import (masked_cosine_terms,
+                                           masked_l1_terms)
 
 
 def tree_to_vector(tree: Any) -> jax.Array:
@@ -71,21 +82,31 @@ def l1_disparity(update_a: Any, update_b: Any, mask: Optional[jax.Array] = None
 
     ``update_*`` are pytrees (model deltas or weights); ``mask`` is a flat
     boolean vector from ``repro.core.sparsify.topk_mask`` — this is the
-    paper's sparsified GI objective (§3.3).
+    paper's sparsified GI objective (§3.3). Computed via the fused
+    concat-free reduction terms (``repro.kernels.fused_disparity``).
     """
-    d = jnp.abs(tree_to_vector(update_a) - tree_to_vector(update_b))
+    s, c = masked_l1_terms(update_a, update_b, mask)
     if mask is None:
-        return jnp.mean(d)
-    m = mask.astype(jnp.float32)
-    return jnp.sum(d * m) / jnp.maximum(jnp.sum(m), 1.0)
+        return s / c                      # c = static coordinate total
+    return s / jnp.maximum(c, 1.0)
+
+
+def masked_cosine_distance(a: Any, b: Any,
+                           mask: Optional[jax.Array] = None) -> jax.Array:
+    """1 - cos(a*m, b*m) over pytrees with an optional flat coordinate mask.
+
+    The one masked-cosine implementation: ``cosine_distance`` (Eq. 7) is the
+    ``mask=None`` form and the sparsified GI cosine objective (§3.3) passes
+    the top-K mask — both share these fused terms instead of re-deriving
+    their own mask handling.
+    """
+    dot, na2, nb2 = masked_cosine_terms(a, b, mask)
+    return 1.0 - dot / jnp.maximum(jnp.sqrt(na2) * jnp.sqrt(nb2), 1e-12)
 
 
 def cosine_distance(a: Any, b: Any) -> jax.Array:
     """1 - cos(a, b) over flattened pytrees (paper Eq. 7)."""
-    va, vb = tree_to_vector(a), tree_to_vector(b)
-    na = jnp.linalg.norm(va)
-    nb = jnp.linalg.norm(vb)
-    return 1.0 - jnp.dot(va, vb) / jnp.maximum(na * nb, 1e-12)
+    return masked_cosine_distance(a, b, None)
 
 
 def l2_distance(a: Any, b: Any) -> jax.Array:

@@ -20,18 +20,30 @@ with gradient descent on (x', y'). Differences vs classic gradient inversion
 
 The unstale estimate is then ``w_hat_i^t = LocalUpdate(w_global^t; D_rec)``.
 
-Two execution engines:
+Three execution engines:
 
 * ``invert`` — the sequential reference: a Python loop of jitted Adam steps,
   one client at a time (the seed implementation, kept as the oracle for the
   batched path's equivalence tests and for benchmarking).
-* ``invert_batch`` — the production engine: the whole optimization is a
-  ``lax.while_loop`` inside ONE jitted call (early stop via the loop
+* ``invert_batch`` — the one-shot batched engine: the whole optimization is
+  a ``lax.while_loop`` inside ONE jitted call (early stop via the loop
   predicate, loss history written into a fixed-size buffer), ``vmap``-ed over
   all unique stale clients delivering in a round. Stacked
   ``(w_base, w_stale, mask, drec_init)`` pytrees in, stacked ``D_rec`` out —
   no per-iteration or per-client Python dispatch. Batch sizes are padded to
   the next power of two so recompiles are O(log B) instead of O(#distinct B).
+* ``invert_batch`` with ``GIConfig.segment_iters > 0`` — the segmented
+  continuous-batching executor: GI runs as fixed-length K-iteration jitted
+  segments with donated carries (one compile per pow2 bucket x K), and
+  between segments the host compacts finished lanes out, shrinks the
+  resident bucket down the pow2 ladder, and refills free lanes from a
+  pending-client queue (``GIConfig.max_lanes`` caps residency). Under
+  intertwined heterogeneity — tol early-stops, warm starts, per-client
+  budgets — the one-shot engine keeps every lane of the bucket resident
+  until its *slowest* lane stops; the segmented executor drains the same
+  cohort at near-full occupancy. Per-lane math is carried state through the
+  identical loop body, so the two engines agree bit for bit; ``info`` gains
+  ``occupancy`` / ``wasted_lane_iters`` telemetry.
 
 Passing ``mesh=`` (a ``(pod, data)`` mesh from
 ``repro.launch.mesh.make_server_mesh``) shards the batched engine over
@@ -45,17 +57,21 @@ unsharded engine and is therefore bit-for-bit identical to ``mesh=None``.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.client import LocalProgram, make_local_update
-from repro.core.disparity import (l1_disparity, tree_pad_leading, tree_sub,
-                                  tree_take_leading, tree_to_vector)
+from repro.core.disparity import (l1_disparity, masked_cosine_distance,
+                                  tree_pad_leading, tree_sub,
+                                  tree_take_leading)
 from repro.launch.mesh import mesh_shard_count, shard_map_compat
-from repro.launch.sharding import cohort_spec, replicated_spec, shard_bucket
+from repro.launch.sharding import (cohort_spec, replicated_spec,
+                                   segment_bucket, shard_bucket)
 from repro.optim import adam, apply_updates
 
 
@@ -69,6 +85,18 @@ class GIConfig:
     init_scale: float = 0.1
     tol: float = 0.0                # early-stop threshold on the GI loss
     warm_start: bool = True
+    # segmented continuous-batching executor: >0 runs GI as K-iteration
+    # jitted segments with finished lanes compacted out (and free lanes
+    # refilled from the pending queue) between segments; 0 keeps the
+    # one-shot whole-cohort while_loop. Per-lane math is identical, so the
+    # two engines agree bit for bit.
+    segment_iters: int = 0
+    # cap on concurrently-resident GI lanes (0 = the whole cohort); extra
+    # clients wait in the executor's pending queue and stream into lanes as
+    # earlier clients finish — how the server hands the executor the union
+    # of all deliverable stale clients without scaling device memory with
+    # the cohort.
+    max_lanes: int = 0
 
 
 # kept under their historic names for the module's internal call sites
@@ -107,6 +135,10 @@ class GradientInverter:
         # sharded variants, keyed by (max_iters, has_mask)
         self._invert_sharded_cache: Dict[Tuple[int, bool], Callable] = {}
         self._estimate_sharded: Optional[Callable] = None
+        # segmented continuous-batching executor: one traced fn per
+        # (seg_iters, has_mask); XLA re-specializes it per (bucket, losses
+        # buffer) shape, i.e. one compile per pow2 bucket x K
+        self._segment_cache: Dict[Tuple[int, bool], Callable] = {}
 
     def _get_invert_many(self, max_iters: int) -> Callable:
         fn = self._invert_many_cache.get(max_iters)
@@ -151,18 +183,16 @@ class GradientInverter:
         return x, y
 
     def _gi_loss(self, drec, w_global_stale, target_update, mask):
+        # both metrics run on the fused concat-free disparity terms
+        # (repro.kernels.fused_disparity) — the masked cosine shares
+        # disparity.masked_cosine_distance with Eq. 7 instead of
+        # reimplementing its own mask handling
         x, y = drec
         w_trained, _ = self.local_update(w_global_stale, x, y)
         est_update = tree_sub(w_trained, w_global_stale)
         if self.cfg.metric == "l1":
             return l1_disparity(est_update, target_update, mask)
-        ve = tree_to_vector(est_update)
-        vt = tree_to_vector(target_update)
-        if mask is not None:
-            m = mask.astype(jnp.float32)
-            ve, vt = ve * m, vt * m
-        return 1.0 - jnp.dot(ve, vt) / jnp.maximum(
-            jnp.linalg.norm(ve) * jnp.linalg.norm(vt), 1e-12)
+        return masked_cosine_distance(est_update, target_update, mask)
 
     def _make_step(self):
         opt = adam(self.cfg.lr)
@@ -177,27 +207,25 @@ class GradientInverter:
         return step
 
     # ------------------------------------------------------------------ #
-    def _invert_core(self, w_global_stale, target_update, mask, drec0,
-                     n_iters, *, max_iters: int):
-        """One client's full GI optimization as a single ``lax.while_loop``.
+    def _loop_fns(self, w_global_stale, target_update, mask, n_iters
+                  ) -> Tuple[Any, Callable, Callable]:
+        """The ``(opt, live-predicate, Adam-step body)`` every GI engine's
+        ``while_loop`` closes over.
 
-        ``n_iters`` is a dynamic iteration budget (<= static ``max_iters``);
-        early stopping on ``cfg.tol`` is part of the loop predicate — checked
-        after iterations 0, 10, 20, ... exactly like the sequential seed
-        path, so tol-enabled configs keep the batched==sequential
-        equivalence. The per-iteration loss history is written into a fixed
-        ``(max_iters,)`` buffer (NaN beyond the iterations actually used).
-        vmap lifts the while_loop to run until every lane has stopped.
+        ONE definition on purpose: the segmented==one-shot (and
+        batched==sequential) bit-for-bit contracts require the step body
+        and the tol cadence to be byte-identical across engines — sharing
+        the closure makes a silent fork impossible. ``live`` checks the
+        budget and, when ``cfg.tol`` is set, the seed's cadence: ``i``
+        iterations completed, the last one had index ``i-1``, break only
+        when that index % 10 == 0.
         """
         opt = adam(self.cfg.lr)
         tol = self.cfg.tol
 
-        def cond(carry):
-            i, _, _, _, loss = carry
+        def live(i, loss):
             not_done = i < n_iters
             if tol:
-                # i iterations completed; the last one had index i-1. Match
-                # the seed's cadence: break only when that index % 10 == 0.
                 at_check = (i > 0) & ((i - 1) % 10 == 0)
                 not_done = not_done & ~(at_check & (loss < tol))
             return not_done
@@ -211,12 +239,302 @@ class GradientInverter:
             losses = losses.at[i].set(loss)
             return i + 1, drec, opt_state, losses, loss
 
+        return opt, live, body
+
+    def _invert_core(self, w_global_stale, target_update, mask, drec0,
+                     n_iters, *, max_iters: int):
+        """One client's full GI optimization as a single ``lax.while_loop``.
+
+        ``n_iters`` is a dynamic iteration budget (<= static ``max_iters``);
+        early stopping on ``cfg.tol`` is part of the loop predicate — checked
+        after iterations 0, 10, 20, ... exactly like the sequential seed
+        path, so tol-enabled configs keep the batched==sequential
+        equivalence. The per-iteration loss history is written into a fixed
+        ``(max_iters,)`` buffer (NaN beyond the iterations actually used).
+        vmap lifts the while_loop to run until every lane has stopped.
+        """
+        opt, live, body = self._loop_fns(w_global_stale, target_update,
+                                         mask, n_iters)
+
+        def cond(carry):
+            i, _, _, _, loss = carry
+            return live(i, loss)
+
         carry0 = (jnp.zeros((), jnp.int32), drec0, opt.init(drec0),
                   jnp.full((max_iters,), jnp.nan, jnp.float32),
                   jnp.full((), jnp.inf, jnp.float32))
         used, drec, _, losses, final_loss = jax.lax.while_loop(
             cond, body, carry0)
         return drec, losses, final_loss, used
+
+    # ------------------------------------------------------------------ #
+    # Segmented continuous-batching executor
+    # ------------------------------------------------------------------ #
+    def _segment_core(self, w_global_stale, target_update, mask, n_iters,
+                      i0, drec, opt_state, losses, last_loss, *,
+                      seg_iters: int):
+        """Advance one lane's GI optimization by at most ``seg_iters``
+        iterations from carried state.
+
+        Shares ``_loop_fns``'s body and live predicate with the one-shot
+        engine — the only extra predicate is the segment bound
+        ``i < i0 + seg_iters`` — so running a lane as a chain of segments
+        reproduces the one-shot while_loop bit for bit regardless of how
+        the executor regroups lanes between segments. Returns the advanced
+        carry plus a ``done`` flag (the lane's *own* stopping condition,
+        not the segment bound).
+        """
+        _, live, body = self._loop_fns(w_global_stale, target_update,
+                                       mask, n_iters)
+        bound = i0 + seg_iters
+
+        def cond(carry):
+            i, _, _, _, loss = carry
+            return (i < bound) & live(i, loss)
+
+        i, drec, opt_state, losses, last = jax.lax.while_loop(
+            cond, body, (i0, drec, opt_state, losses, last_loss))
+        return i, drec, opt_state, losses, last, ~live(i, last)
+
+    def _get_segment_fn(self, seg_iters: int, has_mask: bool) -> Callable:
+        """One traced segment executable per (K, has_mask); the big carries
+        (drec, opt state, loss buffer, last loss) are donated so segment N+1
+        reuses segment N's buffers instead of doubling resident memory.
+        With a multi-shard mesh the lane axis splits via shard_map exactly
+        like the one-shot engine (independent per-shard segments)."""
+        key = (seg_iters, has_mask)
+        fn = self._segment_cache.get(key)
+        if fn is not None:
+            return fn
+        core = partial(self._segment_core, seg_iters=seg_iters)
+        if has_mask:
+            n_in = 9
+            vm = jax.vmap(core, in_axes=(0,) * n_in)
+        else:
+            n_in = 8
+            vm = jax.vmap(
+                lambda w, t, n, i0, d, o, lo, ll:
+                core(w, t, None, n, i0, d, o, lo, ll),
+                in_axes=(0,) * n_in)
+        if self.n_shards > 1:
+            ax = cohort_spec(self.mesh)
+            fn = jax.jit(shard_map_compat(
+                vm, self.mesh, in_specs=(ax,) * n_in, out_specs=ax))
+        else:
+            # donation is a no-op (and warns) on CPU hosts
+            donate = (() if jax.default_backend() == "cpu"
+                      else tuple(range(n_in - 4, n_in)))
+            fn = jax.jit(vm, donate_argnums=donate)
+        self._segment_cache[key] = fn
+        return fn
+
+    def _fresh_lane_state(self, rows: np.ndarray, w_global_stale, target,
+                          masks, drec0, n_host: np.ndarray,
+                          max_iters: int) -> Dict[str, Any]:
+        """Lane state for clients entering the executor: row slices of the
+        stacked inputs plus a cold carry (i=0, zeroed Adam moments, NaN loss
+        buffer) — exactly the state the one-shot engine starts every lane
+        from."""
+        idx = jnp.asarray(rows)
+        take = lambda tree: jax.tree_util.tree_map(lambda a: a[idx], tree)
+        drec = take(drec0)
+        k = len(rows)
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda a: jnp.zeros_like(a, jnp.float32), drec)
+        return {
+            "w": take(w_global_stale),
+            "t": take(target),
+            "m": None if masks is None else masks[idx],
+            "n": jnp.asarray(n_host[rows], jnp.int32),
+            "i": jnp.zeros((k,), jnp.int32),
+            "drec": drec,
+            # stacked adam init (== vmap(opt.init) without a compile)
+            "opt": {"mu": zeros(), "nu": zeros(),
+                    "t": jnp.zeros((k,), jnp.int32)},
+            "losses": jnp.full((k, max_iters), jnp.nan, jnp.float32),
+            "last": jnp.full((k,), jnp.inf, jnp.float32),
+        }
+
+    @staticmethod
+    def _cat_lane_states(parts: list) -> Dict[str, Any]:
+        parts = [p for p in parts if p is not None]
+        if len(parts) == 1:
+            return parts[0]
+        out: Dict[str, Any] = {}
+        for k in parts[0]:
+            if k == "m" and parts[0]["m"] is None:
+                out["m"] = None
+                continue
+            out[k] = jax.tree_util.tree_map(
+                lambda *a: jnp.concatenate(a), *[p[k] for p in parts])
+        return out
+
+    @staticmethod
+    def _take_lane_state(state: Dict[str, Any], rows) -> Dict[str, Any]:
+        idx = jnp.asarray(np.asarray(rows))
+        return {k: (None if v is None
+                    else jax.tree_util.tree_map(lambda a: a[idx], v))
+                for k, v in state.items()}
+
+    def _invert_segmented(self, w_global_stale, target, masks, drec0,
+                          n_host: np.ndarray, max_iters: int, seg_iters: int,
+                          max_lanes: int
+                          ) -> Tuple[Tuple[jax.Array, jax.Array],
+                                     Dict[str, Any]]:
+        """Drain a stale-client queue through K-iteration jitted segments.
+
+        Between segments the host compacts finished lanes out (their D_rec /
+        loss rows land in per-client result buffers), shrinks the resident
+        bucket down the pow2 ladder, and refills free lanes from the pending
+        queue — so a skewed cohort runs at near-full occupancy instead of
+        every lane waiting for the slowest. Per-lane math is carried state
+        through ``_segment_core``, so the recovered D_rec is bit-for-bit the
+        one-shot engine's.
+        """
+        B = jax.tree_util.tree_leaves(drec0)[0].shape[0]
+        ns = self.n_shards
+        has_mask = masks is not None
+        seg_fn = self._get_segment_fn(seg_iters, has_mask)
+
+        x0, y0 = drec0
+        out_x = np.zeros(x0.shape, x0.dtype)
+        out_y = np.zeros(y0.shape, y0.dtype)
+        losses_out = np.full((B, max_iters), np.nan, np.float32)
+        final_out = np.full((B,), np.inf, np.float32)
+        used_out = np.zeros((B,), np.int32)
+
+        queue = deque(range(B))
+        lane_client: List[int] = []      # client row per resident lane
+        surv_state: Optional[Dict[str, Any]] = None  # dim == len(lane_client)
+        i_host = np.zeros((0,), np.int32)
+        useful = 0
+        cost = 0
+        segments = 0
+        buckets: List[int] = []
+
+        packed = None        # (state, n_res, C) ready to run without repack
+        while lane_client or queue:
+            if packed is not None:
+                state, n_res, C = packed
+                packed = None
+            else:
+                n_res, C = segment_bucket(len(lane_client) + len(queue), ns,
+                                          max_lanes)
+                refill = [queue.popleft()
+                          for _ in range(n_res - len(lane_client))]
+                parts = [surv_state]
+                if refill:
+                    parts.append(self._fresh_lane_state(
+                        np.asarray(refill, np.int64), w_global_stale, target,
+                        masks, drec0, n_host, max_iters))
+                    lane_client = lane_client + refill
+                    i_host = np.concatenate(
+                        [i_host, np.zeros(len(refill), np.int32)])
+                state = self._cat_lane_states(parts)
+                pad = C - n_res
+                if pad:
+                    # padded lanes replicate row 0 with a zero budget —
+                    # done immediately, never read back (the one-shot
+                    # bucket trick)
+                    state = {
+                        k: (None if v is None else (
+                            jnp.concatenate(
+                                [v, jnp.zeros((pad,), jnp.int32)])
+                            if k == "n" else tree_pad_leading(v, pad)))
+                        for k, v in state.items()}
+            args = (state["w"], state["t"]) \
+                + ((state["m"],) if has_mask else ()) \
+                + (state["n"], state["i"], state["drec"], state["opt"],
+                   state["losses"], state["last"])
+            i_new, drec_s, opt_s, losses_s, last_s, done = seg_fn(*args)
+            segments += 1
+            buckets.append(C)
+
+            i_h = np.asarray(i_new[:n_res])          # the one host sync
+            done_h = np.asarray(done[:n_res])
+            steps = i_h - i_host
+            useful += int(steps.sum())
+            cost += C * int(steps.max())
+
+            new_state = {"i": i_new, "drec": drec_s, "opt": opt_s,
+                         "losses": losses_s, "last": last_s,
+                         "w": state["w"], "t": state["t"],
+                         "m": state["m"], "n": state["n"]}
+            fin = np.flatnonzero(done_h)
+            if fin.size == 0:
+                # no lane finished => no compaction, no freed lane to
+                # refill, same bucket: hand the carried state straight to
+                # the next segment (zero gathers)
+                i_host = i_h
+                packed = (new_state, n_res, C)
+                continue
+            idx = jnp.asarray(fin)
+            fx = np.asarray(drec_s[0][idx])
+            fy = np.asarray(drec_s[1][idx])
+            fl = np.asarray(losses_s[idx])
+            flast = np.asarray(last_s[idx])
+            for j, l in enumerate(fin):
+                ci = lane_client[l]
+                out_x[ci] = fx[j]
+                out_y[ci] = fy[j]
+                losses_out[ci] = fl[j]
+                final_out[ci] = flast[j]
+                used_out[ci] = i_h[l]
+            surv = np.flatnonzero(~done_h)
+            lane_client = [lane_client[l] for l in surv]
+            i_host = i_h[surv]
+            surv_state = (self._take_lane_state(new_state, surv)
+                          if len(lane_client) else None)
+
+        occupancy = float(useful / cost) if cost else 1.0
+        drec = (jnp.asarray(out_x), jnp.asarray(out_y))
+        info = {"losses": jnp.asarray(losses_out),
+                "final_loss": jnp.asarray(final_out),
+                "iters_used": jnp.asarray(used_out),
+                "batch": B, "padded_to": buckets[0] if buckets else 0,
+                "n_shards": ns, "engine": "segmented",
+                "segment_iters": seg_iters, "segments": segments,
+                "buckets": buckets, "max_lanes": int(max_lanes),
+                "useful_lane_iters": int(useful),
+                "wasted_lane_iters": int(cost - useful),
+                "lane_iter_cost": int(cost),
+                "occupancy": occupancy}
+        return drec, info
+
+    def _blend_drec0(self, keys: jax.Array,
+                     inits: Optional[Tuple[jax.Array, jax.Array]],
+                     init_flags: Optional[jax.Array],
+                     B: int, Bp: int) -> Tuple[jax.Array, jax.Array]:
+        """Stacked (Bp, ...) initial D_rec: cold rows from the per-client
+        PRNG keys, warm rows from ``inits`` where ``init_flags`` is True.
+
+        Warm starts may arrive unpadded (B rows) or pre-bucketed for a
+        *different* engine capacity (e.g. ``WarmStartCache.gather_sharded``
+        bucketed for the one-shot engine while the segmented executor packs
+        its own lanes) — extra rows beyond ``Bp`` are dropped, short rows
+        padded, so both engines consume one blend."""
+        pad = Bp - B
+        fresh = _pad_leading(self._init_many(keys), pad)
+        if inits is None:
+            return fresh
+        Bi = jax.tree_util.tree_leaves(inits)[0].shape[0]
+        if Bi == B:
+            inits = _pad_leading(inits, pad)
+        elif Bi > Bp:
+            inits = _take_leading(inits, Bp)
+        elif Bi != Bp:
+            raise ValueError(f"inits leading dim {Bi} is neither the "
+                             f"cohort size {B} nor its bucket {Bp}")
+        if init_flags is None:
+            return inits
+        flags = jnp.asarray(init_flags, bool)[:Bp]
+        if flags.shape[0] < Bp:
+            flags = jnp.concatenate(
+                [flags, jnp.zeros((Bp - flags.shape[0],), bool)])
+        return jax.tree_util.tree_map(
+            lambda w, c: jnp.where(
+                flags.reshape((Bp,) + (1,) * (w.ndim - 1)), w, c),
+            inits, fresh)
 
     def invert_batch(
         self,
@@ -227,6 +545,8 @@ class GradientInverter:
         inits: Optional[Tuple[jax.Array, jax.Array]] = None,
         init_flags: Optional[jax.Array] = None,
         iters: Optional[Any] = None,
+        segment_iters: Optional[int] = None,
+        max_lanes: Optional[int] = None,
     ) -> Tuple[Tuple[jax.Array, jax.Array], Dict[str, Any]]:
         """Batched inversion of B stale clients in ONE jitted call.
 
@@ -252,17 +572,42 @@ class GradientInverter:
         on a 1-shard mesh (or ``mesh=None``) the bucket reduces to the
         global pow2 bucket and the plain vmapped engine runs — the same
         computation, bit for bit.
+
+        ``segment_iters`` (default ``cfg.segment_iters``; 0 = one-shot)
+        routes the call through the segmented continuous-batching executor:
+        same per-lane math (bit-for-bit equal results on a single shard),
+        but finished lanes are compacted out between K-iteration segments,
+        the resident bucket shrinks down the pow2 ladder, and — with
+        ``max_lanes`` (default ``cfg.max_lanes``) capping residency — the
+        rest of the cohort streams through a pending queue. Its ``info``
+        additionally reports ``occupancy`` / ``wasted_lane_iters`` /
+        ``segments`` / ``buckets``.
         """
         B = jax.tree_util.tree_leaves(w_stale)[0].shape[0]
         target = tree_sub(w_stale, w_global_stale)
 
         max_iters = int(self.cfg.iters)
         if iters is None:
-            n_iters = jnp.full((B,), max_iters, jnp.int32)
+            n_host = np.full((B,), max_iters, np.int32)
         else:
-            n_arr = jnp.asarray(iters, jnp.int32)
-            max_iters = max(max_iters, int(jnp.max(n_arr)))
-            n_iters = jnp.broadcast_to(n_arr, (B,))
+            # host-side max: budgets normally arrive as Python/numpy data,
+            # so taking the max BEFORE any jnp conversion avoids blocking
+            # on the device every call (the old int(jnp.max(...)) did)
+            n_host = np.broadcast_to(
+                np.asarray(iters, np.int32), (B,))
+            max_iters = max(max_iters, int(n_host.max()))
+
+        seg = (self.cfg.segment_iters if segment_iters is None
+               else int(segment_iters))
+        if seg and seg > 0:
+            lanes = (self.cfg.max_lanes if max_lanes is None
+                     else int(max_lanes))
+            drec0 = self._blend_drec0(keys, inits, init_flags, B, B)
+            return self._invert_segmented(
+                w_global_stale, target, masks, drec0, n_host, max_iters,
+                seg, lanes)
+
+        n_iters = jnp.asarray(n_host)
 
         # pad the batch to per-shard pow2 buckets (global pow2 when
         # unsharded): one compile per bucket, padded lanes get n_iters=0 so
@@ -274,26 +619,7 @@ class GradientInverter:
         # arrive either unpadded (B) or already bucketed (Bp, e.g. from
         # ``WarmStartCache.gather_sharded``); padded lanes always run from
         # the repeated fresh row and are discarded
-        fresh = _pad_leading(self._init_many(keys), pad)
-        if inits is not None:
-            Bi = jax.tree_util.tree_leaves(inits)[0].shape[0]
-            if Bi == B:
-                inits = _pad_leading(inits, pad)
-            elif Bi != Bp:
-                raise ValueError(f"inits leading dim {Bi} is neither the "
-                                 f"cohort size {B} nor its bucket {Bp}")
-            if init_flags is None:
-                drec0 = inits
-            else:
-                flags = jnp.concatenate(
-                    [jnp.asarray(init_flags, bool),
-                     jnp.zeros((Bp - init_flags.shape[0],), bool)])
-                drec0 = jax.tree_util.tree_map(
-                    lambda w, c: jnp.where(
-                        flags.reshape((Bp,) + (1,) * (w.ndim - 1)), w, c),
-                    inits, fresh)
-        else:
-            drec0 = fresh
+        drec0 = self._blend_drec0(keys, inits, init_flags, B, Bp)
 
         args = (_pad_leading(w_global_stale, pad), _pad_leading(target, pad),
                 None if masks is None else _pad_leading(masks, pad),
@@ -309,7 +635,7 @@ class GradientInverter:
         drec = _take_leading(drec, B)
         info = {"losses": losses[:B], "final_loss": final_loss[:B],
                 "iters_used": used[:B], "batch": B, "padded_to": Bp,
-                "n_shards": self.n_shards}
+                "n_shards": self.n_shards, "engine": "oneshot"}
         return drec, info
 
     # ------------------------------------------------------------------ #

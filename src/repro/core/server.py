@@ -115,6 +115,10 @@ class Server:
         self._pending_checks: Dict[int, List[Tuple[int, int, Any, Any]]] = {}
         self.gi_log: List[Dict[str, Any]] = []
         self.metrics: List[Dict[str, float]] = []
+        # last aggregation's GI executor telemetry (occupancy / wasted lane
+        # iters) — surfaced in the per-round metrics row and the sim
+        # bridge's wall rows
+        self._last_gi: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------ #
     def _eval_fn(self, params):
@@ -242,8 +246,11 @@ class Server:
         gi_iters_this_round = 0
 
         # "ours": the whole stale cohort goes through ONE batched GI call
-        # (uniqueness, masks, warm starts and inversion are all stacked)
+        # (uniqueness, masks, warm starts and inversion are all stacked;
+        # with cfg.gi.segment_iters > 0 the call is the segmented executor's
+        # pending queue and lanes drain it at near-full occupancy)
         ours_deltas: Dict[int, Tuple[Any, int]] = {}
+        self._last_gi = None
         if cfg.strategy == "ours" and slow_deliveries:
             ours_deltas = self._ours_update_batch(t, slow_deliveries,
                                                   fast_updates)
@@ -303,6 +310,12 @@ class Server:
             self._run_pending_checks(t)
 
         row: Dict[str, float] = {"round": t, "gi_iters": gi_iters_this_round}
+        if self._last_gi is not None:
+            # GI executor telemetry: fraction of paid lane-iterations that
+            # advanced a real client (1.0 = no lockstep/padding waste)
+            row["gi_occupancy"] = self._last_gi["occupancy"]
+            row["gi_wasted_lane_iters"] = float(
+                self._last_gi["wasted_lane_iters"])
         if eval_now is None:
             eval_now = (t % cfg.eval_every == 0)
         if eval_now:
@@ -383,6 +396,19 @@ class Server:
                 self.global_params, drec)
             iters_used = np.asarray(info["iters_used"])
             final_loss = np.asarray(info["final_loss"])
+            occ = info.get("occupancy")
+            if occ is None:
+                # one-shot engine: lockstep cost model — every resident
+                # lane (incl. bucket padding) pays for the slowest lane
+                cost = int(info["padded_to"]) * int(iters_used.max(initial=0))
+                used = int(iters_used.sum())
+                occ = float(used / cost) if cost else 1.0
+                wasted = cost - used if cost else 0
+            else:
+                wasted = int(info["wasted_lane_iters"])
+            self._last_gi = {"occupancy": float(occ),
+                             "wasted_lane_iters": wasted,
+                             "engine": info.get("engine", "oneshot")}
         else:   # sequential reference engine (same inputs, per-client loop)
             drecs, iters_used, final_loss = [], [], []
             for b, i in enumerate(gi_ids):

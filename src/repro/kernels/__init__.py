@@ -1,7 +1,9 @@
 # Pallas TPU kernels for the framework's compute hot spots:
-#   flash_attention - blockwise causal GQA attention (+ sliding window)
-#   rwkv6_wkv       - Finch data-dependent-decay recurrence
-#   gqa_decode      - single-token decode attention over a long KV cache
-#   sparsify_mask   - paper SS3.3 top-K magnitude mask application
+#   flash_attention  - blockwise causal GQA attention (+ sliding window)
+#   rwkv6_wkv        - Finch data-dependent-decay recurrence
+#   gqa_decode       - single-token decode attention over a long KV cache
+#   sparsify_mask    - paper SS3.3 top-K magnitude mask application
+#   fused_disparity  - concat-free masked L1 / cosine reduction terms with a
+#                      closed-form custom_vjp (the GI loss hot loop)
 # Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 # wrapper, interpret=True on CPU), ref.py (pure-jnp oracle used in tests).

@@ -1,0 +1,6 @@
+from repro.kernels.fused_disparity.kernel import (  # noqa: F401
+    l1_terms_pallas, masked_cosine_terms_pallas, masked_l1_terms_pallas)
+from repro.kernels.fused_disparity.ops import (  # noqa: F401
+    masked_cosine_terms, masked_l1_terms)
+from repro.kernels.fused_disparity.ref import (  # noqa: F401
+    cosine_distance_reference, l1_disparity_reference)

@@ -1,0 +1,223 @@
+"""Differentiable fused disparity terms over pytrees (no flatten-concat).
+
+``masked_l1_terms`` / ``masked_cosine_terms`` take two same-structure
+pytrees plus an optional flat mask over the concatenated coordinate order
+(the order ``tree_to_vector`` uses: ``jax.tree_util.tree_leaves``) and
+return the reduction *terms* the disparity metrics are built from:
+
+* l1:     ``(sum |a-b|*m, count)`` — count is ``sum m`` masked, the static
+  coordinate total unmasked;
+* cosine: ``(sum am*bm, sum am^2, sum bm^2)`` with ``am = a*m``.
+
+Both are wrapped in a ``custom_vjp`` whose backward is the closed
+elementwise form (``g * sign(a-b) * m`` etc.), so neither direction ever
+materializes the two full ``tree_to_vector`` concatenations the historic
+``l1_disparity``/``cosine_distance`` paid per GI iteration per lane — the
+mask is *sliced* per leaf (cheap views), partial sums accumulate across
+leaves, and the backward writes only the cotangents that must exist anyway.
+
+Backend policy differs from ``sparsify_mask`` on purpose: these terms sit
+inside the GI Adam loop (hundreds of evaluations per client per round), so
+the Pallas kernels are used on TPU only — running the Pallas *interpreter*
+per iteration on CPU would dominate the loop. Every other backend takes the
+exact jnp fallback (same math, leaf-wise partials, still concat-free).
+Tests drive the kernels explicitly with ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_disparity.kernel import (l1_terms_pallas,
+                                                  masked_cosine_terms_pallas,
+                                                  masked_l1_terms_pallas)
+
+# below this many coordinates a leaf stays in plain jnp even in kernel mode
+# (same rationale as repro.core.sparsify.KERNEL_MIN_SIZE: the launch costs
+# more than the reduction)
+KERNEL_MIN_SIZE = 4096
+
+
+def _kernel_default() -> bool:
+    # TPU only — see module docstring (unlike sparsify_mask, which is called
+    # once per round and can afford the CPU interpreter in tests)
+    return jax.default_backend() == "tpu"
+
+
+def _flat_leaves(tree: Any) -> List[jax.Array]:
+    return [l.astype(jnp.float32).reshape(-1)
+            for l in jax.tree_util.tree_leaves(tree)]
+
+
+def _mask_slices(mask: Optional[jax.Array], leaves: List[jax.Array]
+                 ) -> Optional[List[jax.Array]]:
+    """Per-leaf views of the flat mask (tree_to_vector coordinate order)."""
+    if mask is None:
+        return None
+    m = mask.astype(jnp.float32)
+    out, off = [], 0
+    for l in leaves:
+        n = l.shape[-1]
+        out.append(jax.lax.slice_in_dim(m, off, off + n, axis=-1))
+        off += n
+    return out
+
+
+def _use_kernel(leaf: jax.Array, static) -> bool:
+    use_kernel, _ = static
+    return use_kernel and leaf.shape[-1] >= KERNEL_MIN_SIZE
+
+
+# --------------------------------------------------------------------------- #
+# L1 terms
+# --------------------------------------------------------------------------- #
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _l1_terms(static, a_leaves, b_leaves, m_leaves):
+    """(sum |a-b|*m, sum m) over flat leaf lists; m_leaves=None -> m=1 and
+    the count term is the static coordinate total."""
+    _, interpret = static
+    s = jnp.zeros((), jnp.float32)
+    c = jnp.zeros((), jnp.float32)
+    total = 0
+    for i, (a, b) in enumerate(zip(a_leaves, b_leaves)):
+        total += a.shape[-1]
+        m = None if m_leaves is None else m_leaves[i]
+        if _use_kernel(a, static):
+            if m is None:
+                s = s + l1_terms_pallas(a, b, interpret=interpret)
+            else:
+                ls, lc = masked_l1_terms_pallas(a, b, m, interpret=interpret)
+                s, c = s + ls, c + lc
+        else:
+            d = jnp.abs(a - b)
+            if m is None:
+                s = s + jnp.sum(d)
+            else:
+                s = s + jnp.sum(d * m)
+                c = c + jnp.sum(m)
+    if m_leaves is None:
+        c = jnp.asarray(float(total), jnp.float32)
+    return s, c
+
+
+def _l1_terms_fwd(static, a_leaves, b_leaves, m_leaves):
+    return _l1_terms(static, a_leaves, b_leaves, m_leaves), \
+        (a_leaves, b_leaves, m_leaves)
+
+
+def _l1_terms_bwd(static, res, cts):
+    a_leaves, b_leaves, m_leaves = res
+    gs, gc = cts
+    da, db, dm = [], [], []
+    for i, (a, b) in enumerate(zip(a_leaves, b_leaves)):
+        sign = jnp.sign(a - b)                  # matches d|x| = sign(x) dx
+        if m_leaves is None:
+            g = gs * sign
+            da.append(g)
+            db.append(-g)
+        else:
+            m = m_leaves[i]
+            g = gs * sign * m
+            da.append(g)
+            db.append(-g)
+            dm.append(gs * jnp.abs(a - b) + gc)
+    return da, db, (None if m_leaves is None else dm)
+
+
+_l1_terms.defvjp(_l1_terms_fwd, _l1_terms_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# Cosine terms
+# --------------------------------------------------------------------------- #
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cos_terms(static, a_leaves, b_leaves, m_leaves):
+    """(sum am*bm, sum am^2, sum bm^2) with am = a*m over flat leaf lists."""
+    _, interpret = static
+    d = jnp.zeros((), jnp.float32)
+    na = jnp.zeros((), jnp.float32)
+    nb = jnp.zeros((), jnp.float32)
+    for i, (a, b) in enumerate(zip(a_leaves, b_leaves)):
+        m = None if m_leaves is None else m_leaves[i]
+        if _use_kernel(a, static):
+            ld, lna, lnb = masked_cosine_terms_pallas(a, b, m,
+                                                      interpret=interpret)
+        else:
+            am = a if m is None else a * m
+            bm = b if m is None else b * m
+            ld = jnp.sum(am * bm)
+            lna = jnp.sum(am * am)
+            lnb = jnp.sum(bm * bm)
+        d, na, nb = d + ld, na + lna, nb + lnb
+    return d, na, nb
+
+
+def _cos_terms_fwd(static, a_leaves, b_leaves, m_leaves):
+    return _cos_terms(static, a_leaves, b_leaves, m_leaves), \
+        (a_leaves, b_leaves, m_leaves)
+
+
+def _cos_terms_bwd(static, res, cts):
+    a_leaves, b_leaves, m_leaves = res
+    gd, gna, gnb = cts
+    da, db, dm = [], [], []
+    for i, (a, b) in enumerate(zip(a_leaves, b_leaves)):
+        m = None if m_leaves is None else m_leaves[i]
+        am = a if m is None else a * m
+        bm = b if m is None else b * m
+        ga = gd * bm + 2.0 * gna * am           # d/d(am), then chain by m
+        gb = gd * am + 2.0 * gnb * bm
+        if m is None:
+            da.append(ga)
+            db.append(gb)
+        else:
+            da.append(ga * m)
+            db.append(gb * m)
+            dm.append(a * ga + b * gb)
+    return da, db, (None if m_leaves is None else dm)
+
+
+_cos_terms.defvjp(_cos_terms_fwd, _cos_terms_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# Public pytree-level API
+# --------------------------------------------------------------------------- #
+
+
+def masked_l1_terms(tree_a: Any, tree_b: Any,
+                    mask: Optional[jax.Array] = None,
+                    use_kernel: Optional[bool] = None,
+                    interpret: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """``(sum |a-b|*m, count)`` over two pytrees and an optional flat mask.
+
+    ``count`` is ``sum m`` when masked, the total coordinate count when not.
+    Differentiable in ``tree_a``/``tree_b``/``mask``.
+    """
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    la, lb = _flat_leaves(tree_a), _flat_leaves(tree_b)
+    lm = _mask_slices(mask, la)
+    return _l1_terms((bool(use_kernel), bool(interpret)), la, lb, lm)
+
+
+def masked_cosine_terms(tree_a: Any, tree_b: Any,
+                        mask: Optional[jax.Array] = None,
+                        use_kernel: Optional[bool] = None,
+                        interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``(dot, |a*m|^2, |b*m|^2)`` terms of the masked cosine distance."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    la, lb = _flat_leaves(tree_a), _flat_leaves(tree_b)
+    lm = _mask_slices(mask, la)
+    return _cos_terms((bool(use_kernel), bool(interpret)), la, lb, lm)

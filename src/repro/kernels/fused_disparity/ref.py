@@ -1,0 +1,43 @@
+"""Pure-jnp concat-based oracles for the fused disparity terms.
+
+These are the *historic* implementations (flatten both pytrees with a full
+concatenation, then reduce) kept verbatim as the correctness reference for
+the fused kernels and their jnp fallbacks — and as the "concat" side of the
+``gi/disparity_*`` benchmark rows.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _to_vector(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                            for l in leaves])
+
+
+def l1_disparity_reference(a: Any, b: Any,
+                           mask: Optional[jax.Array] = None) -> jax.Array:
+    """Masked mean |a-b| via full concatenation (the seed implementation)."""
+    d = jnp.abs(_to_vector(a) - _to_vector(b))
+    if mask is None:
+        return jnp.mean(d)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(d * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def cosine_distance_reference(a: Any, b: Any,
+                              mask: Optional[jax.Array] = None) -> jax.Array:
+    """1 - cos(a*m, b*m) via full concatenation (the seed implementation —
+    the unmasked form is the seed ``cosine_distance``, the masked form is
+    the seed ``_gi_loss`` cosine branch)."""
+    va, vb = _to_vector(a), _to_vector(b)
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        va, vb = va * m, vb * m
+    return 1.0 - jnp.dot(va, vb) / jnp.maximum(
+        jnp.linalg.norm(va) * jnp.linalg.norm(vb), 1e-12)

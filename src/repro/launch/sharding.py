@@ -99,6 +99,22 @@ def shard_bucket(batch: int, n_shards: int) -> int:
     return p * n_shards
 
 
+def segment_bucket(n_active: int, n_shards: int,
+                   max_lanes: int = 0) -> Tuple[int, int]:
+    """Lane capacity for one segment of the continuous-batching GI executor.
+
+    Returns ``(n_resident, capacity)``: how many of the ``n_active``
+    runnable clients get a lane this segment (the rest wait in the pending
+    queue) and the padded per-shard pow2 capacity those lanes compile to.
+    ``max_lanes=0`` means unbounded — every active client is resident, and
+    the capacity is exactly ``shard_bucket``'s compile bucket, so as lanes
+    finish and are compacted out the bucket *shrinks* through the same pow2
+    ladder the one-shot engine pads up through.
+    """
+    n_resident = n_active if max_lanes <= 0 else min(n_active, max_lanes)
+    return n_resident, shard_bucket(n_resident, n_shards)
+
+
 # --------------------------------------------------------------------------- #
 # Parameter specs
 # --------------------------------------------------------------------------- #

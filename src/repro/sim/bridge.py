@@ -77,7 +77,12 @@ class ServerBridge:
         self.rows.append({"version": version, "n_fresh": len(fresh_ids),
                           "n_stale": len(stale_pairs),
                           "wall_s": time.perf_counter() - t0,
-                          "gi_iters": row.get("gi_iters", 0)})
+                          "gi_iters": row.get("gi_iters", 0),
+                          # GI executor occupancy (None when no GI ran this
+                          # aggregation): how much of the paid lane-iter
+                          # budget advanced real clients — the quantity the
+                          # segmented executor exists to push toward 1.0
+                          "gi_occupancy": row.get("gi_occupancy")})
         return row
 
     def evaluate(self) -> float:

@@ -172,6 +172,154 @@ def test_batched_warm_start_round_trip(batch_setting):
 
 
 # --------------------------------------------------------------------------- #
+# Segmented continuous-batching executor
+# --------------------------------------------------------------------------- #
+
+
+def _both_engines(inv, bases, stales, keys, seg, **kw):
+    d1, i1 = inv.invert_batch(tree_stack(bases), tree_stack(stales), keys,
+                              **kw)
+    d2, i2 = inv.invert_batch(tree_stack(bases), tree_stack(stales), keys,
+                              segment_iters=seg, **kw)
+    return (d1, i1), (d2, i2)
+
+
+def _assert_bitwise(d1, i1, d2, i2):
+    np.testing.assert_array_equal(np.asarray(d1[0]), np.asarray(d2[0]))
+    np.testing.assert_array_equal(np.asarray(d1[1]), np.asarray(d2[1]))
+    np.testing.assert_array_equal(np.asarray(i1["iters_used"]),
+                                  np.asarray(i2["iters_used"]))
+    np.testing.assert_array_equal(np.asarray(i1["losses"]),
+                                  np.asarray(i2["losses"]))
+    np.testing.assert_array_equal(np.asarray(i1["final_loss"]),
+                                  np.asarray(i2["final_loss"]))
+
+
+def test_segmented_matches_oneshot_bitwise(batch_setting):
+    """Acceptance: same per-lane math carried across K-iteration segments —
+    D_rec, loss history, final loss and iteration counts are all bit-for-bit
+    the one-shot engine's (K need not divide the budget)."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program)
+    (d1, i1), (d2, i2) = _both_engines(inv, bases, stales, keys, seg=7)
+    _assert_bitwise(d1, i1, d2, i2)
+    assert i2["engine"] == "segmented" and i1["engine"] == "oneshot"
+
+
+def test_segmented_tol_early_stop_bitwise(batch_setting):
+    """tol early-stops happen inside segments on the seed's every-10th
+    cadence — lanes stop at exactly the one-shot iteration counts even when
+    K is not aligned to the cadence."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program, iters=40, tol=5e-3)
+    for seg in (7, 10):
+        (d1, i1), (d2, i2) = _both_engines(inv, bases, stales, keys, seg=seg)
+        _assert_bitwise(d1, i1, d2, i2)
+
+
+def test_segmented_skewed_budgets_shrink_and_occupancy(batch_setting):
+    """Skewed per-client budgets: finished lanes are compacted out, the
+    resident bucket shrinks down the pow2 ladder, and the telemetry accounts
+    every paid lane-iteration."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program)
+    budgets = jnp.array([4, 20, 9], jnp.int32)
+    (d1, i1), (d2, i2) = _both_engines(inv, bases, stales, keys, seg=4,
+                                       iters=budgets)
+    _assert_bitwise(d1, i1, d2, i2)
+    assert i2["segments"] > 1
+    assert i2["buckets"][0] == 4 and i2["buckets"][-1] < i2["buckets"][0]
+    assert i2["useful_lane_iters"] == 4 + 20 + 9
+    assert (i2["useful_lane_iters"] + i2["wasted_lane_iters"]
+            == i2["lane_iter_cost"])
+    assert 0.0 < i2["occupancy"] <= 1.0
+    # the one-shot engine pays bucket * slowest-lane; segmented must waste
+    # strictly less on this skew
+    oneshot_cost = i1["padded_to"] * int(np.asarray(i1["iters_used"]).max())
+    assert i2["lane_iter_cost"] < oneshot_cost
+
+
+def test_segmented_warm_starts_bitwise(batch_setting):
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program, iters=12)
+    inits, _ = inv.invert_batch(tree_stack(bases), tree_stack(stales), keys)
+    flags = jnp.array([True, False, True])
+    (d1, i1), (d2, i2) = _both_engines(inv, bases, stales, keys, seg=5,
+                                       inits=inits, init_flags=flags)
+    _assert_bitwise(d1, i1, d2, i2)
+
+
+def test_segmented_masked_bitwise(batch_setting):
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program, keep_fraction=0.1)
+    deltas = [tree_sub(s, b) for s, b in zip(stales, bases)]
+    masks = topk_mask_batch(deltas, 0.1)
+    (d1, i1), (d2, i2) = _both_engines(inv, bases, stales, keys, seg=6,
+                                       masks=masks)
+    _assert_bitwise(d1, i1, d2, i2)
+
+
+def test_segmented_queue_refill_across_segments(batch_setting):
+    """max_lanes < cohort: the executor holds the rest in its pending queue
+    and streams clients into lanes freed by compaction — results identical,
+    and the lane cap is respected in every segment's bucket."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program)
+    budgets = jnp.array([5, 20, 9], jnp.int32)
+    (d1, i1), (d2, i2) = _both_engines(inv, bases, stales, keys, seg=5,
+                                       iters=budgets, max_lanes=2)
+    _assert_bitwise(d1, i1, d2, i2)
+    assert max(i2["buckets"]) <= 2
+    # 3 clients through <= 2 lanes forces at least one refill round
+    assert i2["segments"] >= 3
+
+
+def test_segmented_zero_budget_lane(batch_setting):
+    """A zero-budget client flows through a lane untouched (D_rec = init,
+    inf final loss, NaN loss history) exactly like the one-shot engine."""
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program)
+    budgets = jnp.array([0, 20, 7], jnp.int32)
+    (d1, i1), (d2, i2) = _both_engines(inv, bases, stales, keys, seg=6,
+                                       iters=budgets)
+    _assert_bitwise(d1, i1, d2, i2)
+    assert np.isinf(np.asarray(i2["final_loss"])[0])
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_segmented_mesh_matches_unsharded(batch_setting, n_devices):
+    """Sharded segmented executor: per-shard segments + per-shard compaction
+    buckets. A 1-device mesh must be bit-for-bit the unsharded segmented
+    engine; 2/4 shards agree to 1e-4/client (bitwise on this container)."""
+    from repro.launch.mesh import make_server_mesh
+    if len(jax.devices()) < n_devices:
+        pytest.skip(f"needs {n_devices} devices "
+                    f"(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    model, program, bases, stales, keys = batch_setting
+    inv = _make_inverter(model, program)
+    budgets = jnp.array([4, 20, 9], jnp.int32)
+    d_ref, i_ref = inv.invert_batch(tree_stack(bases), tree_stack(stales),
+                                    keys, iters=budgets, segment_iters=5)
+    cfg = GIConfig(n_rec=6, iters=20, lr=0.1)
+    inv_m = GradientInverter(model.apply, model.input_shape, model.n_classes,
+                             program, cfg, mesh=make_server_mesh(n_devices))
+    d_m, i_m = inv_m.invert_batch(tree_stack(bases), tree_stack(stales),
+                                  keys, iters=budgets, segment_iters=5)
+    np.testing.assert_array_equal(np.asarray(i_ref["iters_used"]),
+                                  np.asarray(i_m["iters_used"]))
+    if n_devices == 1:
+        np.testing.assert_array_equal(np.asarray(d_ref[0]),
+                                      np.asarray(d_m[0]))
+        np.testing.assert_array_equal(np.asarray(d_ref[1]),
+                                      np.asarray(d_m[1]))
+    else:
+        np.testing.assert_allclose(np.asarray(d_ref[0]), np.asarray(d_m[0]),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(d_ref[1]), np.asarray(d_m[1]),
+                                   atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
 # Server integration
 # --------------------------------------------------------------------------- #
 
@@ -188,13 +336,14 @@ def tiny_fl():
 
 
 def _tiny_server(tiny_fl, tau=2, rounds=6, batched=True, seed=0,
-                 switch_every=1):
+                 switch_every=1, **gi_kwargs):
     from repro.models.small import lenet
     n_classes, hw, cx, cy, cm, hist, tx, ty = tiny_fl
     sched = intertwined_schedule(hist, target_class=1, n_slow=2, tau=tau)
     prog = LocalProgram(steps=3, lr=0.1, momentum=0.5)
     cfg = FLConfig(strategy="ours", rounds=rounds,
-                   gi=GIConfig(n_rec=6, iters=6, lr=0.1, keep_fraction=0.2),
+                   gi=GIConfig(n_rec=6, iters=6, lr=0.1, keep_fraction=0.2,
+                               **gi_kwargs),
                    batched_gi=batched, eval_every=rounds,
                    uniqueness_check=False,  # force GI on every delivery
                    switch_check_every=switch_every, seed=seed)
@@ -255,3 +404,45 @@ def test_pending_checks_use_scheduled_clients_data(tiny_fl):
     expect = float(cosine_distance(w_hat, w_true))
     np.testing.assert_allclose(srv.monitor.history[1]["E1"], expect,
                                rtol=1e-6)
+
+
+def test_server_segmented_engine_matches_oneshot(tiny_fl):
+    """FLConfig(gi=GIConfig(segment_iters=K)) routes _ours_update_batch
+    through the segmented executor; the aggregated global model matches the
+    one-shot engine bit-for-bit (same per-lane math)."""
+    srv_1 = _tiny_server(tiny_fl, rounds=4)
+    srv_s = _tiny_server(tiny_fl, rounds=4, segment_iters=2)
+    srv_1.run()
+    srv_s.run()
+    v1 = np.asarray(tree_to_vector(srv_1.global_params))
+    vs = np.asarray(tree_to_vector(srv_s.global_params))
+    np.testing.assert_array_equal(v1, vs)
+    assert len(srv_s.gi_log) == len(srv_1.gi_log) > 0
+
+
+def test_server_reports_gi_occupancy(tiny_fl):
+    """Rounds that ran GI carry executor occupancy telemetry in their
+    metrics row (both engines); rounds without GI don't."""
+    for kw in ({}, {"segment_iters": 3}):
+        srv = _tiny_server(tiny_fl, rounds=4, **kw)
+        srv.run()
+        gi_rows = [r for r in srv.metrics if "gi_occupancy" in r]
+        assert gi_rows, "no GI round reported occupancy"
+        for r in gi_rows:
+            assert 0.0 < r["gi_occupancy"] <= 1.0
+            assert r["gi_wasted_lane_iters"] >= 0.0
+        # the schedule's first tau rounds deliver no stale updates => no GI
+        assert "gi_occupancy" not in srv.metrics[0]
+
+
+def test_server_segmented_with_lane_cap(tiny_fl):
+    """A lane cap below the cohort size streams clients through the pending
+    queue; the trajectory stays within ULP-level tolerance of the uncapped
+    engine (conv kernels may regroup batches, so not bitwise)."""
+    srv_1 = _tiny_server(tiny_fl, rounds=4)
+    srv_c = _tiny_server(tiny_fl, rounds=4, segment_iters=2, max_lanes=1)
+    srv_1.run()
+    srv_c.run()
+    v1 = np.asarray(tree_to_vector(srv_1.global_params))
+    vc = np.asarray(tree_to_vector(srv_c.global_params))
+    np.testing.assert_allclose(v1, vc, atol=1e-5)
