@@ -11,7 +11,10 @@ Gated rows (everything else is informational):
   ``us_per_call`` exceeds baseline * factor;
 * ``gi/*``          — GI executor wall time (one-shot + segmented
   continuous-batching at a skewed cohort) and the fused-vs-concat disparity
-  reduction; FAILS like ``server/*`` on ``us_per_call``.
+  reduction; FAILS like ``server/*`` on ``us_per_call``;
+* ``step/*``        — the fused aggregation round (multi-version cohort
+  LocalUpdate + stacked FedAvg pipeline) vs the loop path at scattered base
+  rounds, and VersionStore append/gather; FAILS on ``us_per_call``.
 
 ``--max-slowdown-factor`` defaults to 1.25 (the >25% gate). Slowdowns are
 **canary-normalized**: both JSONs carry ``calibration/*`` rows (fixed
@@ -44,7 +47,7 @@ import json
 import sys
 from typing import Any, Dict, List, Optional, Tuple
 
-GATED_PREFIXES = ("sim/engine_", "server/", "gi/")
+GATED_PREFIXES = ("sim/engine_", "server/", "gi/", "step/")
 
 # calibration canaries (benchmarks/run.py::calibrate): fixed reference
 # workloads whose baseline/fresh ratio measures machine-wide speed, which

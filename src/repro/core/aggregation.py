@@ -36,13 +36,27 @@ def apply_update(global_params: Any, update: Any, server_lr: float = 1.0) -> Any
         global_params, update)
 
 
-def cohort_mean_update(stacked_updates: Any, weights: jax.Array) -> Any:
-    """Vectorized FedAvg over a stacked cohort axis (axis 0) — the form the
-    distributed runtime uses (the leading axis is sharded over the mesh and
-    this mean lowers to an all-reduce)."""
-    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+def fedavg_stacked(stacked_updates: Any,
+                   weights: Optional[Sequence[float]] = None) -> Any:
+    """``fedavg`` over a stacked cohort: one weighted reduction per leaf.
 
-    def mean(leaf):
-        return jnp.tensordot(w, leaf.astype(jnp.float32), axes=1)
+    ``stacked_updates`` carries the cohort on axis 0 — the fused aggregation
+    round hands the whole (fresh ++ stale) update stack here instead of a
+    Python list of per-client pytrees. The contraction is the *same*
+    ``tensordot`` ``fedavg`` performs after stacking its list (one weighted
+    segment reduction per leaf, shardable along the cohort axis under the
+    (pod, data) mesh specs), so a stack whose rows equal ``updates[i]``
+    aggregates bit-for-bit identically — the fused==loop equivalence anchor.
+    """
+    B = jax.tree_util.tree_leaves(stacked_updates)[0].shape[0]
+    assert B > 0, "no updates to aggregate"
+    if weights is None:
+        weights = [1.0] * B
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
 
-    return jax.tree_util.tree_map(mean, stacked_updates)
+    def combine(leaf):
+        return jnp.tensordot(w, leaf.astype(jnp.float32),
+                             axes=1).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(combine, stacked_updates)

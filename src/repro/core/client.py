@@ -97,16 +97,33 @@ def make_local_update(apply_fn: Callable, program: LocalProgram):
     return local_update
 
 
-def make_cohort_update(apply_fn: Callable, program: LocalProgram):
+def make_cohort_update(apply_fn: Callable, program: LocalProgram,
+                       per_client_params: bool = False):
     """Vectorized LocalUpdate over a stacked cohort: x (N, n, ...), y (N, n),
-    sample_mask (N, n). Broadcasts params; returns stacked client params.
+    sample_mask (N, n). Returns stacked client params.
+
+    ``per_client_params=False`` broadcasts one global model over the cohort
+    (the synchronous round shape). ``per_client_params=True`` is the
+    **multi-version** cohort: params arrive stacked ``(N, ...)`` too
+    (``in_axes=(0, 0, 0, 0)``), so every lane trains from its *own* base
+    version — the shape unlimited-staleness deliveries produce, where each
+    client's update must start from ``w_global^{t - tau_i}``. Lanes are
+    gathered from a ``repro.core.versions.VersionStore`` in one take per
+    leaf, and the whole mixed-version cohort runs as ONE vmapped program
+    instead of one dispatch per distinct base round.
 
     At production scale the N axis is sharded over the (pod, data) mesh axes
     (see repro.launch) — FL aggregation then lowers to an all-reduce.
     """
     lu = make_local_update(apply_fn, program)
 
-    def cohort_update(params, xs, ys, masks):
-        return jax.vmap(lambda x, y, m: lu(params, x, y, m)[0])(xs, ys, masks)
+    if per_client_params:
+        def cohort_update(params, xs, ys, masks):
+            return jax.vmap(lambda p, x, y, m: lu(p, x, y, m)[0])(
+                params, xs, ys, masks)
+    else:
+        def cohort_update(params, xs, ys, masks):
+            return jax.vmap(lambda x, y, m: lu(params, x, y, m)[0])(
+                xs, ys, masks)
 
     return cohort_update

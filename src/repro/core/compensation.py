@@ -15,17 +15,46 @@ All operate on *updates* (deltas) u = w_client - w_global_base.
 
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.disparity import tree_scale, tree_sub
+
+# ``history`` arguments below accept anything with len() and [-1]/[-2]
+# indexing: the historic Python list of snapshots or the bounded
+# ``repro.core.versions.VersionStore`` ring buffer.
 
 
 def staleness_weight(tau: float, a: float = 0.25, b: float = 10.0) -> float:
     """Sigmoid-decay aggregation weight for a stale update (paper §4)."""
     return float(1.0 / (1.0 + jnp.exp(a * (tau - b))))
+
+
+_SW_MEMO: Dict[Tuple[float, float, float], float] = {}
+
+
+def staleness_weight_batch(taus: Sequence[float], a: float = 0.25,
+                           b: float = 10.0) -> np.ndarray:
+    """Per-client ``staleness_weight`` for a whole cohort, memoized per
+    distinct ``(tau, a, b)``.
+
+    Realized staleness values are small integers, so after warm-up this is
+    a pure dict lookup — the fused aggregation round pays zero device
+    dispatches for weighting while staying bit-identical to the scalar
+    form (each entry IS ``staleness_weight(tau)``'s float64 result).
+    """
+    out = np.empty(len(taus), np.float64)
+    for j, tau in enumerate(np.asarray(taus).tolist()):
+        key = (tau, a, b)
+        w = _SW_MEMO.get(key)
+        if w is None:
+            w = staleness_weight(tau, a, b)
+            _SW_MEMO[key] = w
+        out[j] = w
+    return out
 
 
 def first_order(update_stale: Any, w_global_now: Any, w_global_stale: Any,
@@ -57,3 +86,49 @@ def w_pred(update_stale: Any, history: List[Any], w_global_stale: Any,
     """First-order compensation toward the *predicted* future global model."""
     w_future = predict_future_global(history, tau)
     return first_order(update_stale, w_future, w_global_stale, lam)
+
+
+# --------------------------------------------------------------------------- #
+# Stacked-cohort forms (the fused aggregation round's leading-axis pipeline)
+# --------------------------------------------------------------------------- #
+
+
+def first_order_batch(updates_stacked: Any, w_global_now: Any,
+                      w_base_stacked: Any, lam: float = 1.0) -> Any:
+    """``first_order`` over a stacked cohort in one pass per leaf.
+
+    ``updates_stacked`` / ``w_base_stacked`` carry the cohort on axis 0
+    (each lane may come from a different base version); ``w_global_now``
+    may be cohort-invariant (broadcast) or stacked too. Elementwise, so
+    every lane is bit-for-bit the per-client ``first_order`` result.
+    """
+    dw = tree_sub(w_global_now, w_base_stacked)
+    return jax.tree_util.tree_map(
+        lambda g, d: g + lam * g * g * d, updates_stacked, dw)
+
+
+def predict_future_global_batch(history, taus: Sequence[int]) -> Any:
+    """W-Pred extrapolation for a cohort of per-lane staleness values.
+
+    Returns the stacked ``(B, ...)`` predicted future models (one linear
+    extrapolation per lane from the same last-two snapshots); with a single
+    snapshot the cohort-invariant ``history[-1]`` is returned and callers
+    broadcast it. Per lane this is exactly ``predict_future_global``.
+    """
+    assert len(history) >= 1
+    if len(history) == 1:
+        return history[-1]
+    w_now, w_prev = history[-1], history[-2]
+    step = tree_sub(w_now, w_prev)
+    tv = jnp.asarray(np.asarray(taus, np.float32))
+    return jax.tree_util.tree_map(
+        lambda w, s: w + tv.reshape((-1,) + (1,) * s.ndim) * s.astype(w.dtype),
+        w_now, step)
+
+
+def w_pred_batch(updates_stacked: Any, history, w_base_stacked: Any,
+                 taus: Sequence[int], lam: float = 1.0) -> Any:
+    """Stacked-cohort W-Pred: extrapolate once per lane, compensate in one
+    leading-axis pass (no per-client pytree traffic)."""
+    w_future = predict_future_global_batch(history, taus)
+    return first_order_batch(updates_stacked, w_future, w_base_stacked, lam)

@@ -20,6 +20,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.fused_disparity import (masked_cosine_terms,
                                            masked_l1_terms)
@@ -29,6 +30,24 @@ def tree_to_vector(tree: Any) -> jax.Array:
     """Flatten a pytree of arrays into one float32 vector (stable order)."""
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+
+def tree_to_vector_batch(updates) -> jax.Array:
+    """(B, n) update vectors for a whole cohort.
+
+    Accepts either a list of per-client pytrees (the loop-path form) or ONE
+    pytree stacked on a leading cohort axis (the fused-round form — one
+    reshape+concat per leaf, no per-client tree traffic). Row ``b`` is
+    bit-for-bit ``tree_to_vector(updates[b])`` either way; this is the one
+    place that contract lives (uniqueness detection and top-K masking both
+    flatten through here).
+    """
+    if isinstance(updates, (list, tuple)):
+        return jnp.stack([tree_to_vector(u) for u in updates])
+    leaves = jax.tree_util.tree_leaves(updates)
+    B = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.astype(jnp.float32).reshape(B, -1) for l in leaves], axis=1)
 
 
 def vector_to_tree(vec: jax.Array, like: Any) -> Any:
@@ -61,6 +80,28 @@ def tree_pad_leading(tree: Any, pad: int) -> Any:
 def tree_take_leading(tree: Any, n: int) -> Any:
     """Drop bucket padding: the first ``n`` rows of every leaf."""
     return jax.tree_util.tree_map(lambda a: a[:n], tree)
+
+
+def tree_concat_leading(trees) -> Any:
+    """Concatenate same-structure stacked pytrees along the leading cohort
+    axis (one concatenate per leaf) — how the fused aggregation round joins
+    the fresh and stale update stacks without per-client stacking."""
+    trees = list(trees)
+    if len(trees) == 1:
+        return trees[0]
+    return jax.tree_util.tree_map(
+        lambda *a: jnp.concatenate(a, axis=0), *trees)
+
+
+def tree_index_select(tree: Any, rows) -> Any:
+    """Gather ``rows`` of every leaf's leading axis (one take per leaf).
+
+    The fused server uses this to carve the GI-eligible sub-cohort out of
+    the stacked stale cohort; rows are exact copies, so downstream engines
+    see bit-for-bit the tensors a per-client ``tree_stack`` would build.
+    """
+    idx = jnp.asarray(np.asarray(rows, np.int64))
+    return jax.tree_util.tree_map(lambda a: jnp.take(a, idx, axis=0), tree)
 
 
 def tree_sub(a: Any, b: Any) -> Any:

@@ -10,9 +10,28 @@ decisions use w_i^t only when it arrives at t+tau (paper §3.2).
 Strategies (paper §4 baselines + ours):
   unweighted | weighted | first_order | w_pred | asyn_tiers | ours | unstale
 
+Two aggregation engines share one contract:
+
+* **fused round** (``FLConfig.fused_step=True``, default) — the whole round
+  is (at most) two jitted cohort computations over stacked tensors: ONE
+  multi-version cohort LocalUpdate (each lane carries its own base params,
+  gathered from the bounded ``VersionStore`` ring in one take per leaf —
+  exactly the unlimited-staleness regime where every delivery references a
+  different version and per-base-round grouping degenerates to B=1
+  dispatches), then one stacked delta -> compensation -> FedAvg stage
+  (``compensation.*_batch``, ``aggregation.fedavg_stacked``,
+  ``tiers.tiered_aggregate_stacked``) with no per-client Python tree
+  traffic. See docs/server_performance.md ("The fused aggregation round").
+* **loop round** (``fused_step=False``) — the historic per-client path:
+  deliveries grouped by base round, Python list-of-pytrees aggregation.
+  Kept as the equivalence oracle: on MLP-style models the fused round is
+  bit-for-bit identical (CPU conv kernels differ by ~1 ULP under cohort
+  regrouping — the same caveat as the segmented GI executor).
+
 The cohort is vectorized: fast clients are vmapped over a stacked shard
-tensor; slow clients are vmapped per staleness group; GI runs vmapped over
-all unique stale clients. Passing ``mesh=`` (a (pod, data) cohort mesh from
+tensor; stale clients are vmapped as one multi-version cohort (fused) or
+per staleness group (loop); GI runs vmapped over all unique stale clients.
+Passing ``mesh=`` (a (pod, data) cohort mesh from
 ``repro.launch.mesh.make_server_mesh``) shard_maps that cohort axis over
 devices — see docs/sharded_server.md; a 1-shard mesh is bit-for-bit the
 single-device engine.
@@ -28,17 +47,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, compensation, tiers
-from repro.core.client import LocalProgram, make_local_update, soft_ce_loss
-from repro.core.disparity import (tree_pad_leading, tree_scale, tree_stack,
+from repro.core.client import (LocalProgram, make_cohort_update,
+                               make_local_update, soft_ce_loss)
+from repro.core.disparity import (tree_concat_leading, tree_index_select,
+                                  tree_pad_leading, tree_scale, tree_stack,
                                   tree_sub, tree_take_leading)
 from repro.core.gradient_inversion import GIConfig, GradientInverter
 from repro.core.sparsify import WarmStartCache, topk_mask_batch
 from repro.core.switching import SwitchMonitor
 from repro.core.uniqueness import is_unique_batch
+from repro.core.versions import VersionStore
 from repro.data.staleness import StalenessSchedule
 from repro.launch.mesh import mesh_shard_count, shard_map_compat
-from repro.launch.sharding import (cohort_spec, replicated_spec,
-                                   shard_bucket)
+from repro.launch.sharding import (cohort_spec, multi_version_specs,
+                                   replicated_spec, shard_bucket)
 
 STRATEGIES = ("unweighted", "weighted", "first_order", "w_pred",
               "asyn_tiers", "ours", "unstale")
@@ -55,6 +77,17 @@ class FLConfig:
     gi: GIConfig = dataclasses.field(default_factory=GIConfig)
     uniqueness_check: bool = True
     batched_gi: bool = True         # one vmapped jit over the stale cohort
+    # fused aggregation round: stale deliveries run as ONE multi-version
+    # cohort LocalUpdate (per-lane base params from the VersionStore) and
+    # the delta/compensation/FedAvg stage operates on stacked cohort
+    # tensors. False keeps the per-client loop path as the equivalence
+    # oracle ("ours" with batched_gi=False implies the loop path — the
+    # sequential GI engine is inherently per-client).
+    fused_step: bool = True
+    # VersionStore sizing: device rows kept resident; older versions spill
+    # to host (exact fallback) unless version_spill=False evicts them.
+    version_capacity: int = 64
+    version_spill: bool = True
     switching: bool = True
     switch_check_every: int = 5
     server_lr: float = 1.0
@@ -86,16 +119,28 @@ class Server:
         # single-device engines, bit for bit.
         self.mesh = mesh
         self._n_shards = mesh_shard_count(mesh)
-        self._cohort_update_sharded = None     # built lazily on first use
+        self._cohort_update_sharded = None         # built lazily on first use
+        self._cohort_update_multi_sharded = None
 
         self.key = jax.random.PRNGKey(cfg.seed)
         self.global_params = model.init(jax.random.PRNGKey(cfg.seed + 1))
-        self.history: List[Any] = [self.global_params]      # w_global per round
+        # bounded device-resident version history (ring + exact host spill)
+        # replacing the unbounded per-round list of param pytrees; keeps the
+        # list API (len / indexing / iteration) for every consumer
+        self.history = VersionStore(self.global_params,
+                                    capacity=cfg.version_capacity,
+                                    spill=cfg.version_spill)
+        self.history.append(self.global_params)    # version 0
 
         self.cx = client_x if variant_stream is None else variant_stream.xs
         self.cy = client_y
         self.cmask = client_mask
         self.n_clients = client_x.shape[0]
+        # per-client example counts, computed once: the per-round
+        # float(mask.sum()) per client was a device sync in the hot loop
+        self._counts = np.asarray(
+            np.asarray(client_mask).reshape(self.n_clients, -1).sum(axis=1),
+            np.float64)
 
         _lu = make_local_update(model.apply, program)
         self._lu_fn = _lu
@@ -103,6 +148,12 @@ class Server:
         self._cohort_update = jax.jit(
             jax.vmap(lambda p, x, y, m: _lu(p, x, y, m)[0],
                      in_axes=(None, 0, 0, 0)))
+        # multi-version cohort: every lane trains from its own base params
+        # (in_axes=(0, 0, 0, 0)) — one dispatch for a cohort scattered over
+        # arbitrarily many base rounds
+        self._cohort_update_multi_fn = make_cohort_update(
+            model.apply, program, per_client_params=True)
+        self._cohort_update_multi = jax.jit(self._cohort_update_multi_fn)
         self._eval = jax.jit(self._eval_fn)
 
         # "ours" machinery
@@ -124,13 +175,18 @@ class Server:
     def _eval_fn(self, params):
         logits = self.model.apply(params, self.test_x)
         pred = jnp.argmax(logits, -1)
-        acc = jnp.mean((pred == self.test_y).astype(jnp.float32))
-        per_class = []
-        for c in range(self.model.n_classes):
-            m = (self.test_y == c).astype(jnp.float32)
-            correct = ((pred == self.test_y).astype(jnp.float32) * m).sum()
-            per_class.append(correct / jnp.maximum(m.sum(), 1.0))
-        return acc, jnp.stack(per_class)
+        correct = (pred == self.test_y).astype(jnp.float32)
+        acc = jnp.mean(correct)
+        # per-class accuracy in one segment_sum pass over the test labels
+        # (identical to the historic per-class Python loop: the sums are
+        # counts of 1.0s, exact in float32)
+        C = self.model.n_classes
+        per_class_correct = jax.ops.segment_sum(correct, self.test_y,
+                                                num_segments=C)
+        per_class_total = jax.ops.segment_sum(jnp.ones_like(correct),
+                                              self.test_y, num_segments=C)
+        per_class = per_class_correct / jnp.maximum(per_class_total, 1.0)
+        return acc, per_class
 
     def evaluate(self) -> Tuple[float, np.ndarray]:
         acc, per_class = self._eval(self.global_params)
@@ -144,8 +200,14 @@ class Server:
         return (jnp.asarray(self.cx[i]), jnp.asarray(self.cy[i]),
                 jnp.asarray(self.cmask[i]))
 
+    def _client_stack(self, ids: Sequence[int]):
+        """Stacked (x, y, mask) shards for a cohort, one gather per array."""
+        idx = np.asarray(ids, np.int64)
+        return (jnp.asarray(self.cx[idx]), jnp.asarray(self.cy[idx]),
+                jnp.asarray(self.cmask[idx]))
+
     def _run_cohort(self, w_base, xs, ys, ms):
-        """Vectorized LocalUpdate over a stacked cohort.
+        """Vectorized LocalUpdate over a stacked cohort (shared base params).
 
         With a multi-shard mesh the cohort axis splits across shards
         (clients are independent — no collectives), padded to the cohort
@@ -168,6 +230,43 @@ class Server:
             tree_pad_leading(ms, pad))
         return tree_take_leading(ws, B)
 
+    def _run_cohort_multi(self, w_base_stack, xs, ys, ms):
+        """Multi-version cohort LocalUpdate: lane b trains from
+        ``w_base_stack[b]`` — one dispatch regardless of how many distinct
+        base rounds the cohort spans. Sharded exactly like ``_run_cohort``
+        except the base params shard on the cohort axis too."""
+        if self._n_shards <= 1:
+            return self._cohort_update_multi(w_base_stack, xs, ys, ms)
+        if self._cohort_update_multi_sharded is None:
+            self._cohort_update_multi_sharded = jax.jit(shard_map_compat(
+                self._cohort_update_multi_fn,
+                self.mesh,
+                in_specs=multi_version_specs(self.mesh),
+                out_specs=cohort_spec(self.mesh)))
+        B = xs.shape[0]
+        pad = shard_bucket(B, self._n_shards) - B
+        ws = self._cohort_update_multi_sharded(
+            tree_pad_leading(w_base_stack, pad), tree_pad_leading(xs, pad),
+            tree_pad_leading(ys, pad), tree_pad_leading(ms, pad))
+        return tree_take_leading(ws, B)
+
+    @staticmethod
+    def _delivery_order(pairs: Sequence[Tuple[int, int]]
+                        ) -> List[Tuple[int, int]]:
+        """``[(client, base_round)]`` in the exact order the loop path's
+        grouped ``compute_deliveries`` + dict iteration emits deliveries
+        (groups in first-appearance order of base rounds, members in pair
+        order; a duplicated client keeps its first position with its last
+        base round — plain dict semantics)."""
+        groups: Dict[int, List[int]] = {}
+        for i, base_t in pairs:
+            groups.setdefault(base_t, []).append(i)
+        ordered: Dict[int, int] = {}
+        for base_t, members in groups.items():
+            for i in members:
+                ordered[i] = base_t
+        return list(ordered.items())
+
     def compute_deliveries(self, t: int, pairs: Sequence[Tuple[int, int]]
                            ) -> Dict[int, Tuple[Any, Any, int]]:
         """Materialize stale deliveries ``{client: (w_stale, w_base, tau_eff)}``.
@@ -175,10 +274,11 @@ class Server:
         ``pairs`` is ``[(client, base_round)]`` in delivery order: each update
         was computed from ``history[base_round]`` and arrives now (round
         ``t``), so its realized staleness is ``t - base_round``. Clients
-        sharing a base round are batched through one vmapped LocalUpdate.
-        Callers decide WHO delivers — ``round`` derives it from the static
-        schedule, the event-driven simulator (``repro.sim.bridge``) from
-        realized arrival times.
+        sharing a base round are batched through one vmapped LocalUpdate
+        (the loop path; the fused round runs the whole mixed-version cohort
+        as one dispatch instead). Callers decide WHO delivers — ``round``
+        derives it from the static schedule, the event-driven simulator
+        (``repro.sim.bridge``) from realized arrival times.
         """
         out: Dict[int, Tuple[Any, Any, int]] = {}
         groups: Dict[int, List[int]] = {}
@@ -186,9 +286,7 @@ class Server:
             groups.setdefault(base_t, []).append(i)
         for base_t, members in groups.items():
             w_base = self.history[base_t]
-            xs = jnp.stack([self.cx[i] for i in members])
-            ys = jnp.stack([self.cy[i] for i in members])
-            ms = jnp.stack([self.cmask[i] for i in members])
+            xs, ys, ms = self._client_stack(members)
             ws = self._run_cohort(w_base, xs, ys, ms)
             for j, i in enumerate(members):
                 w_i = jax.tree_util.tree_map(lambda a: a[j], ws)
@@ -224,19 +322,251 @@ class Server:
             self.cx = self.variant.xs
 
         fast = list(fresh_ids)
+        self._last_gi = None
+        # "ours" without the batched GI engine is inherently per-client
+        # (the sequential seed inverter), so it always takes the loop path
+        fused = cfg.fused_step and (cfg.batched_gi or cfg.strategy != "ours")
+        if fused:
+            gi_iters_this_round = self._aggregate_fused(t, fast, stale_pairs)
+        else:
+            gi_iters_this_round = self._aggregate_loop(t, fast, stale_pairs)
+        self.history.append(self.global_params)
+
+        # --- switching monitor: observe delayed arrivals of true updates
+        if cfg.strategy == "ours" and cfg.switching:
+            self._run_pending_checks(t)
+
+        row: Dict[str, float] = {"round": t, "gi_iters": gi_iters_this_round}
+        if self._last_gi is not None:
+            # GI executor telemetry: fraction of paid lane-iterations that
+            # advanced a real client (1.0 = no lockstep/padding waste)
+            row["gi_occupancy"] = self._last_gi["occupancy"]
+            row["gi_wasted_lane_iters"] = float(
+                self._last_gi["wasted_lane_iters"])
+        if eval_now is None:
+            eval_now = (t % cfg.eval_every == 0)
+        if eval_now:
+            acc, per_class = self.evaluate()
+            row["acc"] = acc
+            for c, a in enumerate(per_class):
+                row[f"acc_class_{c}"] = float(a)
+        self.metrics.append(row)
+        return row
+
+    # ------------------------------------------------------------------ #
+    # Fused aggregation round (stacked cohort tensors end to end)
+    # ------------------------------------------------------------------ #
+    def _aggregate_fused(self, t: int, fast: List[int],
+                         stale_pairs: Sequence[Tuple[int, int]]) -> int:
+        """One round as (at most) two jitted cohort computations.
+
+        Stage 1 — LocalUpdates: one broadcast cohort for the fresh clients
+        and ONE multi-version cohort for ALL stale deliveries (base params
+        gathered from the VersionStore ring), regardless of how many
+        distinct base rounds they span. Stage 2 — the stacked
+        delta -> compensation -> FedAvg pipeline: leading-axis ops on the
+        cohort stack, one weighted reduction per leaf. Bit-for-bit the loop
+        path on matmul models (CPU conv kernels: ~1 ULP under regrouping).
+        """
+        cfg = self.cfg
+        order = self._delivery_order(stale_pairs)
+        ids = [i for i, _ in order]
+        S = len(ids)
+
+        fast_stack = None
+        if fast:
+            xs, ys, ms = self._client_stack(fast)
+            w_fast = self._run_cohort(self.global_params, xs, ys, ms)
+            fast_stack = tree_sub(w_fast, self.global_params)
+
+        gi_iters = 0
+        stale_stack = None
+        taus = np.zeros((0,), np.int64)
+        stale_weights = np.zeros((0,), np.float64)
+        if S:
+            bases = np.asarray([b for _, b in order], np.int64)
+            taus = t - bases
+            xs, ys, ms = self._client_stack(ids)
+            counts = self._counts[np.asarray(ids, np.int64)]
+            stale_weights = counts
+            strat = cfg.strategy
+            if strat == "unstale":
+                # oracle: every stale client's TRUE update from the current
+                # model, batched like the fresh cohort — the stale
+                # LocalUpdates are never aggregated, so skip the base-param
+                # gather and the multi-version dispatch entirely
+                w_true = self._run_cohort(self.global_params, xs, ys, ms)
+                stale_stack = tree_sub(w_true, self.global_params)
+                taus = np.zeros((S,), np.int64)
+            else:
+                w_base_stack = self.history.gather(bases)
+                w_stale_stack = self._run_cohort_multi(w_base_stack, xs, ys,
+                                                       ms)
+                delta_stack = tree_sub(w_stale_stack, w_base_stack)
+                if strat in ("unweighted", "asyn_tiers"):
+                    stale_stack = delta_stack
+                elif strat == "weighted":
+                    stale_stack = delta_stack
+                    stale_weights = counts * compensation.staleness_weight_batch(
+                        taus, cfg.weighted_a, cfg.weighted_b)
+                elif strat == "first_order":
+                    stale_stack = compensation.first_order_batch(
+                        delta_stack, self.global_params, w_base_stack,
+                        cfg.fo_lambda)
+                elif strat == "w_pred":
+                    stale_stack = compensation.w_pred_batch(
+                        delta_stack, self.history, w_base_stack, taus,
+                        cfg.fo_lambda)
+                elif strat == "ours":
+                    stale_stack, iters = self._ours_update_fused(
+                        t, ids, taus, w_stale_stack, w_base_stack,
+                        delta_stack, fast_stack)
+                    gi_iters = int(iters.sum())
+
+        parts = [p for p in (fast_stack, stale_stack) if p is not None]
+        if parts:
+            updates = tree_concat_leading(parts)
+            weights = np.concatenate(
+                [self._counts[np.asarray(fast, np.int64)], stale_weights])
+            if cfg.strategy == "asyn_tiers" and S:
+                # tiering runs on the cohort's *realized* staleness — under
+                # the simulator these are observed delays, not the schedule
+                staleness = ([0.0] * len(fast)
+                             + [float(x) for x in taus])
+                agg = tiers.tiered_aggregate_stacked(
+                    updates, staleness, weights.tolist(), cfg.n_tiers)
+            else:
+                agg = aggregation.fedavg_stacked(updates, weights.tolist())
+            self.global_params = aggregation.apply_update(
+                self.global_params, agg, cfg.server_lr)
+        return gi_iters
+
+    def _ours_update_fused(self, t: int, ids: List[int], taus: np.ndarray,
+                           w_stale_stack, w_base_stack, delta_stack,
+                           fast_stack) -> Tuple[Any, np.ndarray]:
+        """The paper's pipeline over the stacked stale cohort, stacked in
+        AND out: uniqueness, masks, warm starts, inversion and the unstale
+        estimates all operate on leading-axis tensors; the recovered deltas
+        scatter back into the raw-delta stack (non-unique / switched-back
+        clients keep their raw rows). Returns ``(delta stack, iters (S,))``.
+        Same engines and PRNG stream as the loop path's
+        ``_ours_update_batch`` — only the (un)stacking around them is gone.
+        """
+        cfg = self.cfg
+        S = len(ids)
+        iters = np.zeros((S,), np.int64)
+        gamma = self.monitor.gamma(t) if cfg.switching else 1.0
+        if gamma <= 0.0:
+            return delta_stack, iters      # fully switched back to vanilla FL
+
+        rows = np.arange(S)
+        if cfg.uniqueness_check and fast_stack is not None:
+            unique, _ = is_unique_batch(delta_stack, fast_stack)
+            rows = np.flatnonzero(unique)
+        if rows.size == 0:
+            return delta_stack, iters      # no unique knowledge: aggregate raw
+
+        gi_ids = [ids[r] for r in rows]
+        w_stale_g = tree_index_select(w_stale_stack, rows)
+        w_base_g = tree_index_select(w_base_stack, rows)
+        delta_g = tree_index_select(delta_stack, rows)
+
+        masks = None
+        if cfg.gi.keep_fraction < 1.0:
+            masks = topk_mask_batch(delta_g, cfg.gi.keep_fraction,
+                                    mesh=self.mesh)
+
+        # split per client in delivery order — reproduces the seed engine's
+        # exact PRNG stream, so cold-start inits match the sequential path
+        subs = []
+        for _ in gi_ids:
+            self.key, sub = jax.random.split(self.key)
+            subs.append(sub)
+        keys = jnp.stack(subs)
+
+        inits, flags = None, None
+        if cfg.gi.warm_start:
+            if self._n_shards > 1:
+                xs, ys, warm = self.warm.gather_sharded(
+                    gi_ids, self.mesh,
+                    pad_to=shard_bucket(len(gi_ids), self._n_shards))
+            else:
+                xs, ys, warm = self.warm.gather(gi_ids)
+            if xs is not None:
+                inits, flags = (xs, ys), jnp.asarray(warm)
+        drec, info = self.inverter.invert_batch(
+            w_base_g, w_stale_g, keys,
+            masks=masks, inits=inits, init_flags=flags)
+        w_hat_stack = self.inverter.estimate_unstale_batch(
+            self.global_params, drec)
+        iters_used = np.asarray(info["iters_used"])
+        final_loss = np.asarray(info["final_loss"])
+        self._record_gi_telemetry(info, iters_used)
+
+        if cfg.gi.warm_start:
+            self.warm.put_stacked(gi_ids, *drec)
+
+        hat_delta = tree_sub(w_hat_stack, self.global_params)
+        schedule_checks = cfg.switching and t % cfg.switch_check_every == 0
+        for b, i in enumerate(gi_ids):
+            self.gi_log.append({"round": t, "client": i,
+                                "final_loss": float(final_loss[b]),
+                                "iters_used": int(iters_used[b])})
+            if schedule_checks:
+                # delayed E1/E2 check (observable at t + tau); only the
+                # clients that actually ran GI are unstacked, on the host
+                w_hat_b = jax.tree_util.tree_map(lambda a: a[b], w_hat_stack)
+                w_stale_b = jax.tree_util.tree_map(lambda a: a[b], w_stale_g)
+                tau = int(taus[rows[b]])
+                self._pending_checks.setdefault(t + tau, []).append(
+                    (t, i, w_hat_b, w_stale_b))
+
+        if gamma < 1.0:
+            hat_delta = jax.tree_util.tree_map(
+                lambda h, s: gamma * h + (1.0 - gamma) * s,
+                hat_delta, delta_g)
+        out = jax.tree_util.tree_map(
+            lambda full, h: full.at[jnp.asarray(rows)].set(h),
+            delta_stack, hat_delta)
+        iters[rows] = iters_used
+        return out, iters
+
+    def _record_gi_telemetry(self, info: Dict[str, Any],
+                             iters_used: np.ndarray) -> None:
+        occ = info.get("occupancy")
+        if occ is None:
+            # one-shot engine: lockstep cost model — every resident lane
+            # (incl. bucket padding) pays for the slowest lane
+            cost = int(info["padded_to"]) * int(iters_used.max(initial=0))
+            used = int(iters_used.sum())
+            occ = float(used / cost) if cost else 1.0
+            wasted = cost - used if cost else 0
+        else:
+            wasted = int(info["wasted_lane_iters"])
+        self._last_gi = {"occupancy": float(occ),
+                         "wasted_lane_iters": wasted,
+                         "engine": info.get("engine", "oneshot")}
+
+    # ------------------------------------------------------------------ #
+    # Loop aggregation round (per-client reference path)
+    # ------------------------------------------------------------------ #
+    def _aggregate_loop(self, t: int, fast: List[int],
+                        stale_pairs: Sequence[Tuple[int, int]]) -> int:
+        """The historic per-client round: deliveries grouped by base round,
+        per-client compensation, Python list-of-pytrees FedAvg. The fused
+        round's equivalence oracle (``FLConfig.fused_step=False``)."""
+        cfg = self.cfg
         slow_deliveries = self.compute_deliveries(t, stale_pairs)
 
         # --- fast clients: fresh updates from the current global model
         if fast:
-            xs = jnp.stack([self.cx[i] for i in fast])
-            ys = jnp.stack([self.cy[i] for i in fast])
-            ms = jnp.stack([self.cmask[i] for i in fast])
+            xs, ys, ms = self._client_stack(fast)
             w_fast = self._run_cohort(self.global_params, xs, ys, ms)
             fast_updates = [
                 tree_sub(jax.tree_util.tree_map(lambda a: a[j], w_fast),
                          self.global_params)
                 for j in range(len(fast))]
-            fast_counts = [float(self.cmask[i].sum()) for i in fast]
+            fast_counts = [float(self._counts[i]) for i in fast]
         else:
             fast_updates, fast_counts = [], []
 
@@ -250,13 +580,12 @@ class Server:
         # with cfg.gi.segment_iters > 0 the call is the segmented executor's
         # pending queue and lanes drain it at near-full occupancy)
         ours_deltas: Dict[int, Tuple[Any, int]] = {}
-        self._last_gi = None
         if cfg.strategy == "ours" and slow_deliveries:
             ours_deltas = self._ours_update_batch(t, slow_deliveries,
                                                   fast_updates)
 
         for i, (w_stale, w_base, tau_eff) in slow_deliveries.items():
-            count = float(self.cmask[i].sum())
+            count = float(self._counts[i])
             strat = cfg.strategy
             # "ours"/"unstale" never read the raw stale delta here ("ours"
             # computes it once inside the batched pipeline)
@@ -303,28 +632,7 @@ class Server:
                 agg = aggregation.fedavg(updates, weights)
             self.global_params = aggregation.apply_update(
                 self.global_params, agg, cfg.server_lr)
-        self.history.append(self.global_params)
-
-        # --- switching monitor: observe delayed arrivals of true updates
-        if cfg.strategy == "ours" and cfg.switching:
-            self._run_pending_checks(t)
-
-        row: Dict[str, float] = {"round": t, "gi_iters": gi_iters_this_round}
-        if self._last_gi is not None:
-            # GI executor telemetry: fraction of paid lane-iterations that
-            # advanced a real client (1.0 = no lockstep/padding waste)
-            row["gi_occupancy"] = self._last_gi["occupancy"]
-            row["gi_wasted_lane_iters"] = float(
-                self._last_gi["wasted_lane_iters"])
-        if eval_now is None:
-            eval_now = (t % cfg.eval_every == 0)
-        if eval_now:
-            acc, per_class = self.evaluate()
-            row["acc"] = acc
-            for c, a in enumerate(per_class):
-                row[f"acc_class_{c}"] = float(a)
-        self.metrics.append(row)
-        return row
+        return gi_iters_this_round
 
     # ------------------------------------------------------------------ #
     def _ours_update_batch(self, t: int,
@@ -396,19 +704,7 @@ class Server:
                 self.global_params, drec)
             iters_used = np.asarray(info["iters_used"])
             final_loss = np.asarray(info["final_loss"])
-            occ = info.get("occupancy")
-            if occ is None:
-                # one-shot engine: lockstep cost model — every resident
-                # lane (incl. bucket padding) pays for the slowest lane
-                cost = int(info["padded_to"]) * int(iters_used.max(initial=0))
-                used = int(iters_used.sum())
-                occ = float(used / cost) if cost else 1.0
-                wasted = cost - used if cost else 0
-            else:
-                wasted = int(info["wasted_lane_iters"])
-            self._last_gi = {"occupancy": float(occ),
-                             "wasted_lane_iters": wasted,
-                             "engine": info.get("engine", "oneshot")}
+            self._record_gi_telemetry(info, iters_used)
         else:   # sequential reference engine (same inputs, per-client loop)
             drecs, iters_used, final_loss = [], [], []
             for b, i in enumerate(gi_ids):
@@ -459,7 +755,10 @@ class Server:
                 # exactly as client i computed it at t0
                 if t0 >= len(self.history):
                     continue
-                w_base = self.history[t0]
+                try:
+                    w_base = self.history[t0]
+                except KeyError:
+                    continue    # version evicted (spill disabled): skip check
                 x, y, m = self._client_shard(i)
                 w_true = self._local_update(w_base, x, y, m)[0]
                 self.monitor.observe(t0, w_hat, w_stale, w_true)

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.disparity import tree_pad_leading, tree_to_vector
+from repro.core.disparity import (tree_pad_leading, tree_to_vector,
+                                  tree_to_vector_batch)
 from repro.kernels.sparsify_mask import (topk_binary_mask,
                                          topk_binary_mask_batch,
                                          topk_binary_mask_batch_sharded)
@@ -67,17 +68,19 @@ def topk_mask(update: Any, keep_fraction: float,
     return vec >= thresh
 
 
-def topk_mask_batch(updates: Sequence[Any], keep_fraction: float,
+def topk_mask_batch(updates, keep_fraction: float,
                     use_kernel: Optional[bool] = None,
                     mesh=None) -> jax.Array:
     """(B, n) boolean masks for a batch of update pytrees in one launch.
 
-    With a multi-shard ``mesh`` the rows are padded to the cohort shard
-    bucket and masked per shard (kernel grid per shard, jnp fallback on CPU
-    shards); thresholds are row-local so the sharded masks equal the
-    unsharded ones exactly. The returned array is always unpadded (B, n).
+    ``updates`` may be a list of pytrees or one leading-axis-stacked pytree
+    (``disparity.tree_to_vector_batch`` owns that contract). With a
+    multi-shard ``mesh`` the rows are padded to the cohort shard bucket and
+    masked per shard (kernel grid per shard, jnp fallback on CPU shards);
+    thresholds are row-local so the sharded masks equal the unsharded ones
+    exactly. The returned array is always unpadded (B, n).
     """
-    vecs = jnp.stack([tree_to_vector(u) for u in updates])
+    vecs = tree_to_vector_batch(updates)
     B, n = vecs.shape
     if keep_fraction >= 1.0:
         return jnp.ones((B, n), bool)

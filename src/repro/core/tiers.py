@@ -11,7 +11,8 @@ from typing import Any, Dict, List, Sequence
 
 import numpy as np
 
-from repro.core.aggregation import fedavg
+from repro.core.aggregation import fedavg, fedavg_stacked
+from repro.core.disparity import tree_index_select
 
 
 def cluster_tiers(staleness: Sequence[float], n_tiers: int = 2) -> List[List[int]]:
@@ -51,5 +52,26 @@ def tiered_aggregate(updates: List[Any], staleness: Sequence[float],
         t_updates = [updates[i] for i in tier]
         t_counts = [sample_counts[i] for i in tier]
         tier_means.append(fedavg(t_updates, t_counts))
+        tier_weights.append(float(len(tier)))
+    return fedavg(tier_means, tier_weights)
+
+
+def tiered_aggregate_stacked(stacked_updates: Any,
+                             staleness: Sequence[float],
+                             sample_counts: Sequence[float],
+                             n_tiers: int = 2) -> Any:
+    """``tiered_aggregate`` over a stacked cohort (axis 0 = client).
+
+    Clustering stays on the host (same deterministic ``cluster_tiers``);
+    each tier's mean is one gathered ``fedavg_stacked`` — O(n_tiers) device
+    ops on leading-axis tensors instead of a per-client Python list walk,
+    and bit-for-bit the list form's result for identical cohort rows.
+    """
+    tiers = cluster_tiers(staleness, n_tiers)
+    counts = np.asarray(sample_counts, np.float64)
+    tier_means, tier_weights = [], []
+    for tier in tiers:
+        sub = tree_index_select(stacked_updates, tier)
+        tier_means.append(fedavg_stacked(sub, counts[tier].tolist()))
         tier_weights.append(float(len(tier)))
     return fedavg(tier_means, tier_weights)

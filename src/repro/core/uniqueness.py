@@ -9,17 +9,21 @@ during training, paper Fig. 9).
 
 ``is_unique_batch`` is the round-level form: all stale deliveries are checked
 against the fast cohort with one (B, M) distance matrix instead of B
-separate passes over the unstale set.
+separate passes over the unstale set. Both arguments accept either a list
+of per-client pytrees (the historic loop-path form) or ONE pytree stacked
+on a leading cohort axis (the fused aggregation round's form — rows are
+flattened with one reshape per leaf, no per-client tree traffic, and are
+bit-identical to the per-client ``tree_to_vector`` rows).
 """
 
 from __future__ import annotations
 
 from typing import Any, Dict, List, Sequence, Tuple
 
-import jax.numpy as jnp
+import jax
 import numpy as np
 
-from repro.core.disparity import tree_to_vector
+from repro.core.disparity import tree_to_vector_batch
 
 
 def _pairwise_cosine_distances(vectors: np.ndarray) -> np.ndarray:
@@ -29,37 +33,50 @@ def _pairwise_cosine_distances(vectors: np.ndarray) -> np.ndarray:
     return 1.0 - sim
 
 
-def _normalized_rows(updates: Sequence[Any]) -> np.ndarray:
-    vecs = np.stack([np.asarray(tree_to_vector(u)) for u in updates])
+def _cohort_size(updates) -> int:
+    """Number of clients in a list-of-pytrees or stacked-pytree cohort."""
+    if isinstance(updates, (list, tuple)):
+        return len(updates)
+    return jax.tree_util.tree_leaves(updates)[0].shape[0]
+
+
+def _rows(updates) -> np.ndarray:
+    """Host copy of ``disparity.tree_to_vector_batch`` rows (the detection
+    math below is pure numpy)."""
+    return np.asarray(tree_to_vector_batch(updates))
+
+
+def _normalized_rows(updates) -> np.ndarray:
+    vecs = _rows(updates)
     norms = np.linalg.norm(vecs, axis=1, keepdims=True)
     return vecs / np.maximum(norms, 1e-12)
 
 
-def uniqueness_threshold(unstale_updates: List[Any]) -> float:
+def uniqueness_threshold(unstale_updates) -> float:
     """Mean pairwise cosine distance among unstale updates (Eq. 8)."""
-    if len(unstale_updates) < 2:
+    if _cohort_size(unstale_updates) < 2:
         return 0.0
-    vecs = np.stack([np.asarray(tree_to_vector(u)) for u in unstale_updates])
-    d = _pairwise_cosine_distances(vecs)
+    d = _pairwise_cosine_distances(_rows(unstale_updates))
     n = d.shape[0]
     off = d[~np.eye(n, dtype=bool)]
     return float(off.mean())
 
 
-def is_unique_batch(stale_updates: Sequence[Any],
-                    unstale_updates: Sequence[Any],
+def is_unique_batch(stale_updates,
+                    unstale_updates,
                     threshold: float | None = None
                     ) -> Tuple[np.ndarray, Dict[str, Any]]:
     """Vectorized Eq. 7-8 over a round's whole stale cohort.
 
     Returns ``(unique (B,) bool, info)`` where ``info['min_dist']`` is the
-    per-client min cosine distance to the unstale set.
+    per-client min cosine distance to the unstale set. Either cohort may be
+    a list of pytrees or one leading-axis-stacked pytree.
     """
-    B = len(stale_updates)
-    if not unstale_updates:
+    B = _cohort_size(stale_updates)
+    if unstale_updates is None or _cohort_size(unstale_updates) == 0:
         return (np.ones(B, bool),
                 {"min_dist": np.full(B, np.inf), "threshold": 0.0})
-    thr = (uniqueness_threshold(list(unstale_updates))
+    thr = (uniqueness_threshold(unstale_updates)
            if threshold is None else threshold)
     S = _normalized_rows(stale_updates)          # (B, n)
     U = _normalized_rows(unstale_updates)        # (M, n)

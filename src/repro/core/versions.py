@@ -1,0 +1,157 @@
+"""Bounded device-resident global-model version history (``VersionStore``).
+
+The server needs ``w_global^v`` for every base version a stale delivery may
+reference — under unlimited staleness that is *any* past version. The seed
+kept a Python list of full param pytrees, which (a) grows device memory
+without bound (fatal for the ROADMAP's million-user target) and (b) forces
+the fused aggregation round to materialize per-client base params with
+per-client ``tree_map`` traffic.
+
+``VersionStore`` replaces the list with a ring buffer of *stacked* history:
+every leaf is stored as ``(capacity, *shape)`` on device, appends are
+``dynamic_update_index_in_dim`` writes through one cached jit, and a whole
+mixed-version cohort's base params gather as ONE ``jnp.take`` per leaf —
+the (B, ...) stacked tree the multi-version cohort LocalUpdate consumes
+directly. The append is O(1) (in place) wherever buffer donation is
+supported — i.e. on accelerators; on CPU hosts donation is a no-op, XLA
+copies the ring per append, and the cost is O(capacity x model) bytes of
+host memcpy instead — keep ``capacity`` modest there (it is the test and
+CI backend, with tiny models, so this is benchmarked but not optimized).
+
+Versions older than the device window are **spilled to host** right before
+their ring row is overwritten and are recovered exactly on access (float
+buffers round-trip device->host->device bit-for-bit), so unlimited staleness
+keeps exact semantics while device memory stays bounded at ``capacity``
+rows. ``spill=False`` drops evicted versions instead (strictly bounded
+total memory); reading one then raises ``KeyError``.
+
+Indexing mirrors the historic list API (``len``, ``store[v]``, negative
+indices, iteration) so every consumer — ``compute_deliveries``,
+``w_pred``'s two-snapshot extrapolation, the pending E1/E2 checks, the sim
+bridge's version alignment assert — works unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class VersionStore:
+    """Ring buffer of global-param versions with host spill for the tail."""
+
+    def __init__(self, template: Any, capacity: int = 64, spill: bool = True):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.spill = bool(spill)
+        self._n = 0
+        self._spilled: Dict[int, Any] = {}      # version -> host (np) pytree
+        self._ring = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((self.capacity,) + tuple(jnp.shape(l)),
+                                jnp.asarray(l).dtype), template)
+        # donation updates the ring in place (no-op + warning on CPU hosts,
+        # so only donate off-CPU — same policy as the segmented GI executor)
+        donate = () if jax.default_backend() == "cpu" else (0,)
+
+        def _append(ring, params, slot):
+            return jax.tree_util.tree_map(
+                lambda b, p: jax.lax.dynamic_update_index_in_dim(
+                    b, p.astype(b.dtype), slot, 0), ring, params)
+
+        self._append_fn = jax.jit(_append, donate_argnums=donate)
+
+    # ------------------------------------------------------------------ #
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def window_start(self) -> int:
+        """Oldest version still resident in the device ring."""
+        return max(0, self._n - self.capacity)
+
+    @property
+    def n_spilled(self) -> int:
+        return len(self._spilled)
+
+    @property
+    def device_bytes(self) -> int:
+        """Bytes held by the device ring — constant once constructed."""
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(self._ring))
+
+    # ------------------------------------------------------------------ #
+    def append(self, params: Any) -> int:
+        """Store ``params`` as the next version; returns its version id."""
+        v = self._n
+        slot = v % self.capacity
+        if v >= self.capacity and self.spill:
+            # the row being overwritten holds version v - capacity: copy it
+            # to host first so old versions stay exactly recoverable
+            self._spilled[v - self.capacity] = jax.tree_util.tree_map(
+                lambda b: np.asarray(b[slot]), self._ring)
+        self._ring = self._append_fn(self._ring, params,
+                                     jnp.asarray(slot, jnp.int32))
+        self._n += 1
+        return v
+
+    def _check(self, v: int) -> int:
+        v = int(v)
+        if v < 0:
+            v += self._n
+        if not 0 <= v < self._n:
+            raise IndexError(f"version {v} out of range [0, {self._n})")
+        return v
+
+    def __getitem__(self, v: int) -> Any:
+        v = self._check(v)
+        if v >= self.window_start:
+            slot = v % self.capacity
+            return jax.tree_util.tree_map(lambda b: b[slot], self._ring)
+        host = self._spilled.get(v)
+        if host is None:
+            raise KeyError(
+                f"version {v} was evicted (capacity {self.capacity}, "
+                f"spill disabled)")
+        return jax.tree_util.tree_map(jnp.asarray, host)
+
+    def __iter__(self) -> Iterator[Any]:
+        for v in range(self._n):
+            yield self[v]
+
+    # ------------------------------------------------------------------ #
+    def gather(self, versions: Sequence[int]) -> Any:
+        """Stacked ``(B, ...)`` base params for a mixed-version cohort.
+
+        In-window rows come from one ``jnp.take`` per leaf over the ring;
+        spilled rows are stitched in exactly from the host copies with one
+        scatter per leaf. The result rows are bit-for-bit the params
+        appended as those versions — the contract the fused aggregation
+        round's equivalence oracle rests on.
+        """
+        vs = np.asarray(versions, np.int64).reshape(-1)
+        if vs.size and (vs.min() < 0 or vs.max() >= self._n):
+            raise IndexError(f"versions {vs} out of range [0, {self._n})")
+        ws = self.window_start
+        slots = jnp.asarray(np.where(vs >= ws, vs % self.capacity, 0)
+                            .astype(np.int32))
+        out = jax.tree_util.tree_map(
+            lambda b: jnp.take(b, slots, axis=0), self._ring)
+        old = np.flatnonzero(vs < ws)
+        if old.size:
+            missing = [int(vs[r]) for r in old if int(vs[r]) not in self._spilled]
+            if missing:
+                raise KeyError(
+                    f"versions {missing} were evicted (capacity "
+                    f"{self.capacity}, spill disabled)")
+            rows = jnp.asarray(old)
+            host = [self._spilled[int(vs[r])] for r in old]
+            stacked_old = jax.tree_util.tree_map(
+                lambda *a: jnp.asarray(np.stack(a)), *host)
+            out = jax.tree_util.tree_map(
+                lambda o, h: o.at[rows].set(h.astype(o.dtype)),
+                out, stacked_old)
+        return out

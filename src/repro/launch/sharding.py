@@ -76,6 +76,16 @@ def replicated_spec() -> P:
     return P()
 
 
+def multi_version_specs(mesh: Mesh) -> Tuple[P, P, P, P]:
+    """in_specs for the multi-version cohort LocalUpdate
+    (``make_cohort_update(per_client_params=True)``): base params arrive
+    stacked per lane — gathered from the ``VersionStore`` ring — so they
+    shard on the cohort axis exactly like the data shards, masks and keys
+    (no replicated operand at all; lanes are fully independent)."""
+    ax = cohort_spec(mesh)
+    return (ax, ax, ax, ax)
+
+
 def cohort_sharding(mesh: Mesh) -> NamedSharding:
     """NamedSharding form of ``cohort_spec`` for host->device placement
     (e.g. ``WarmStartCache.gather_sharded``)."""

@@ -7,7 +7,18 @@ API, so every strategy the round-synchronous harness supports — including
 the batched-GI "ours" path, whose pow2-bucketed compiles absorb the
 variable-size stale cohorts aggregation events produce — runs unmodified
 under arbitrary arrival processes. Engine versions and ``Server.history``
-indices stay aligned by construction: version ``v`` is ``history[v]``.
+indices stay aligned by construction: version ``v`` is ``history[v]``
+(``history`` is the bounded ``repro.core.versions.VersionStore`` ring — old
+versions spill to host exactly, so device memory stays capped at
+``FLConfig.version_capacity`` rows however long the simulation runs).
+
+Event-driven arrival processes are exactly where per-base-round delivery
+grouping degenerates: a FedBuff or pure-async cohort routinely has every
+client arriving from a *different* version. The server's fused aggregation
+round (``FLConfig.fused_step``) runs that whole mixed-version cohort as ONE
+multi-version LocalUpdate instead of B single-lane dispatches — the bridge
+surfaces ``n_base_rounds`` per wall row so the scatter is visible in the
+benchmark output.
 
 ``RecordingAggregator`` is the null model: it records cohorts and counts,
 for engine unit tests and events/sec throughput benchmarks where spinning
@@ -76,6 +87,10 @@ class ServerBridge:
                                eval_now=eval_now)
         self.rows.append({"version": version, "n_fresh": len(fresh_ids),
                           "n_stale": len(stale_pairs),
+                          # distinct base versions in the stale cohort: the
+                          # dispatch count the pre-fused grouped path would
+                          # have paid (the fused round always pays one)
+                          "n_base_rounds": len({b for _, b in stale_pairs}),
                           "wall_s": time.perf_counter() - t0,
                           "gi_iters": row.get("gi_iters", 0),
                           # GI executor occupancy (None when no GI ran this

@@ -1,0 +1,279 @@
+"""Fused aggregation round: multi-version delivery equivalence.
+
+The fused round (``FLConfig.fused_step=True``, default) runs a round's whole
+stale cohort as ONE multi-version LocalUpdate (per-lane base params gathered
+from the ``VersionStore``) and a stacked delta/compensation/FedAvg stage.
+The loop round (``fused_step=False``) is the per-client oracle.
+
+Anchors (mirroring the PR 3/4 anchor structure):
+* mixed-base-round stale cohorts — including simulator-realized schedules —
+  produce BIT-FOR-BIT identical trajectories on matmul models, across every
+  strategy, unsharded and on a 1-shard mesh;
+* 2/4-shard meshes agree with the unsharded fused trajectory at 1e-4
+  (skipped unless the devices are visible — CI's sharded job fabricates 4);
+* the VersionStore-backed history is exact through capacity wrap + spill
+  (a capacity-3 server replays a capacity-64 server bit for bit);
+* the vectorized segment_sum eval equals the historic per-class loop.
+
+Conv models regroup cohorts through CPU conv kernels that differ by ~1 ULP
+(the PR 4 caveat), hence the matmul models here; the lenet-based server
+suites in tests/test_batched_gi.py and tests/test_sharded_server.py cover
+the conv path at their existing tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import LocalProgram
+from repro.core.disparity import tree_to_vector
+from repro.core.gradient_inversion import GIConfig
+from repro.core.server import STRATEGIES, FLConfig, Server
+from repro.data.partition import (client_label_histograms, dirichlet_partition,
+                                  pad_client_shards)
+from repro.data.staleness import intertwined_schedule
+from repro.data.synthetic import make_feature_dataset
+from repro.launch.mesh import make_server_mesh
+from repro.models.small import mlp3
+
+N_CLASSES, N_FEATURES = 5, 12
+
+
+def _server(strategy="ours", fused=True, mesh=None, capacity=64, seed=0,
+            **cfg_kw):
+    x, y = make_feature_dataset(20, n_classes=N_CLASSES,
+                                n_features=N_FEATURES, seed=seed)
+    tx, ty = make_feature_dataset(8, n_classes=N_CLASSES,
+                                  n_features=N_FEATURES, seed=seed + 99)
+    idx = dirichlet_partition(y, 10, alpha=0.1, seed=seed)
+    cx, cy, cm = pad_client_shards(x, y, idx, m=16)
+    hist = client_label_histograms(y, idx, N_CLASSES)
+    sched = intertwined_schedule(hist, 2, n_slow=3, tau=[2, 3, 2])
+    prog = LocalProgram(steps=5, lr=0.1, momentum=0.5)
+    cfg = FLConfig(strategy=strategy, rounds=0, fused_step=fused,
+                   gi=GIConfig(n_rec=8, iters=6, lr=0.1, keep_fraction=0.3),
+                   eval_every=4, seed=seed, switch_check_every=2,
+                   version_capacity=capacity, **cfg_kw)
+    return Server(mlp3(n_features=N_FEATURES, n_classes=N_CLASSES, hidden=24),
+                  prog, cfg, cx, cy, cm, sched, tx, ty, mesh=mesh)
+
+
+def _drive_scattered(srv, rounds=7):
+    """Scripted cohorts whose stale deliveries span MULTIPLE distinct base
+    rounds per aggregation (incl. repeats and varying fresh cohort sizes) —
+    exactly the mixed-version regime the fused round exists for."""
+    slow = srv.schedule.slow_clients
+    fast = srv.schedule.fast_clients
+    for t in range(rounds):
+        pairs = []
+        if t >= 2:
+            pairs = [(slow[0], t - 2), (slow[1], max(0, t - 3)),
+                     (slow[2], t - 1)]
+        srv.step(t, fast[: 3 + (t % 2)], pairs)
+    return srv
+
+
+def _assert_same_trajectory(a, b, bitwise=True, atol=0.0):
+    va = np.asarray(tree_to_vector(a.global_params))
+    vb = np.asarray(tree_to_vector(b.global_params))
+    if bitwise:
+        np.testing.assert_array_equal(va, vb)
+        assert len(a.history) == len(b.history)
+        for v, (wa, wb) in enumerate(zip(a.history, b.history)):
+            for la, lb in zip(jax.tree_util.tree_leaves(wa),
+                              jax.tree_util.tree_leaves(wb)):
+                assert bool(jnp.array_equal(la, lb)), f"version {v} diverged"
+    else:
+        np.testing.assert_allclose(va, vb, atol=atol)
+    assert [m["gi_iters"] for m in a.metrics] == \
+        [m["gi_iters"] for m in b.metrics]
+    if bitwise:
+        assert a.gi_log == b.gi_log
+    else:
+        assert [(r["round"], r["client"], r["iters_used"])
+                for r in a.gi_log] == \
+            [(r["round"], r["client"], r["iters_used"]) for r in b.gi_log]
+        np.testing.assert_allclose([r["final_loss"] for r in a.gi_log],
+                                   [r["final_loss"] for r in b.gi_log],
+                                   atol=atol)
+
+
+# --------------------------------------------------------------------------- #
+# Fused == loop, every strategy, mixed base rounds
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_fused_matches_loop_bitwise_scattered_bases(strategy):
+    """Acceptance anchor: the fused round reproduces the grouped
+    per-base-round loop path bit-for-bit on mixed-base-round cohorts."""
+    srv_f = _drive_scattered(_server(strategy, fused=True))
+    srv_l = _drive_scattered(_server(strategy, fused=False))
+    _assert_same_trajectory(srv_f, srv_l, bitwise=True)
+    # eval rows (incl. per-class accuracies) agree exactly too
+    for ra, rb in zip(srv_f.metrics, srv_l.metrics):
+        assert ra == rb
+
+
+def test_fused_matches_loop_round_synchronous():
+    """The static-schedule ``round`` path (single shared base round per
+    group) agrees too — the degenerate case of the multi-version cohort."""
+    srv_f = _server("ours", fused=True)
+    srv_l = _server("ours", fused=False)
+    for t in range(6):
+        srv_f.round(t)
+        srv_l.round(t)
+    _assert_same_trajectory(srv_f, srv_l, bitwise=True)
+
+
+def test_fused_one_shard_mesh_bitwise():
+    """A 1-device mesh dispatches to the identical single-device fused
+    engines — bit-for-bit the mesh=None trajectory (the PR 3 anchor,
+    extended to the fused round)."""
+    srv_ref = _drive_scattered(_server("ours", fused=True))
+    srv_one = _drive_scattered(_server("ours", fused=True,
+                                       mesh=make_server_mesh(1)))
+    _assert_same_trajectory(srv_ref, srv_one, bitwise=True)
+
+
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_fused_sharded_matches_unsharded(n_devices):
+    """2/4-shard meshes agree with the unsharded fused trajectory at 1e-4
+    per coordinate (mixed-base-round cohorts shard on the client axis)."""
+    if len(jax.devices()) < n_devices:
+        pytest.skip(f"needs {n_devices} devices "
+                    f"(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    srv_ref = _drive_scattered(_server("ours", fused=True))
+    srv_shd = _drive_scattered(_server("ours", fused=True,
+                                       mesh=make_server_mesh(n_devices)))
+    _assert_same_trajectory(srv_ref, srv_shd, bitwise=False, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# Simulator-realized schedules
+# --------------------------------------------------------------------------- #
+
+
+def _sim_run(fused, policy_name="fedbuff"):
+    from repro.sim import (FedBuffK, LatencyDist, SemiSyncDeadline, SimEngine,
+                           intertwined_fleet)
+    from repro.sim.bridge import ServerBridge
+
+    srv = _server("ours", fused=fused)
+    x, y = make_feature_dataset(20, n_classes=N_CLASSES,
+                                n_features=N_FEATURES, seed=0)
+    idx = dirichlet_partition(y, 10, alpha=0.1, seed=0)
+    hist = client_label_histograms(y, idx, N_CLASSES)
+    fleet = intertwined_fleet(
+        hist, 2, n_slow=3,
+        slow=LatencyDist("lognormal", 2.2, 0.5),
+        fast=LatencyDist("lognormal", 0.4, 0.3),
+        network=LatencyDist("fixed", 0.02))
+    policy = FedBuffK(4) if policy_name == "fedbuff" else SemiSyncDeadline(1.0)
+    eng = SimEngine(fleet, policy, ServerBridge(srv), seed=0, horizon=6.0)
+    summary = eng.run()
+    return srv, eng, summary
+
+
+@pytest.mark.parametrize("policy_name", ["fedbuff", "semi_sync"])
+def test_fused_matches_loop_under_simulator(policy_name):
+    """Simulator-realized arrival schedules (stochastic latencies, cohorts
+    mixing base versions arbitrarily) replay bit-for-bit across engines —
+    and the event process itself is identical (same trace digest)."""
+    srv_f, eng_f, sum_f = _sim_run(True, policy_name)
+    srv_l, _, sum_l = _sim_run(False, policy_name)
+    assert sum_f["trace_digest"] == sum_l["trace_digest"]
+    assert sum_f["aggregations"] == sum_l["aggregations"] > 0
+    _assert_same_trajectory(srv_f, srv_l, bitwise=True)
+    # the cohorts genuinely scattered base rounds (else this test is vacuous)
+    realized = [tau for taus in eng_f.realized.values() for tau in taus]
+    assert len(set(realized)) > 1
+
+
+# --------------------------------------------------------------------------- #
+# VersionStore-backed history inside the server
+# --------------------------------------------------------------------------- #
+
+
+def test_small_capacity_spill_replays_large_capacity():
+    """A capacity-3 VersionStore (deliveries reach through the spill) must
+    replay the capacity-64 trajectory bit for bit — host spill is exact."""
+    srv_small = _drive_scattered(_server("w_pred", capacity=3), rounds=10)
+    srv_large = _drive_scattered(_server("w_pred", capacity=64), rounds=10)
+    np.testing.assert_array_equal(
+        np.asarray(tree_to_vector(srv_small.global_params)),
+        np.asarray(tree_to_vector(srv_large.global_params)))
+    assert srv_small.history.n_spilled > 0
+    assert srv_small.history.device_bytes < srv_large.history.device_bytes
+
+
+def test_history_device_memory_bounded_over_run():
+    srv = _server("unweighted", capacity=4)
+    baseline = srv.history.device_bytes
+    _drive_scattered(srv, rounds=12)
+    assert srv.history.device_bytes == baseline
+    assert len(srv.history) == 13              # init + 12 aggregations
+
+
+# --------------------------------------------------------------------------- #
+# Vectorized eval
+# --------------------------------------------------------------------------- #
+
+
+def test_vectorized_eval_matches_per_class_loop():
+    """The one-pass segment_sum eval equals the historic per-class Python
+    loop exactly (sums of 1.0s are exact in float32)."""
+    srv = _server("unweighted")
+
+    def reference(params):
+        logits = srv.model.apply(params, srv.test_x)
+        pred = jnp.argmax(logits, -1)
+        acc = jnp.mean((pred == srv.test_y).astype(jnp.float32))
+        per_class = []
+        for c in range(srv.model.n_classes):
+            m = (srv.test_y == c).astype(jnp.float32)
+            correct = ((pred == srv.test_y).astype(jnp.float32) * m).sum()
+            per_class.append(correct / jnp.maximum(m.sum(), 1.0))
+        return acc, jnp.stack(per_class)
+
+    for seed in range(3):
+        params = srv.model.init(jax.random.PRNGKey(seed))
+        acc_v, pc_v = srv._eval_fn(params)
+        acc_r, pc_r = reference(params)
+        np.testing.assert_array_equal(np.asarray(acc_v), np.asarray(acc_r))
+        np.testing.assert_array_equal(np.asarray(pc_v), np.asarray(pc_r))
+    assert pc_v.shape == (N_CLASSES,)
+
+
+# --------------------------------------------------------------------------- #
+# Edge cases
+# --------------------------------------------------------------------------- #
+
+
+def test_fused_empty_and_degenerate_cohorts():
+    """Empty cohorts, fresh-only, stale-only and duplicate-client pairs all
+    keep version bookkeeping aligned (one history append per step)."""
+    srv = _server("ours")
+    fast = srv.schedule.fast_clients
+    slow = srv.schedule.slow_clients
+    srv.step(0, [], [])                          # fully empty
+    srv.step(1, fast[:2], [])                    # fresh only
+    srv.step(2, [], [(slow[0], 0), (slow[1], 1)])  # stale only, mixed bases
+    # duplicate client in pairs: dict semantics (first position, last base)
+    srv.step(3, fast[:1], [(slow[0], 1), (slow[0], 2)])
+    assert len(srv.history) == 5
+    srv_l = _server("ours", fused=False)
+    srv_l.step(0, [], [])
+    srv_l.step(1, fast[:2], [])
+    srv_l.step(2, [], [(slow[0], 0), (slow[1], 1)])
+    srv_l.step(3, fast[:1], [(slow[0], 1), (slow[0], 2)])
+    _assert_same_trajectory(srv, srv_l, bitwise=True)
+
+
+def test_delivery_order_mirrors_grouped_dict_semantics():
+    order = Server._delivery_order([(7, 3), (2, 1), (5, 3), (2, 4)])
+    # grouped emission order: base 3 -> [7, 5], base 1 -> [2], base 4 -> [2]
+    # (the duplicate keeps client 2's first delivery position, last base)
+    assert order == [(7, 3), (5, 3), (2, 4)]
+    assert Server._delivery_order([]) == []

@@ -1,0 +1,133 @@
+"""VersionStore: ring-buffer exactness, host spill, bounded device memory.
+
+The fused aggregation round's equivalence oracle rests on one contract:
+every version read back from the store — ring row, spilled row, or a mixed
+``gather`` — is bit-for-bit the params that were appended. These tests pin
+that contract plus the boundedness claim (device bytes constant while the
+version count grows without limit).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.versions import VersionStore
+
+
+def _tree(seed, scale=1.0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (4, 3)) * scale,
+            "b": {"c": jax.random.normal(k2, (5,)) * scale},
+            "s": jnp.asarray(float(seed))}      # scalar leaf
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_append_get_roundtrip_within_capacity():
+    store = VersionStore(_tree(0), capacity=8)
+    refs = [_tree(i) for i in range(5)]
+    for i, t in enumerate(refs):
+        assert store.append(t) == i
+    assert len(store) == 5
+    for i, t in enumerate(refs):
+        _assert_tree_equal(store[i], t)
+    # negative indexing mirrors the historic list API
+    _assert_tree_equal(store[-1], refs[-1])
+    _assert_tree_equal(store[-5], refs[0])
+    with pytest.raises(IndexError):
+        store[5]
+    with pytest.raises(IndexError):
+        store[-6]
+
+
+def test_iteration_matches_list():
+    store = VersionStore(_tree(0), capacity=4)
+    refs = [_tree(10 + i) for i in range(7)]       # wraps + spills
+    for t in refs:
+        store.append(t)
+    seen = list(store)
+    assert len(seen) == 7
+    for got, ref in zip(seen, refs):
+        _assert_tree_equal(got, ref)
+
+
+def test_spill_keeps_old_versions_exact():
+    store = VersionStore(_tree(0), capacity=3)
+    refs = [_tree(i, scale=1.0 + 0.1 * i) for i in range(10)]
+    for t in refs:
+        store.append(t)
+    assert store.window_start == 7
+    assert store.n_spilled == 7
+    for i, t in enumerate(refs):               # spilled AND resident rows
+        _assert_tree_equal(store[i], t)
+
+
+def test_device_memory_bounded_at_capacity():
+    store = VersionStore(_tree(0), capacity=4)
+    baseline = store.device_bytes
+    for i in range(50):
+        store.append(_tree(i))
+        assert store.device_bytes == baseline   # ring never grows
+    ring_shapes = [l.shape for l in jax.tree_util.tree_leaves(store._ring)]
+    assert all(s[0] == 4 for s in ring_shapes)
+    assert len(store) == 50 and store.n_spilled == 46
+
+
+def test_gather_mixed_window_and_spill():
+    store = VersionStore(_tree(0), capacity=3)
+    refs = [_tree(i) for i in range(8)]
+    for t in refs:
+        store.append(t)
+    versions = [0, 6, 3, 7, 0, 5]              # spilled, resident, repeats
+    stacked = store.gather(versions)
+    for row, v in enumerate(versions):
+        _assert_tree_equal(
+            jax.tree_util.tree_map(lambda a: a[row], stacked), refs[v])
+    with pytest.raises(IndexError):
+        store.gather([0, 8])
+    with pytest.raises(IndexError):
+        store.gather([-1])
+
+
+def test_gather_matches_getitem_stack():
+    store = VersionStore(_tree(0), capacity=4)
+    for i in range(6):
+        store.append(_tree(i))
+    versions = [1, 5, 4, 0]
+    stacked = store.gather(versions)
+    manual = jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a), *[store[v] for v in versions])
+    _assert_tree_equal(stacked, manual)
+
+
+def test_spill_disabled_evicts():
+    store = VersionStore(_tree(0), capacity=2, spill=False)
+    for i in range(5):
+        store.append(_tree(i))
+    _assert_tree_equal(store[4], _tree(4))
+    _assert_tree_equal(store[3], _tree(3))
+    with pytest.raises(KeyError):
+        store[1]                               # evicted, no host copy
+    with pytest.raises(KeyError):
+        store.gather([1, 4])
+    assert store.n_spilled == 0
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        VersionStore(_tree(0), capacity=0)
+
+
+def test_dtype_preserved():
+    t = {"w": jnp.ones((3,), jnp.float32), "n": jnp.asarray(2, jnp.int32)}
+    store = VersionStore(t, capacity=2)
+    store.append(t)
+    got = store[0]
+    assert got["w"].dtype == jnp.float32
+    assert got["n"].dtype == jnp.int32
