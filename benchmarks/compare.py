@@ -47,7 +47,7 @@ import json
 import sys
 from typing import Any, Dict, List, Optional, Tuple
 
-GATED_PREFIXES = ("sim/engine_", "server/", "gi/", "step/")
+GATED_PREFIXES = ("sim/engine_", "sim_scale/", "server/", "gi/", "step/")
 
 # calibration canaries (benchmarks/run.py::calibrate): fixed reference
 # workloads whose baseline/fresh ratio measures machine-wide speed, which

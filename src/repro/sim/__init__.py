@@ -6,19 +6,25 @@ latency/dropout models) · ``policies`` (aggregation triggers) · ``bridge``
 seed-reproducible workloads; CLI via ``python -m repro.sim``).
 """
 
-from repro.sim.bridge import RecordingAggregator, ServerBridge
-from repro.sim.devices import (DeviceFleet, DeviceProfile, LatencyDist,
-                               fleet_from_schedule, homogeneous_fleet,
-                               intertwined_fleet)
-from repro.sim.engine import Arrival, SimEngine
+from repro.sim.bridge import (NullAggregator, RecordingAggregator,
+                              ServerBridge)
+from repro.sim.devices import (DeviceFleet, DeviceProfile, FleetArrays,
+                               LatencyDist, fleet_from_schedule,
+                               homogeneous_fleet, intertwined_fleet,
+                               trace_fleet)
+from repro.sim.engine import Arrival, SimEngine, trace_digest
+from repro.sim.engine_vec import VecEngine
 from repro.sim.policies import (FedBuffK, PureAsync, SemiSyncDeadline,
                                 TriggerPolicy)
-from repro.sim.scenarios import SimRun, build, describe, names, register
+from repro.sim.scenarios import (SimRun, build, describe, engine_only, names,
+                                 register)
+from repro.sim.wheel import TimeWheel
 
 __all__ = [
-    "Arrival", "DeviceFleet", "DeviceProfile", "FedBuffK", "LatencyDist",
-    "PureAsync", "RecordingAggregator", "SemiSyncDeadline", "ServerBridge",
-    "SimEngine", "SimRun", "TriggerPolicy", "build", "describe",
+    "Arrival", "DeviceFleet", "DeviceProfile", "FedBuffK", "FleetArrays",
+    "LatencyDist", "NullAggregator", "PureAsync", "RecordingAggregator",
+    "SemiSyncDeadline", "ServerBridge", "SimEngine", "SimRun", "TimeWheel",
+    "TriggerPolicy", "VecEngine", "build", "describe", "engine_only",
     "fleet_from_schedule", "homogeneous_fleet", "intertwined_fleet", "names",
-    "register",
+    "register", "trace_digest", "trace_fleet",
 ]

@@ -42,6 +42,9 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", type=int, default=None,
                     help="shard the server hot path over the first N devices "
                          "((pod, data) cohort mesh; default: unsharded)")
+    ap.add_argument("--engine", choices=("vec", "heap"), default=None,
+                    help="event engine: vectorized time-wheel (default) or "
+                         "the per-event heap oracle — same trace digest")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args(argv)
 
@@ -58,6 +61,8 @@ def main(argv=None) -> int:
     if args.mesh is not None:
         from repro.launch.mesh import make_server_mesh
         overrides["mesh"] = make_server_mesh(args.mesh)
+    if args.engine is not None:
+        overrides["engine"] = args.engine
     run = scenarios.build(args.scenario, seed=args.seed,
                           horizon=args.horizon, **overrides)
     summary = run.run()

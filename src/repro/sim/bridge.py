@@ -50,6 +50,33 @@ class RecordingAggregator:
         return 0.0
 
 
+class NullAggregator:
+    """Pure-throughput sink for fleet-scale benchmarks.
+
+    ``wants_arrays=True`` tells the vectorized engine to hand cohorts over
+    as numpy arrays — ``(version, fresh_ids, (stale_clients, stale_bases))``
+    — skipping the list materialization that would otherwise dominate a
+    100k-client aggregation. Only counts are kept."""
+
+    wants_arrays = True
+
+    def __init__(self):
+        self.n_cohorts = 0
+        self.n_updates = 0
+
+    def aggregate(self, version: int, fresh_ids, stale_pairs):
+        self.n_cohorts += 1
+        if isinstance(stale_pairs, tuple) and len(stale_pairs) == 2:
+            n_stale = len(stale_pairs[0])     # array form (vec engine)
+        else:
+            n_stale = len(stale_pairs)        # list form (heap engine)
+        self.n_updates += len(fresh_ids) + n_stale
+        return {}
+
+    def evaluate(self) -> float:
+        return 0.0
+
+
 class ServerBridge:
     """Drives a real ``Server`` with externally-determined cohorts.
 

@@ -3,14 +3,24 @@
 A client device is a ``DeviceProfile``: a compute-latency distribution, a
 network-latency distribution, and an optional dropout process (per-job
 failure probability + downtime distribution). A ``DeviceFleet`` holds one
-profile per client and is the engine's single source of randomness for
-device behaviour — every sample goes through the engine's seeded
-``numpy.random.Generator``, so a (scenario, seed) pair replays exactly.
+profile per client; ``FleetArrays`` is the same fleet flattened to
+struct-of-arrays form, which is what the vectorized engine samples — one
+batched transform over a whole dispatch wave instead of one Python call
+per job.
+
+Randomness is counter-based (``repro.sim.rand``): every job owns a fixed
+block of uniforms derived from ``(seed, job_id)``, and both engines map the
+SAME block through the SAME elementwise transforms — so the heap oracle
+(one job at a time) and the vectorized engine (one wave at a time) produce
+bitwise-identical latencies, dropout decisions and downtimes.
 
 Heavy-tail latency is the regime the paper targets (*unlimited* staleness):
 ``lognormal`` models the bulk of mobile-device variability, ``pareto`` the
 stragglers whose delay has no useful upper bound (FedASMU / FedBuff device
-models use the same two families).
+models use the same two families), and ``trace`` replays an empirical
+latency table (inverse empirical CDF) — the large-scale smartphone study
+(arxiv 2006.06983) shows realistic fleets are best described by measured
+per-device latency distributions rather than any parametric family.
 
 ``intertwined_fleet`` keeps the paper's core coupling: device speed tiers
 are assigned to the top holders of a target class, so data heterogeneity
@@ -22,11 +32,17 @@ round-synchronous server.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.data.staleness import top_holders
+from repro.sim.rand import (U_COMPUTE, U_COMPUTE2, U_DOWN, U_DOWN2, U_DROP,
+                            U_NET, U_NET2, lognormal_from_uniforms,
+                            pareto_from_uniforms, trace_from_uniforms)
+
+LATENCY_KINDS = ("fixed", "lognormal", "pareto", "trace")
+KIND_CODES = {k: i for i, k in enumerate(LATENCY_KINDS)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,26 +54,55 @@ class LatencyDist:
     kind="pareto":    scale ``loc``, tail index ``alpha = 1/spread``
                       (smaller spread = lighter tail; spread >= 1 means
                       infinite mean — genuinely unlimited staleness).
+    kind="trace":     empirical inverse CDF over ``table`` (a tuple of
+                      measured latencies, sorted at construction), scaled
+                      by ``loc`` — the trace-derived device model.
     """
 
     kind: str = "fixed"
     loc: float = 1.0
     spread: float = 0.0
+    table: Tuple[float, ...] = ()
 
     def __post_init__(self):
-        if self.kind not in ("fixed", "lognormal", "pareto"):
+        if self.kind not in LATENCY_KINDS:
             raise ValueError(f"unknown latency kind: {self.kind}")
         if self.loc < 0 or self.spread < 0:
             raise ValueError(f"latency params must be >= 0: {self}")
+        if self.kind == "trace":
+            if len(self.table) == 0:
+                raise ValueError("trace latency needs a non-empty table")
+            if any(v < 0 for v in self.table):
+                raise ValueError("trace table entries must be >= 0")
+            object.__setattr__(self, "table",
+                               tuple(sorted(float(v) for v in self.table)))
+        elif self.table:
+            raise ValueError(f"table only applies to kind='trace': {self}")
+        # cached ndarray view of the quantile table (not a dataclass field:
+        # equality/hash stay on the tuple)
+        object.__setattr__(self, "_table_np",
+                           np.asarray(self.table, dtype=np.float64))
 
-    def sample(self, rng: np.random.Generator) -> float:
+    def from_uniforms(self, u1: float, u2: float = 0.0) -> float:
+        """Map this job's uniform pair to a latency (scalar; bitwise equal
+        to the vectorized ``FleetArrays`` path on the same uniforms)."""
+        if self.kind == "trace":
+            return float(trace_from_uniforms(self.loc, self._table_np, u1))
         if self.kind == "fixed" or self.spread == 0.0:
             return float(self.loc)
         if self.kind == "lognormal":
-            return float(self.loc * np.exp(self.spread * rng.standard_normal()))
-        # pareto: inverse-CDF on the open interval so the tail is unbounded
-        u = rng.random()
-        return float(self.loc * (1.0 - u) ** (-self.spread))
+            return float(lognormal_from_uniforms(self.loc, self.spread,
+                                                 u1, u2))
+        return float(pareto_from_uniforms(self.loc, self.spread, u1))
+
+    def sample(self, rng: np.random.Generator) -> float:
+        """Draw from a free-running generator (diagnostics / tests; the
+        engines themselves use per-job counter blocks)."""
+        if self.kind == "fixed" or (self.spread == 0.0
+                                    and self.kind != "trace"):
+            return float(self.loc)           # draw-free, like the engines
+        u = rng.random(2)
+        return self.from_uniforms(u[0], u[1])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,10 +124,25 @@ class DeviceFleet:
 
     def __init__(self, profiles: Sequence[DeviceProfile]):
         self.profiles: List[DeviceProfile] = list(profiles)
+        self._arrays: Optional["FleetArrays"] = None
 
     def __len__(self) -> int:
         return len(self.profiles)
 
+    # ---- per-job counter-block accessors (the heap oracle's path) ---- #
+    def job_latency_from_block(self, client: int, u: np.ndarray) -> float:
+        p = self.profiles[client]
+        return (p.compute.from_uniforms(u[U_COMPUTE], u[U_COMPUTE2])
+                + p.network.from_uniforms(u[U_NET], u[U_NET2]))
+
+    def job_drops_from_block(self, client: int, u: np.ndarray) -> bool:
+        return bool(u[U_DROP] < self.profiles[client].dropout_prob)
+
+    def downtime_from_block(self, client: int, u: np.ndarray) -> float:
+        return self.profiles[client].downtime.from_uniforms(u[U_DOWN],
+                                                            u[U_DOWN2])
+
+    # ---- free-running accessors (diagnostics / scenario summaries) ---- #
     def job_latency(self, rng: np.random.Generator, client: int) -> float:
         return self.profiles[client].job_latency(rng)
 
@@ -98,6 +158,133 @@ class DeviceFleet:
         rng = np.random.default_rng(seed)
         return float(np.mean(
             [self.job_latency(rng, client) for _ in range(n)]))
+
+    def arrays(self) -> "FleetArrays":
+        """Struct-of-arrays view (cached) for the vectorized engine."""
+        if self._arrays is None:
+            self._arrays = FleetArrays.from_profiles(self.profiles)
+        return self._arrays
+
+
+# --------------------------------------------------------------------------- #
+# Struct-of-arrays fleet
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class _FamilyArrays:
+    """One latency family (compute / network / downtime) over all clients."""
+
+    kind: np.ndarray          # int8 KIND_CODES
+    loc: np.ndarray           # float64
+    spread: np.ndarray        # float64
+    table_idx: np.ndarray     # int32, -1 when not kind='trace'
+    tables: List[np.ndarray]  # unique sorted quantile tables
+
+    @classmethod
+    def from_dists(cls, dists: Sequence[LatencyDist]) -> "_FamilyArrays":
+        tables: List[np.ndarray] = []
+        index: dict = {}
+        kind = np.empty(len(dists), np.int8)
+        loc = np.empty(len(dists), np.float64)
+        spread = np.empty(len(dists), np.float64)
+        tidx = np.full(len(dists), -1, np.int32)
+        for i, d in enumerate(dists):
+            kind[i] = KIND_CODES[d.kind]
+            loc[i] = d.loc
+            spread[i] = d.spread
+            if d.kind == "trace":
+                if d.table not in index:
+                    index[d.table] = len(tables)
+                    tables.append(np.asarray(d.table, np.float64))
+                tidx[i] = index[d.table]
+        return cls(kind, loc, spread, tidx, tables)
+
+    @classmethod
+    def broadcast(cls, dist: LatencyDist, n: int) -> "_FamilyArrays":
+        tables = ([np.asarray(dist.table, np.float64)]
+                  if dist.kind == "trace" else [])
+        return cls(np.full(n, KIND_CODES[dist.kind], np.int8),
+                   np.full(n, dist.loc, np.float64),
+                   np.full(n, dist.spread, np.float64),
+                   np.full(n, 0 if tables else -1, np.int32), tables)
+
+    def sample(self, cl: np.ndarray, u1: np.ndarray,
+               u2: np.ndarray) -> np.ndarray:
+        """Latencies for clients ``cl`` from their jobs' uniform columns —
+        one masked elementwise transform per family present in the wave."""
+        kind, loc, spread = self.kind[cl], self.loc[cl], self.spread[cl]
+        m = (kind == KIND_CODES["lognormal"]) & (spread > 0.0)
+        if m.all():                            # single-family wave: no
+            return lognormal_from_uniforms(loc, spread, u1, u2)  # scatter
+        out = loc.copy()                       # fixed / spread==0: just loc
+        if m.any():
+            out[m] = lognormal_from_uniforms(loc[m], spread[m], u1[m], u2[m])
+        m = (kind == KIND_CODES["pareto"]) & (spread > 0.0)
+        if m.any():
+            out[m] = pareto_from_uniforms(loc[m], spread[m], u1[m])
+        m = kind == KIND_CODES["trace"]
+        if m.any():
+            tidx = self.table_idx[cl]
+            for ti in np.unique(tidx[m]):
+                mm = m & (tidx == ti)
+                out[mm] = trace_from_uniforms(loc[mm], self.tables[ti],
+                                              u1[mm])
+        return out
+
+
+@dataclasses.dataclass
+class FleetArrays:
+    """A whole fleet as parallel per-client arrays.
+
+    The vectorized engine's device model: a dispatch wave of ``k`` jobs
+    costs O(1) Python calls — gather the wave's uniform blocks, push each
+    latency family through one masked transform, compare one column against
+    ``dropout_prob``. Construct from profiles (``DeviceFleet.arrays()``)
+    or directly via ``FleetArrays.homogeneous`` when materializing millions
+    of ``DeviceProfile`` objects would itself be the bottleneck.
+    """
+
+    compute: _FamilyArrays
+    network: _FamilyArrays
+    dropout_prob: np.ndarray
+    downtime: _FamilyArrays
+
+    def __len__(self) -> int:
+        return len(self.dropout_prob)
+
+    @classmethod
+    def from_profiles(cls, profiles: Sequence[DeviceProfile]) -> "FleetArrays":
+        return cls(
+            _FamilyArrays.from_dists([p.compute for p in profiles]),
+            _FamilyArrays.from_dists([p.network for p in profiles]),
+            np.asarray([p.dropout_prob for p in profiles], np.float64),
+            _FamilyArrays.from_dists([p.downtime for p in profiles]))
+
+    @classmethod
+    def homogeneous(cls, n_clients: int, compute: LatencyDist,
+                    network: Optional[LatencyDist] = None,
+                    dropout_prob: float = 0.0,
+                    downtime: Optional[LatencyDist] = None) -> "FleetArrays":
+        """Broadcast one profile to ``n_clients`` without building objects."""
+        return cls(
+            _FamilyArrays.broadcast(compute, n_clients),
+            _FamilyArrays.broadcast(network or LatencyDist("fixed", 0.0),
+                                    n_clients),
+            np.full(n_clients, float(dropout_prob), np.float64),
+            _FamilyArrays.broadcast(downtime or LatencyDist("fixed", 5.0),
+                                    n_clients))
+
+    def job_latency(self, cl: np.ndarray, u: np.ndarray) -> np.ndarray:
+        """compute + network latency for a wave (``u`` is ``(k, N_U)``)."""
+        return (self.compute.sample(cl, u[:, U_COMPUTE], u[:, U_COMPUTE2])
+                + self.network.sample(cl, u[:, U_NET], u[:, U_NET2]))
+
+    def job_drops(self, cl: np.ndarray, u: np.ndarray) -> np.ndarray:
+        return u[:, U_DROP] < self.dropout_prob[cl]
+
+    def downtime_of(self, cl: np.ndarray, u: np.ndarray) -> np.ndarray:
+        return self.downtime.sample(cl, u[:, U_DOWN], u[:, U_DOWN2])
 
 
 # --------------------------------------------------------------------------- #
@@ -164,3 +351,27 @@ def fleet_from_schedule(staleness: Sequence[int],
         DeviceProfile(compute=LatencyDist(
             "fixed", (float(tau) + 0.5) * round_len))
         for tau in staleness])
+
+
+def trace_fleet(n_clients: int, table: Sequence[float],
+                loc_spread: float = 0.0, seed: int = 0,
+                network: Optional[LatencyDist] = None,
+                dropout_prob: float = 0.0,
+                downtime: Optional[LatencyDist] = None) -> DeviceFleet:
+    """Trace-derived fleet: every client replays the empirical latency
+    ``table``; ``loc_spread > 0`` additionally scatters per-client scale
+    factors ``lognormal(1, loc_spread)`` (deterministic in ``seed``), the
+    standard device-speed spread on top of a shared measured distribution.
+    """
+    table = tuple(float(v) for v in table)
+    rng = np.random.default_rng(seed)
+    network = network or LatencyDist("fixed", 0.0)
+    downtime = downtime or LatencyDist("fixed", 5.0)
+    profiles = []
+    for _ in range(n_clients):
+        loc = (float(np.exp(loc_spread * rng.standard_normal()))
+               if loc_spread > 0 else 1.0)
+        profiles.append(DeviceProfile(
+            compute=LatencyDist("trace", loc, table=table),
+            network=network, dropout_prob=dropout_prob, downtime=downtime))
+    return DeviceFleet(profiles)

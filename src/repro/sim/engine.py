@@ -23,6 +23,15 @@ Model versions count aggregations: a job dispatched at version ``v`` and
 consumed at version ``v'`` has *realized staleness* ``v' - v`` — zero means
 the update is fresh (nothing was aggregated while it trained), matching the
 round-synchronous server's fast path.
+
+This heap engine is the per-event ORACLE: randomness is counter-based
+(``repro.sim.rand`` — each job's latency/dropout/downtime come from a
+Philox block keyed on ``(seed, job_id)``), so the vectorized
+struct-of-arrays engine (``repro.sim.engine_vec``) reproduces its event
+trace bit-for-bit while sampling whole dispatch waves at once. Scenarios
+select the engine via ``engine="vec" | "heap"`` (vectorized by default,
+heap behind the flag — the same oracle-behind-a-flag pattern as
+``FLConfig(fused_step=False)``).
 """
 
 from __future__ import annotations
@@ -37,8 +46,24 @@ import numpy as np
 
 from repro.data.staleness import StalenessSchedule, observed_schedule
 from repro.sim.devices import DeviceFleet
+from repro.sim.rand import U_FRAC, JobRandoms
 
 EVENT_KINDS = ("dispatch", "upload", "dropout", "rejoin", "round", "eval")
+
+# every counter the engine writes; summary() reports each one (plus any
+# non-canonical key a policy may add) — tests/test_sim.py asserts no
+# counter can silently drop out of the summary again
+COUNTER_KEYS = ("events", "aggregations", "dispatches", "arrivals",
+                "lost_jobs", "dropouts", "rejoins", "superseded",
+                "empty_triggers", "skipped_down", "skipped_busy",
+                "cancelled_uploads", "evals")
+
+
+def trace_digest(trace: List[Tuple[float, str, int, str]]) -> str:
+    """Fingerprint of an event trace — the cross-engine equivalence oracle
+    (identical digests ⇒ identical event sequences)."""
+    lines = "\n".join(f"{t:.9f}|{k}|{c}|{i}" for t, k, c, i in trace)
+    return hashlib.sha256(lines.encode()).hexdigest()[:16]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,10 +84,13 @@ class SimEngine:
         self.fleet = fleet
         self.policy = policy
         self.aggregator = aggregator
-        self.rng = np.random.default_rng(seed)
+        self.seed = int(seed)
+        self._randoms = JobRandoms(seed)
         self.horizon = float(horizon)
         self.eval_every_time = eval_every_time
         self.max_events = max_events
+        self._started = False
+        self._eval_scheduled = False
 
         n = len(fleet)
         self.n_clients = n
@@ -107,6 +135,20 @@ class SimEngine:
         for i in range(self.n_clients):
             self.request_dispatch(i, force=force)
 
+    def has_pending(self, kind: str) -> bool:
+        """Is an event of ``kind`` still scheduled? (Policies use this on
+        resume to decide whether their timer chain needs re-arming.)"""
+        return any(k == kind for _, _, k, _, _ in self._heap)
+
+    def buffer_size(self, distinct: bool = False) -> int:
+        """Arrival-buffer occupancy; ``distinct=True`` counts distinct
+        clients (superseded duplicates from re-dispatched clients are
+        deduped at aggregation time, so a trigger that counts raw arrivals
+        can fire with fewer than K effective updates)."""
+        if not distinct:
+            return len(self.buffer)
+        return len({a.client for a in self.buffer})
+
     # ------------------------------------------------------------------ #
     # Event handlers
     # ------------------------------------------------------------------ #
@@ -120,14 +162,15 @@ class SimEngine:
         if self.inflight_count[client] > 0 and not force:
             self.counters["skipped_busy"] += 1
             return
-        latency = self.fleet.job_latency(self.rng, client)
         job_id = self._job_seq
         self._job_seq += 1
+        u = self._randoms.block(job_id)
+        latency = self.fleet.job_latency_from_block(client, u)
         self.counters["dispatches"] += 1
-        if self.fleet.job_drops(self.rng, client):
+        if self.fleet.job_drops_from_block(client, u):
             # the job dies partway through: the device goes down at a random
             # fraction of the would-be latency and the upload never happens
-            frac = self.rng.random()
+            frac = float(u[U_FRAC])
             self._doomed[job_id] = client
             self.inflight_count[client] += 1
             self.schedule(latency * frac, "dropout", client, job=job_id)
@@ -174,7 +217,10 @@ class SimEngine:
         if self.up[client]:
             self.up[client] = False
             self.counters["dropouts"] += 1
-            down = self.fleet.downtime(self.rng, client)
+            # downtime comes from the FAILING job's counter block, so it is
+            # order-free: both engines derive it from (seed, job) alone
+            down = self.fleet.downtime_from_block(client,
+                                                  self._randoms.block(job))
             self.schedule(down, "rejoin", client)
             self._trace("dropout", client, f"lost{lost} down{down:.3f}")
         else:
@@ -194,10 +240,27 @@ class SimEngine:
         # accuracy deliberately stays OUT of the trace: the trace fingerprints
         # the event process, which must be identical across server strategies
         self._trace("eval", -1, f"v{self.version}")
+        self._eval_scheduled = False
         if self.eval_every_time:
             nxt = self.clock + self.eval_every_time
             if nxt <= self.horizon:
                 self.schedule(self.eval_every_time, "eval")
+                self._eval_scheduled = True
+
+    def _arm_eval(self) -> None:
+        """(Re-)arm the eval chain up to the current horizon. The chain dies
+        whenever the next tick would overshoot the horizon, so extending a
+        finished run (``run(until=...)`` with a larger horizon) must re-seed
+        it from the eval grid — not only the first ``run`` call."""
+        if not self.eval_every_time or self._eval_scheduled:
+            return
+        k = int(np.floor(self.clock / self.eval_every_time)) + 1
+        nxt = k * self.eval_every_time
+        if nxt <= self.clock:              # clock exactly on a fired tick
+            nxt += self.eval_every_time
+        if nxt <= self.horizon:
+            self.schedule(nxt - self.clock, "eval")
+            self._eval_scheduled = True
 
     # ------------------------------------------------------------------ #
     # Aggregation
@@ -252,9 +315,15 @@ class SimEngine:
     def run(self, until: Optional[float] = None) -> Dict[str, Any]:
         if until is not None:
             self.horizon = float(until)
-        self.policy.start(self)
-        if self.eval_every_time and self.eval_every_time <= self.horizon:
-            self.schedule(self.eval_every_time, "eval")
+        if not self._started:
+            self._started = True
+            self.policy.start(self)
+        else:
+            # extending a finished run: the policy may need its timer chain
+            # re-armed (it dies at the old horizon), but must NOT re-run
+            # start() — that would double-dispatch the whole fleet
+            self.policy.on_resume(self)
+        self._arm_eval()
         while self._heap:
             if self.counters["events"] >= self.max_events:
                 self._trace("halt", -1, "max_events")
@@ -283,8 +352,7 @@ class SimEngine:
     # Reporting
     # ------------------------------------------------------------------ #
     def trace_digest(self) -> str:
-        lines = "\n".join(f"{t:.9f}|{k}|{c}|{i}" for t, k, c, i in self.trace)
-        return hashlib.sha256(lines.encode()).hexdigest()[:16]
+        return trace_digest(self.trace)
 
     def realized_schedule(self, reducer: str = "mean") -> StalenessSchedule:
         """Observed-staleness view compatible with schedule consumers."""
@@ -292,20 +360,14 @@ class SimEngine:
 
     def summary(self) -> Dict[str, Any]:
         all_taus = [t for v in self.realized.values() for t in v]
-        c = self.counters
-        return {
+        # snapshot first: reading a missing key off the defaultdict would
+        # insert it, i.e. summary() would mutate the counters it reports
+        c = dict(self.counters)
+        out = {k: c.get(k, 0) for k in COUNTER_KEYS}
+        out.update(c)      # any non-canonical counter is reported verbatim
+        out.update({
             "clock": self.clock,
             "version": self.version,
-            "events": c["events"],
-            "aggregations": c["aggregations"],
-            "dispatches": c["dispatches"],
-            "arrivals": c["arrivals"],
-            "lost_jobs": c["lost_jobs"],
-            "dropouts": c["dropouts"],
-            "rejoins": c["rejoins"],
-            "superseded": c["superseded"],
-            "empty_triggers": c["empty_triggers"],
-            "skipped_down": c["skipped_down"],
             "buffer_pending": len(self.buffer),
             "inflight": len(self._inflight) + len(self._doomed),
             "clients_down": sum(1 for u in self.up if not u),
@@ -314,4 +376,5 @@ class SimEngine:
             "max_realized_tau": max(all_taus) if all_taus else 0,
             "trace_digest": self.trace_digest(),
             "n_evals": len(self.evals),
-        }
+        })
+        return out

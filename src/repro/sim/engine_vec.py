@@ -1,0 +1,780 @@
+"""Vectorized struct-of-arrays event engine (the fleet-scale simulator).
+
+Same contract as the heap oracle (``repro.sim.engine.SimEngine``) — same
+events, same policies, same aggregator interface, same counters, same
+trace — but the hot path is array-shaped:
+
+* **device sampling** — a dispatch wave of ``k`` jobs draws ONE Philox
+  block (``repro.sim.rand.job_uniforms``) and pushes each latency family
+  through one masked elementwise transform (``FleetArrays``), instead of
+  ``k`` Python calls into per-client ``DeviceProfile`` objects;
+* **event storage** — a bucketed time wheel (``repro.sim.wheel``) holding
+  parallel arrays, instead of a binary heap of Python tuples;
+* **event dispatch** — contiguous same-kind stretches of a bucket are
+  handled as single batches (one ``np`` call sequence per batch), with the
+  batching rules below guaranteeing the result is indistinguishable from
+  per-event processing;
+* **client state** — ``up`` / ``inflight_count`` / dropout epochs are flat
+  numpy arrays, and job bookkeeping is an append-only struct-of-arrays
+  table indexed by job id (dropout cancellation is an epoch comparison,
+  not a set walk);
+* **arrival buffering** — per-edge struct-of-arrays buffers: clients are
+  partitioned into ``n_edges`` contiguous ranges ("edge aggregators"), a
+  1M-device upload storm fans into E small edge buffers, and the root
+  cohort is the concatenation of per-edge deduped cohorts — bitwise the
+  cohort the flat engine produces, funnelled into the unchanged
+  cohort-batched ``Server.step``.
+
+**Exactness.** In strict mode (``record_trace=True``, the default) the
+engine replays the heap oracle's event sequence bit-for-bit — identical
+trace digests on the zero-variance oracle and every stock scenario
+(``tests/test_sim_vec.py``). A batch is a maximal run of events sharing
+``(kind, time)``; runs of uploads may additionally span timestamps when
+the policy declares ``passive_uploads`` (the handler provably schedules
+nothing, so nothing can interleave). Policies whose per-arrival hook reads
+buffer state (FedBuff, pure-async) get singleton upload batches — exact by
+construction, Python-speed by necessity.
+
+In fast mode (``record_trace=False``) dispatch, dropout and rejoin runs
+also batch across timestamps whenever every client in the run is distinct
+(per-client state makes distinct-client runs order-free); summaries,
+counters and cohorts still match the oracle — only the per-event trace is
+unavailable. This is the mode the ``sim_scale`` benchmarks run: ~two
+orders of magnitude past the heap engine at 100k+ devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.data.staleness import StalenessSchedule, observed_schedule
+from repro.sim.devices import DeviceFleet, FleetArrays
+from repro.sim.engine import COUNTER_KEYS, EVENT_KINDS, Arrival, trace_digest
+from repro.sim.rand import U_FRAC, job_uniforms
+from repro.sim.wheel import TimeWheel, merge_chunks
+
+KIND_CODE = {k: i for i, k in enumerate(EVENT_KINDS)}
+(K_DISPATCH, K_UPLOAD, K_DROPOUT, K_REJOIN, K_ROUND,
+ K_EVAL) = (KIND_CODE[k] for k in EVENT_KINDS)
+
+_I8 = np.int64
+
+
+class _Grow:
+    """Append-only growable array (amortized-doubling)."""
+
+    def __init__(self, dtype, cap: int = 1024):
+        self.a = np.empty(cap, dtype)
+        self.n = 0
+
+    def append(self, vals: np.ndarray) -> None:
+        k = len(vals)
+        need = self.n + k
+        if need > len(self.a):
+            cap = max(len(self.a), 1)
+            while cap < need:
+                cap *= 2
+            grown = np.empty(cap, self.a.dtype)
+            grown[:self.n] = self.a[:self.n]
+            self.a = grown
+        self.a[self.n:need] = vals
+        self.n = need
+
+    def view(self) -> np.ndarray:
+        return self.a[:self.n]
+
+
+@dataclasses.dataclass
+class ArrivalBatch:
+    """A time-sorted slab of delivered updates (policy batch hook input)."""
+
+    clients: np.ndarray
+    bases: np.ndarray
+    dispatch_times: np.ndarray
+    times: np.ndarray
+    jobs: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.clients)
+
+
+class VecEngine:
+    """Struct-of-arrays virtual-clock engine; API-compatible with
+    ``SimEngine`` for policies, aggregators, scenarios and the sweep."""
+
+    def __init__(self, fleet, policy: Any, aggregator: Any,
+                 seed: int = 0, horizon: float = 100.0,
+                 eval_every_time: Optional[float] = None,
+                 max_events: int = 1_000_000,
+                 wheel_dt: float = 1.0,
+                 n_edges: int = 1,
+                 record_trace: bool = True,
+                 record_realized: bool = True,
+                 collect_agg_log: bool = True):
+        if isinstance(fleet, FleetArrays):
+            self.fleet, self.arrays = None, fleet
+        else:
+            self.fleet, self.arrays = fleet, fleet.arrays()
+        self.policy = policy
+        self.aggregator = aggregator
+        self.seed = int(seed)
+        self.horizon = float(horizon)
+        self.eval_every_time = eval_every_time
+        self.max_events = max_events
+        self.record_trace = bool(record_trace)
+        self.record_realized = bool(record_realized)
+        self.collect_agg_log = bool(collect_agg_log)
+
+        n = len(self.arrays)
+        self.n_clients = n
+        self.n_edges = max(1, min(int(n_edges), n))
+        # edge e owns clients [bounds[e], bounds[e+1])
+        self._edge_bounds = np.linspace(0, n, self.n_edges + 1).astype(_I8)
+        self.clock = 0.0
+        self.version = 0
+        self.up = np.ones(n, bool)
+        self.inflight_count = np.zeros(n, _I8)
+        self._epoch = np.zeros(n, _I8)         # bumped on job-killing dropout
+
+        self._wheel = TimeWheel(wheel_dt)
+        self._seq = 0
+        self._job_seq = 0
+        self._started = False
+        self._eval_scheduled = False
+        # dropout-free fleets skip all cancellation bookkeeping (epoch
+        # gathers, downtime derivation) — values are bitwise unchanged
+        # because every skipped quantity is only read on dropout events
+        self._no_drop = bool(n == 0 or self.arrays.dropout_prob.max() == 0)
+        # deferred-upload fast path: with no dropouts, a pure-no-op upload
+        # hook and no trace to record, upload events never need the wheel —
+        # they wait in pending arrays (with their real seqs) and commit in
+        # exact (time, seq) order just before the next wheel event
+        self._fast_uploads = (not self.record_trace and self._no_drop
+                              and getattr(policy, "passive_uploads", False)
+                              and getattr(policy, "passive_rejoins", False)
+                              and getattr(policy, "uploads_noop", False))
+        # pending (time, seq, client, job) upload waves, seq-ordered
+        self._pend: List[tuple] = []
+
+        # job table (index == job id): owner, base version, dispatch time,
+        # owner epoch at dispatch, pre-derived downtime
+        jcap = max(1024, 2 * n)
+        self._job_client = _Grow(_I8, jcap)
+        self._job_base = _Grow(_I8, jcap)
+        self._job_t0 = _Grow(np.float64, jcap)
+        self._job_epoch = _Grow(_I8, jcap)
+        self._job_down = _Grow(np.float64, jcap)
+
+        # per-edge arrival buffers (struct-of-arrays)
+        bcap = max(1024, n // self.n_edges + 1)
+        self._buf = [{"client": _Grow(_I8, bcap), "base": _Grow(_I8, bcap),
+                      "t0": _Grow(np.float64, bcap),
+                      "time": _Grow(np.float64, bcap),
+                      "job": _Grow(_I8, bcap)} for _ in range(self.n_edges)]
+        self._buf_total = 0
+
+        # realized-staleness accumulators (always); full per-client lists
+        # only when record_realized (the dict the scenarios serialize)
+        self._tau_sum = np.zeros(n, np.float64)
+        self._tau_cnt = np.zeros(n, _I8)
+        self._tau_max = np.full(n, -1, _I8)
+        self._tau_last = np.zeros(n, _I8)
+        self.realized: Dict[int, List[int]] = defaultdict(list)
+
+        self.trace: List[Any] = []
+        self.evals: List[Any] = []
+        self.agg_log: List[Dict[str, Any]] = []
+        self.counters: Dict[str, int] = defaultdict(int)
+
+    # ------------------------------------------------------------------ #
+    # Scheduling primitives (SimEngine-compatible surface)
+    # ------------------------------------------------------------------ #
+    def _push(self, times, kinds, clients, jobs=None, force=None) -> None:
+        """Append events; consumes len(times) seq numbers in array order."""
+        k = len(times)
+        seqs = np.arange(self._seq, self._seq + k, dtype=_I8)
+        self._seq += k
+        self._wheel.push(
+            np.asarray(times, np.float64), seqs,
+            np.asarray(kinds, np.int8),
+            np.asarray(clients, _I8),
+            np.zeros(k, _I8) if jobs is None else np.asarray(jobs, _I8),
+            np.zeros(k, bool) if force is None else np.asarray(force, bool))
+
+    def schedule(self, delay: float, kind: str, client: int = -1,
+                 **payload) -> None:
+        assert kind in EVENT_KINDS, kind
+        extra = set(payload) - {"job", "force"}
+        if extra:
+            raise NotImplementedError(
+                f"VecEngine events carry no custom payload (got {extra}); "
+                f"use the heap SimEngine for payload-bearing round events")
+        self._push(np.array([self.clock + float(delay)]),
+                   np.array([KIND_CODE[kind]], np.int8),
+                   np.array([client], _I8),
+                   np.array([payload.get("job", 0)], _I8),
+                   np.array([payload.get("force", False)], bool))
+
+    def request_dispatch(self, client: int, delay: float = 0.0,
+                         force: bool = False) -> None:
+        self.schedule(delay, "dispatch", client, force=force)
+
+    def dispatch_all(self, force: bool = False) -> None:
+        n = self.n_clients
+        self._push(np.full(n, self.clock), np.full(n, K_DISPATCH, np.int8),
+                   np.arange(n, dtype=_I8), force=np.full(n, force))
+
+    def has_pending(self, kind: str) -> bool:
+        if kind == "upload" and self._pend:
+            return True                       # deferred-upload fast path
+        return self._wheel.scan_kind(KIND_CODE[kind])
+
+    # ------------------------------------------------------------------ #
+    # Buffer (per-edge struct-of-arrays)
+    # ------------------------------------------------------------------ #
+    def _edge_of(self, clients: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self._edge_bounds, clients, side="right") - 1
+
+    def _buffer_append(self, clients, bases, t0s, times, jobs) -> None:
+        self._buf_total += len(clients)
+        if self.n_edges == 1:
+            b = self._buf[0]
+            b["client"].append(clients)
+            b["base"].append(bases)
+            b["t0"].append(t0s)
+            b["time"].append(times)
+            b["job"].append(jobs)
+            return
+        edges = self._edge_of(clients)
+        order = np.argsort(edges, kind="stable")
+        cuts = np.flatnonzero(np.diff(edges[order])) + 1
+        for lo, hi in zip(np.r_[0, cuts], np.r_[cuts, len(clients)]):
+            sl = order[lo:hi]
+            b = self._buf[int(edges[sl[0]])]
+            b["client"].append(clients[sl])
+            b["base"].append(bases[sl])
+            b["t0"].append(t0s[sl])
+            b["time"].append(times[sl])
+            b["job"].append(jobs[sl])
+
+    def buffer_size(self, distinct: bool = False) -> int:
+        if not distinct:
+            return self._buf_total
+        return sum(len(np.unique(b["client"].view())) for b in self._buf)
+
+    @property
+    def buffer(self) -> List[Arrival]:
+        """Heap-compatible view (diagnostics / small-scale tests only)."""
+        out = []
+        for b in self._buf:
+            out.extend(Arrival(int(c), int(v), float(t0), float(t), int(j))
+                       for c, v, t0, t, j in zip(
+                           b["client"].view(), b["base"].view(),
+                           b["t0"].view(), b["time"].view(),
+                           b["job"].view()))
+        out.sort(key=lambda a: a.job_id)   # heap buffer is in arrival order
+        return out
+
+    # ------------------------------------------------------------------ #
+    # Trace
+    # ------------------------------------------------------------------ #
+    def _trace_one(self, kind: str, client: int, info: str = "") -> None:
+        if self.record_trace:
+            self.trace.append((round(self.clock, 9), kind, client, info))
+
+    def _trace_many(self, times, kind: str, clients, infos) -> None:
+        if self.record_trace:
+            self.trace.extend(
+                (round(float(t), 9), kind, int(c), i)
+                for t, c, i in zip(times, clients, infos))
+
+    def trace_digest(self) -> str:
+        if not self.record_trace:
+            return "untraced"
+        return trace_digest(self.trace)
+
+    # ------------------------------------------------------------------ #
+    # Aggregation (policy-callable)
+    # ------------------------------------------------------------------ #
+    def aggregate(self) -> Optional[Dict[str, Any]]:
+        if self._buf_total == 0:
+            self.counters["empty_triggers"] += 1
+            self._trace_one("aggregate", -1, "empty")
+            return None
+        sel_cl: List[np.ndarray] = []
+        sel_base: List[np.ndarray] = []
+        for b in self._buf:
+            m = b["client"].n
+            if m == 0:
+                continue
+            cl, base = b["client"].view(), b["base"].view()
+            at = b["time"].view()
+            # per-client dedup: freshest (base, arrival) wins, first-in
+            # wins exact ties — the heap engine's strict-> comparison.
+            # Layout by counting sort (O(m + clients), no comparison sort):
+            # singleton clients scatter straight to their rank; only the
+            # (usually few) multi-entry clients go through the sort below.
+            counts = np.bincount(cl)
+            nz = counts > 0
+            rank = np.cumsum(nz) - 1               # dense client rank
+            n_keep = int(rank[-1]) + 1 if len(rank) else 0
+            out_cl = np.flatnonzero(nz).astype(_I8)
+            out_base = np.empty(n_keep, base.dtype)
+            multi = counts[cl] > 1
+            if multi.any():
+                sub = np.flatnonzero(multi)        # ascending: keeps the
+                scl, sbase, sat = cl[sub], base[sub], at[sub]  # index order
+                if np.all(at[1:] >= at[:-1]):
+                    # appends happen in event-time order, so within any
+                    # (client, base) group arrival time is nondecreasing
+                    # in index: a stable (base, client) sort puts the
+                    # winner LAST in its client group — except exact
+                    # arrival-time ties, where the earliest index wins
+                    # (the shift-back loop; ~never taken)
+                    order = np.lexsort((sbase, scl))
+                    last = np.r_[np.flatnonzero(
+                        np.diff(scl[order]) != 0), len(sub) - 1]
+                    starts = np.r_[0, last[:-1] + 1]
+                    pos = last
+                    while True:
+                        prev = pos - 1
+                        shift = ((prev >= starts)
+                                 & (sbase[order[prev]] == sbase[order[pos]])
+                                 & (sat[order[prev]] == sat[order[pos]]))
+                        if not shift.any():
+                            break
+                        pos = np.where(shift, prev, pos)
+                    keep = order[pos]
+                else:   # out-of-order appends: fall back to the full sort
+                    order = np.lexsort((-np.arange(len(sub)), sat, sbase,
+                                        scl))
+                    keep = order[np.r_[np.flatnonzero(
+                        np.diff(scl[order]) != 0), len(sub) - 1]]
+                out_base[rank[scl[keep]]] = sbase[keep]
+                single = ~multi
+                out_base[rank[cl[single]]] = base[single]
+            else:
+                out_base[rank[cl]] = base
+            sel_cl.append(out_cl)
+            sel_base.append(out_base)
+            b["client"].n = b["base"].n = 0
+            b["t0"].n = b["time"].n = b["job"].n = 0
+        cl = np.concatenate(sel_cl)      # edge ranges are contiguous ->
+        base = np.concatenate(sel_base)  # concat is globally client-sorted
+        self.counters["superseded"] += self._buf_total - len(cl)
+        self._buf_total = 0
+
+        taus = self.version - base
+        np.add.at(self._tau_sum, cl, taus.astype(np.float64))
+        np.add.at(self._tau_cnt, cl, 1)
+        np.maximum.at(self._tau_max, cl, taus)
+        self._tau_last[cl] = taus
+        if self.record_realized:
+            for c, t in zip(cl.tolist(), taus.tolist()):
+                self.realized[c].append(t)
+
+        fresh_m = taus == 0
+        fresh = cl[fresh_m]
+        stale_cl, stale_base = cl[~fresh_m], base[~fresh_m]
+        self._trace_one("aggregate", -1,
+                        f"v{self.version} fresh{len(fresh)} "
+                        f"stale{len(stale_cl)}")
+        if getattr(self.aggregator, "wants_arrays", False):
+            row = self.aggregator.aggregate(self.version, fresh,
+                                            (stale_cl, stale_base)) or {}
+        else:
+            fresh_l = fresh.tolist()
+            stale_l = list(zip(stale_cl.tolist(), stale_base.tolist()))
+            row = self.aggregator.aggregate(self.version, fresh_l,
+                                            stale_l) or {}
+        if self.collect_agg_log:
+            self.agg_log.append({
+                "time": self.clock, "version": self.version,
+                "fresh": fresh.tolist(),
+                "stale": list(zip(stale_cl.tolist(), stale_base.tolist())),
+                "taus": taus.tolist(), **row})
+        self.version += 1
+        self.counters["aggregations"] += 1
+        return row
+
+    # ------------------------------------------------------------------ #
+    # Batched handlers
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _has_dup(cl: np.ndarray) -> bool:
+        return bool(np.bincount(cl).max() > 1)
+
+    def _do_dispatch(self, t, cl, force) -> None:
+        if len(cl) > 1 and self._has_dup(cl):
+            # duplicate clients in one run: replay per event so each
+            # sees its predecessors' busy/up effects (rare; policy-made)
+            for i in range(len(cl)):
+                self.clock = float(t[i])
+                self._do_dispatch(t[i:i + 1], cl[i:i + 1], force[i:i + 1])
+            return
+        up = self.up[cl]
+        self.counters["skipped_down"] += int((~up).sum())
+        busy = (self.inflight_count[cl] > 0) & ~force & up
+        self.counters["skipped_busy"] += int(busy.sum())
+        ok = up & ~busy
+        if not ok.any():
+            return
+        ecl, et = cl[ok], t[ok]
+        k = len(ecl)
+        job0 = self._job_seq
+        self._job_seq += k
+        u = job_uniforms(self.seed, job0, k)
+        lat = self.arrays.job_latency(ecl, u)
+        self.counters["dispatches"] += k
+        self._job_client.append(ecl)
+        self._job_base.append(np.full(k, self.version, _I8))
+        self._job_t0.append(et)
+        if self._no_drop:
+            # every job survives: upload at et+lat (bitwise what the
+            # all-False np.where below produces), no epoch/downtime rows
+            when = et + lat
+            kinds = None if self._fast_uploads else np.full(k, K_UPLOAD,
+                                                            np.int8)
+        else:
+            drops = self.arrays.job_drops(ecl, u)
+            self._job_epoch.append(self._epoch[ecl])
+            self._job_down.append(self.arrays.downtime_of(ecl, u))
+            when = np.where(drops, et + lat * u[:, U_FRAC], et + lat)
+            kinds = np.where(drops, K_DROPOUT, K_UPLOAD).astype(np.int8)
+        self.inflight_count[ecl] += 1
+        if kinds is None:
+            # deferred-upload fast path: park the wave with its real seqs;
+            # _commit_uploads delivers it in exact (time, seq) order
+            seqs = np.arange(self._seq, self._seq + k)
+            self._seq += k
+            self._pend.append((when, seqs, ecl,
+                               np.arange(job0, job0 + k)))
+        else:
+            self._push(when, kinds, ecl, jobs=np.arange(job0, job0 + k))
+        if self.record_trace:
+            v = self.version
+            if self._no_drop:
+                self._trace_many(et, "dispatch", ecl,
+                                 (f"v{v}" for _ in range(k)))
+            else:
+                self._trace_many(et, "dispatch", ecl,
+                                 (f"v{v} doomed" if d else f"v{v}"
+                                  for d in drops))
+
+    def _commit_uploads(self, t: float, seq: Optional[int]) -> None:
+        """Deferred-upload flush (fast path): deliver every pending upload
+        that the heap would process before the wheel event ``(t, seq)`` —
+        i.e. time < t, or time == t with a smaller seq. ``seq=None`` is the
+        end-of-run flush: everything with time <= t goes. Pending storage
+        order is seq order (waves append in dispatch order), so a stable
+        time sort realizes the exact (time, seq) delivery order."""
+        if len(self._pend) == 1:
+            when, seqs, cl, jobs = self._pend[0]
+        else:
+            when = np.concatenate([p[0] for p in self._pend])
+            seqs = np.concatenate([p[1] for p in self._pend])
+            cl = np.concatenate([p[2] for p in self._pend])
+            jobs = np.concatenate([p[3] for p in self._pend])
+        if seq is None:
+            m = when <= t
+        else:
+            m = when < t
+            ties = when == t
+            if ties.any():
+                m |= ties & (seqs < seq)
+        if not m.any():
+            self._pend = [(when, seqs, cl, jobs)]
+            return
+        rest = ~m
+        if rest.any():
+            self._pend = [(when[rest], seqs[rest], cl[rest], jobs[rest])]
+            when, cl, jobs = when[m], cl[m], jobs[m]
+        else:
+            self._pend = []
+        order = np.argsort(when)
+        ts = when[order]
+        if bool((ts[1:] == ts[:-1]).any()):
+            order = np.argsort(when, kind="stable")   # ties: seq order
+            ts = when[order]
+        cl, jobs = cl[order], jobs[order]
+        k = len(cl)
+        self.clock = float(ts[-1])
+        self.counters["events"] += k
+        if k * 16 < self.n_clients:
+            np.subtract.at(self.inflight_count, cl, 1)
+        else:
+            self.inflight_count -= np.bincount(cl,
+                                               minlength=self.n_clients)
+        self._buffer_append(cl, self._job_base.a[jobs],
+                            self._job_t0.a[jobs], ts, jobs)
+        self.counters["arrivals"] += k
+        # policy.on_uploads is a declared pure no-op on this path
+
+    def _do_upload_batch(self, t, cl, jobs) -> None:
+        """Passive-policy path: buffer the whole storm, one batch hook."""
+        if self._no_drop:                      # no dropouts -> no cancels
+            lcl, lt, lj = cl, t, jobs
+            bases = self._job_base.a[lj]
+            if self.record_trace:
+                self._trace_many(t, "upload", cl,
+                                 (f"v{b}" for b in bases))
+        else:
+            dead = self._job_epoch.a[jobs] < self._epoch[cl]
+            n_dead = int(dead.sum())
+            self.counters["cancelled_uploads"] += n_dead
+            live = ~dead
+            lcl, lt, lj = cl[live], t[live], jobs[live]
+            bases = self._job_base.a[lj]
+            if self.record_trace:              # lines in event order
+                infos = np.empty(len(cl), object)
+                infos[dead] = "cancelled"
+                infos[live] = [f"v{b}" for b in bases]
+                self._trace_many(t, "upload", cl, infos)
+        if len(lcl) == 0:
+            return
+        if len(lcl) * 16 < self.n_clients:       # small batch: sparse path
+            np.subtract.at(self.inflight_count, lcl, 1)
+        else:
+            self.inflight_count -= np.bincount(lcl,
+                                               minlength=self.n_clients)
+        batch = ArrivalBatch(lcl, bases, self._job_t0.a[lj], lt, lj)
+        self._buffer_append(lcl, bases, batch.dispatch_times, lt, lj)
+        self.counters["arrivals"] += len(lcl)
+        self.policy.on_uploads(self, batch)
+
+    def _do_upload_one(self, t, cl, job) -> None:
+        """Per-arrival path (FedBuff / pure-async: the hook reads buffer
+        state and may aggregate + dispatch, so arrivals interleave)."""
+        client, job = int(cl), int(job)
+        if not self._no_drop and self._job_epoch.a[job] < self._epoch[client]:
+            self.counters["cancelled_uploads"] += 1
+            self._trace_one("upload", client, "cancelled")
+            return
+        self.inflight_count[client] -= 1
+        base = int(self._job_base.a[job])
+        arrival = Arrival(client, base, float(self._job_t0.a[job]),
+                          float(t), job)
+        self._buffer_append(np.array([client], _I8),
+                            np.array([base], _I8),
+                            np.array([arrival.dispatch_time]),
+                            np.array([arrival.arrival_time]),
+                            np.array([job], _I8))
+        self.counters["arrivals"] += 1
+        self._trace_one("upload", client, f"v{base}")
+        self.policy.on_upload(self, arrival)
+
+    def _do_dropout(self, t, cl, jobs) -> None:
+        if len(cl) > 1 and self._has_dup(cl):
+            for i in range(len(cl)):
+                self.clock = float(t[i])
+                self._do_dropout(t[i:i + 1], cl[i:i + 1], jobs[i:i + 1])
+            return
+        dead = self._job_epoch.a[jobs] < self._epoch[cl]
+        live = ~dead
+        lcl, lt, lj = cl[live], t[live], jobs[live]
+        lost = self.inflight_count[lcl]       # failing job + all pipelined
+        was_up = self.up[lcl]
+        down = self._job_down.a[lj]
+        if self.record_trace:                 # lines in event order
+            infos = np.empty(len(cl), object)
+            infos[dead] = "cancelled"
+            infos[live] = [
+                f"lost{lo} down{dn:.3f}" if w else f"lost{lo} already-down"
+                for lo, dn, w in zip(lost, down, was_up)]
+            self._trace_many(t, "dropout", cl, infos)
+        if len(lcl) == 0:
+            return
+        self.counters["lost_jobs"] += int(lost.sum())
+        self._epoch[lcl] += 1                 # cancels every in-flight job
+        self.inflight_count[lcl] = 0
+        self.up[lcl] = False
+        self.counters["dropouts"] += int(was_up.sum())
+        if was_up.any():
+            self._push(lt[was_up] + down[was_up],
+                       np.full(int(was_up.sum()), K_REJOIN, np.int8),
+                       lcl[was_up])
+
+    def _do_rejoin(self, t, cl) -> None:
+        down = ~self.up[cl]
+        rcl, rt = cl[down], t[down]
+        if len(rcl) == 0:
+            return
+        self.up[rcl] = True
+        self.counters["rejoins"] += len(rcl)
+        self._trace_many(rt, "rejoin", rcl, ("" for _ in range(len(rcl))))
+        if self.policy.passive_rejoins:
+            self.policy.on_rejoins(self, rcl)
+        else:
+            for time, c in zip(rt, rcl):      # singleton batches in strict
+                self.clock = float(time)      # mode; exact in fast mode as
+                self.policy.on_rejoin(self, int(c))   # dispatches carry t
+
+    def _do_eval(self) -> None:
+        acc = float(self.aggregator.evaluate())
+        self.evals.append((self.clock, self.version, acc))
+        self.counters["evals"] += 1
+        self._trace_one("eval", -1, f"v{self.version}")
+        self._eval_scheduled = False
+        if self.eval_every_time:
+            nxt = self.clock + self.eval_every_time
+            if nxt <= self.horizon:
+                self.schedule(self.eval_every_time, "eval")
+                self._eval_scheduled = True
+
+    def _arm_eval(self) -> None:
+        if not self.eval_every_time or self._eval_scheduled:
+            return
+        k = int(np.floor(self.clock / self.eval_every_time)) + 1
+        nxt = k * self.eval_every_time
+        if nxt <= self.clock:
+            nxt += self.eval_every_time
+        if nxt <= self.horizon:
+            self.schedule(nxt - self.clock, "eval")
+            self._eval_scheduled = True
+
+    # ------------------------------------------------------------------ #
+    # Main loop
+    # ------------------------------------------------------------------ #
+    def _batch_end(self, kinds, times, i: int, n: int) -> int:
+        """Largest j such that [i, j) is processable as one batch."""
+        kind = kinds[i]
+        nxt = np.flatnonzero(kinds[i:n] != kind)   # end of same-kind run
+        j = i + int(nxt[0]) if len(nxt) else n
+        if kind == K_UPLOAD:
+            if self.policy.passive_uploads:
+                return j                       # cross-time storm, no hooks
+            return i + 1                       # hook per arrival
+        if kind in (K_ROUND, K_EVAL):
+            return i + 1
+        if (not self.record_trace and self.policy.passive_uploads
+                and self.policy.passive_rejoins):
+            # fast mode + fully passive policy: no hook can schedule
+            # events, so a cross-time run's own side-events (uploads,
+            # dropouts, rejoins of its jobs) are the only interleavers —
+            # and those only touch their own client's state, which the
+            # distinct-client guard in the handlers makes order-free
+            return j
+        # strict mode: same-timestamp runs only (new events cannot sort
+        # inside a same-(kind, time) prefix — their seqs are larger)
+        return i + int(np.searchsorted(times[i:j], times[i], side="right"))
+
+    def run(self, until: Optional[float] = None) -> Dict[str, Any]:
+        if until is not None:
+            self.horizon = float(until)
+        if not self._started:
+            self._started = True
+            self.policy.start(self)
+        else:
+            self.policy.on_resume(self)
+        self._arm_eval()
+
+        wheel = self._wheel
+        while True:
+            b = wheel.next_bucket()
+            if b is None:
+                break
+            frame = wheel.take(b)
+            t_arr, seq_arr, k_arr, c_arr, j_arr, f_arr = frame
+            i, n = 0, len(t_arr)
+            stop = False
+            while i < n:
+                if t_arr[i] > self.horizon:
+                    # past the horizon: park the tail back in the wheel
+                    # (a later run(until=...) resumes from it)
+                    wheel.push(*(a[i:] for a in frame))
+                    stop = True
+                    break
+                if self._pend:
+                    # fast path: flush deferred uploads the heap would
+                    # process before this wheel event
+                    self._commit_uploads(float(t_arr[i]), int(seq_arr[i]))
+                if self.counters["events"] >= self.max_events:
+                    self._trace_one("halt", -1, "max_events")
+                    wheel.push(*(a[i:] for a in frame))
+                    stop = True
+                    break
+                j = self._batch_end(k_arr, t_arr, i, n)
+                # clamp to horizon and event budget
+                j = i + int(np.searchsorted(t_arr[i:j], self.horizon,
+                                            side="right"))
+                j = min(j, i + self.max_events - self.counters["events"])
+                j = max(j, i + 1)
+                kind = k_arr[i]
+                self.clock = float(t_arr[j - 1])
+                self.counters["events"] += j - i
+                if kind == K_DISPATCH:
+                    self._do_dispatch(t_arr[i:j], c_arr[i:j], f_arr[i:j])
+                elif kind == K_UPLOAD:
+                    if j - i == 1 and not self.policy.passive_uploads:
+                        self._do_upload_one(t_arr[i], c_arr[i], j_arr[i])
+                    else:
+                        self._do_upload_batch(t_arr[i:j], c_arr[i:j],
+                                              j_arr[i:j])
+                elif kind == K_DROPOUT:
+                    self._do_dropout(t_arr[i:j], c_arr[i:j], j_arr[i:j])
+                elif kind == K_REJOIN:
+                    self._do_rejoin(t_arr[i:j], c_arr[i:j])
+                elif kind == K_ROUND:
+                    self.policy.on_timer(self, {})
+                elif kind == K_EVAL:
+                    self._do_eval()
+                i = j
+                if wheel.has_new(b):
+                    # zero-delay events landed in the bucket being drained:
+                    # merge them into the unprocessed tail (the new chunk's
+                    # seqs are all larger, so a linear merge is exact)
+                    frame = merge_chunks(tuple(a[i:] for a in frame),
+                                         wheel.take(b))
+                    t_arr, seq_arr, k_arr, c_arr, j_arr, f_arr = frame
+                    i, n = 0, len(t_arr)
+            if stop:
+                break
+        if self._pend:
+            # wheel drained (or horizon hit): uploads due by the horizon
+            # still deliver, exactly as the heap drains its queue
+            self._commit_uploads(self.horizon, None)
+        return self.summary()
+
+    # ------------------------------------------------------------------ #
+    # Reporting
+    # ------------------------------------------------------------------ #
+    def realized_schedule(self, reducer: str = "mean") -> StalenessSchedule:
+        if self.record_realized:
+            return observed_schedule(self.n_clients, self.realized, reducer)
+        seen = self._tau_cnt > 0
+        if reducer == "mean":
+            vals = np.where(seen, self._tau_sum / np.maximum(self._tau_cnt,
+                                                             1), 0.0)
+        elif reducer == "max":
+            vals = np.where(seen, self._tau_max, 0)
+        elif reducer == "last":
+            vals = np.where(seen, self._tau_last, 0)
+        else:
+            raise ValueError(f"unknown reducer {reducer!r}")
+        obs = {int(i): [float(vals[i])] for i in np.flatnonzero(seen)}
+        return observed_schedule(self.n_clients, obs, reducer)
+
+    def summary(self) -> Dict[str, Any]:
+        c = dict(self.counters)
+        out = {k: c.get(k, 0) for k in COUNTER_KEYS}
+        out.update(c)
+        n_obs = int(self._tau_cnt.sum())
+        out.update({
+            "clock": self.clock,
+            "version": self.version,
+            "buffer_pending": self._buf_total,
+            "inflight": (c.get("dispatches", 0) - c.get("arrivals", 0)
+                         - c.get("lost_jobs", 0)),
+            "clients_down": int((~self.up).sum()),
+            "mean_realized_tau": (float(self._tau_sum.sum()) / n_obs
+                                  if n_obs else 0.0),
+            "max_realized_tau": (int(self._tau_max.max())
+                                 if n_obs else 0),
+            "trace_digest": self.trace_digest(),
+            "n_evals": len(self.evals),
+        })
+        return out

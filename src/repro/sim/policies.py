@@ -12,12 +12,28 @@ Three families cover the async-FL design space the paper's baselines live in:
   update (FedAsync-style); the client is re-dispatched with the new model.
 * ``FedBuffK`` — buffer arrivals and aggregate every K-th (FedBuff-style);
   clients are re-dispatched immediately on arrival, so the buffer mixes
-  base versions.
+  base versions. By default the trigger counts *distinct* clients in the
+  buffer: raw ``len(buffer)`` counts superseded duplicates from
+  re-dispatched clients, so it can fire with fewer than K effective
+  updates (the per-client dedup happens later, inside
+  ``SimEngine.aggregate``, AFTER the trigger decision). The historic
+  raw-count trigger stays available as ``FedBuffK(k, distinct=False)`` —
+  golden digests recorded against it must be regenerated deliberately.
 
 A policy only talks to the engine through ``engine.aggregate()``,
-``engine.request_dispatch()`` / ``dispatch_all()`` and ``engine.schedule()``
-— all state lives in the engine, so policies stay stateless-ish and
-replayable.
+``engine.request_dispatch()`` / ``dispatch_all()``, ``engine.schedule()``
+and ``engine.buffer_size()`` — all state lives in the engine, so policies
+stay stateless-ish and replayable, and every policy runs unmodified on
+both the heap oracle and the vectorized engine.
+
+Vectorization hooks: the struct-of-arrays engine delivers arrival (and
+rejoin) storms in batches. The defaults replay the per-event hooks in
+event order — exact, Python-speed; the engine only forms cross-timestamp
+batches when the policy declares them *passive* (``passive_uploads`` /
+``passive_rejoins``: the hook neither aggregates, dispatches, nor
+schedules, so nothing can reorder around a batched storm).
+``SemiSyncDeadline`` is passive on both — which is what lets the
+vectorized engine push whole deadline rounds through array ops.
 """
 
 from __future__ import annotations
@@ -27,13 +43,34 @@ from repro.sim.engine import Arrival, SimEngine
 
 class TriggerPolicy:
     name = "abstract"
+    # passive_* = the corresponding hook has NO engine-visible side effects
+    # (no aggregate / dispatch / schedule): the vectorized engine may then
+    # process those event storms in cross-timestamp array batches
+    passive_uploads = False
+    passive_rejoins = False
+    # uploads_noop = on_uploads is a PURE no-op (stronger than passive: the
+    # hook body does nothing at all). On dropout-free fleets in fast mode
+    # the vectorized engine then keeps upload events out of the wheel
+    # entirely, committing them straight to the buffer in (time, seq) order
+    # just before the next timer/eval event
+    uploads_noop = False
 
     def start(self, eng: SimEngine) -> None:
         """Initial dispatches / timers. Default: one job per client."""
         eng.dispatch_all()
 
+    def on_resume(self, eng: SimEngine) -> None:
+        """``run(until=...)`` grew the horizon of a finished run. Re-arm any
+        timer chain that died at the old horizon; never re-dispatch."""
+
     def on_upload(self, eng: SimEngine, arrival: Arrival) -> None:
         """An update arrived (already buffered). Decide whether to trigger."""
+
+    def on_uploads(self, eng, batch) -> None:
+        """Batched arrivals (vectorized engine; ``batch`` is an
+        ``ArrivalBatch``). Only called when ``passive_uploads`` — override
+        together with that flag."""
+        raise NotImplementedError
 
     def on_timer(self, eng: SimEngine, payload: dict) -> None:
         """A ``round`` event fired (only policies that schedule them)."""
@@ -42,8 +79,17 @@ class TriggerPolicy:
         """A client came back up. Default: give it work immediately."""
         eng.request_dispatch(client)
 
+    def on_rejoins(self, eng, clients) -> None:
+        """Batched rejoins (vectorized engine). Only called when
+        ``passive_rejoins``."""
+        raise NotImplementedError
+
 
 class SemiSyncDeadline(TriggerPolicy):
+    passive_uploads = True                    # buffer-only between ticks
+    passive_rejoins = True                    # rejoiners wait for the tick
+    uploads_noop = True                       # on_uploads does nothing
+
     def __init__(self, round_len: float = 1.0, pipelined: bool = False):
         assert round_len > 0
         self.round_len = float(round_len)
@@ -55,6 +101,18 @@ class SemiSyncDeadline(TriggerPolicy):
         if self.round_len <= eng.horizon:
             eng.schedule(self.round_len, "round")
 
+    def on_resume(self, eng: SimEngine) -> None:
+        if eng.has_pending("round"):
+            return                            # chain still alive
+        nxt = (int(eng.clock / self.round_len) + 1) * self.round_len
+        if nxt <= eng.clock:                  # clock exactly on a tick
+            nxt += self.round_len
+        if nxt <= eng.horizon:
+            eng.schedule(nxt - eng.clock, "round")
+
+    def on_uploads(self, eng, batch) -> None:
+        pass                                  # deadline-driven: buffer only
+
     def on_timer(self, eng: SimEngine, payload: dict) -> None:
         eng.aggregate()                       # deadline: take what arrived
         eng.dispatch_all(force=self.pipelined)
@@ -63,6 +121,9 @@ class SemiSyncDeadline(TriggerPolicy):
 
     def on_rejoin(self, eng: SimEngine, client: int) -> None:
         pass                                  # waits for the next tick
+
+    def on_rejoins(self, eng, clients) -> None:
+        pass
 
 
 class PureAsync(TriggerPolicy):
@@ -74,13 +135,14 @@ class PureAsync(TriggerPolicy):
 
 
 class FedBuffK(TriggerPolicy):
-    def __init__(self, k: int = 4):
+    def __init__(self, k: int = 4, distinct: bool = True):
         assert k >= 1
         self.k = int(k)
-        self.name = f"fedbuff_k{k}"
+        self.distinct = bool(distinct)
+        self.name = f"fedbuff_k{k}" + ("" if distinct else "_raw")
 
     def on_upload(self, eng: SimEngine, arrival: Arrival) -> None:
-        if len(eng.buffer) >= self.k:
+        if eng.buffer_size(distinct=self.distinct) >= self.k:
             eng.aggregate()
         eng.request_dispatch(arrival.client)
 

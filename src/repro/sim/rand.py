@@ -1,0 +1,114 @@
+"""Counter-based per-job randomness shared by both simulation engines.
+
+Every dispatched job ``j`` owns a fixed block of ``N_U`` uniforms derived
+from a Philox counter generator keyed on the engine seed with the counter
+pinned to the job id. Because Philox is counter-based there is no shared
+sequential stream to keep aligned: the heap oracle can materialize one
+job's block at a time while the vectorized engine draws a whole dispatch
+wave (consecutive job ids) as ONE ``Generator.random`` call — and the two
+are bitwise identical (``tests/test_sim_vec.py`` pins this).
+
+Block layout (``U_*`` indices): compute latency (2 uniforms), network
+latency (2), the per-job dropout Bernoulli draw (1), the doomed-job failure
+fraction (1), and the post-dropout downtime (2). Latency families consume
+their uniforms through the elementwise transforms below; families that need
+fewer than two uniforms simply ignore the rest of their slot — skipping a
+draw never desynchronizes anything, which is what makes the zero-variance
+oracle free of RNG cost on both engines.
+
+The transforms deliberately avoid ``np.power`` (whose SIMD and scalar
+paths differ in the last ulp on some numpy builds): everything routes
+through ``log1p``/``exp``/``sqrt``/``cos``, which produce bitwise-equal
+results for the same float64 input whether called on a 100k-element wave
+or one scalar at a time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+N_U = 8                    # uniforms per job block
+_BLOCKS_PER_JOB = 2        # 8 doubles == 2 Philox 4x64 counter blocks
+
+(U_COMPUTE, U_COMPUTE2, U_NET, U_NET2,
+ U_DROP, U_FRAC, U_DOWN, U_DOWN2) = range(N_U)
+
+
+def job_uniforms(seed: int, job0: int, n: int = 1) -> np.ndarray:
+    """``(n, N_U)`` float64 uniforms for jobs ``job0 .. job0+n-1``.
+
+    One Philox construction + one ``random`` call per wave; slicing a
+    bigger wave and drawing a sub-wave at the right counter offset give
+    bitwise-identical blocks.
+    """
+    bg = np.random.Philox(key=int(seed), counter=_BLOCKS_PER_JOB * int(job0))
+    return np.random.Generator(bg).random(int(n) * N_U).reshape(int(n), N_U)
+
+
+def gauss_from_uniforms(u1, u2):
+    """Box-Muller: exactly two uniforms per normal deviate (elementwise).
+
+    Unlike the ziggurat behind ``Generator.standard_normal`` this consumes
+    a FIXED number of uniforms, so a job's stream position is a pure
+    function of its job id. The array branch runs the same IEEE op
+    sequence in-place on fresh temporaries (multiplication commutes
+    bitwise), halving the allocations on a 100k-job wave.
+    """
+    if isinstance(u1, np.ndarray) and u1.ndim:
+        r = np.log1p(np.negative(u1))
+        r *= -2.0
+        np.sqrt(r, out=r)
+        c = u2 * (2.0 * np.pi)
+        np.cos(c, out=c)
+        r *= c
+        return r
+    return np.sqrt(-2.0 * np.log1p(-u1)) * np.cos(2.0 * np.pi * u2)
+
+
+def lognormal_from_uniforms(loc, spread, u1, u2):
+    """Median ``loc``, log-space sigma ``spread`` (elementwise)."""
+    g = gauss_from_uniforms(u1, u2)
+    if isinstance(g, np.ndarray) and g.ndim:
+        g *= spread
+        np.exp(g, out=g)
+        g *= loc
+        return g
+    return loc * np.exp(spread * g)
+
+
+def pareto_from_uniforms(loc, spread, u1):
+    """Scale ``loc``, tail index ``1/spread`` via inverse CDF on the open
+    interval (elementwise; ``(1-u)**-s`` spelled as ``exp``/``log1p`` so
+    scalar and SIMD evaluations agree bitwise)."""
+    return loc * np.exp(-spread * np.log1p(-u1))
+
+
+def trace_from_uniforms(loc, table: np.ndarray, u1):
+    """Empirical inverse CDF: ``u`` indexes the sorted latency table
+    (step-function quantile), scaled by ``loc`` (elementwise)."""
+    n = len(table)
+    idx = np.minimum((np.asarray(u1) * n).astype(np.int64), n - 1)
+    return loc * table[idx]
+
+
+class JobRandoms:
+    """Chunk-cached accessor for the heap oracle's one-job-at-a-time path.
+
+    Materializes ``job_uniforms`` in aligned chunks so the per-event engine
+    does not pay a Philox construction per job; values are bitwise the same
+    as any other slicing of the counter stream.
+    """
+
+    CHUNK = 256
+
+    def __init__(self, seed: int):
+        self.seed = int(seed)
+        self._chunk0 = -1
+        self._chunk: np.ndarray | None = None
+
+    def block(self, job_id: int) -> np.ndarray:
+        c0 = (job_id // self.CHUNK) * self.CHUNK
+        if c0 != self._chunk0:
+            self._chunk0 = c0
+            self._chunk = job_uniforms(self.seed, c0, self.CHUNK)
+        return self._chunk[job_id - c0]

@@ -27,19 +27,25 @@ from repro.data.partition import (client_label_histograms, dirichlet_partition,
 from repro.data.staleness import intertwined_schedule
 from repro.data.synthetic import make_feature_dataset
 from repro.models.small import mlp3
-from repro.sim.bridge import ServerBridge
+from repro.sim.bridge import RecordingAggregator, ServerBridge
 from repro.sim.devices import (LatencyDist, fleet_from_schedule,
                                intertwined_fleet)
 from repro.sim.engine import SimEngine
+from repro.sim.engine_vec import VecEngine
 from repro.sim.policies import FedBuffK, PureAsync, SemiSyncDeadline
 
 N_CLASSES, N_FEATURES, TARGET = 5, 12, 2
+
+# engine="vec" is the default (struct-of-arrays, batched waves); the heap
+# engine stays available as the per-event oracle — the same
+# oracle-behind-a-flag pattern as ``FLConfig(fused_step=False)``
+ENGINES = {"heap": SimEngine, "vec": VecEngine}
 
 
 @dataclasses.dataclass
 class SimRun:
     name: str
-    engine: SimEngine
+    engine: Any                # SimEngine or VecEngine (same surface)
     server: Server
     meta: Dict[str, Any]
 
@@ -115,14 +121,89 @@ def _fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
 
 
 def _make_run(name, seed, server, fleet, policy, horizon, eval_every_time,
-              eval_mode="server", **meta) -> SimRun:
-    engine = SimEngine(fleet, policy, ServerBridge(server, eval_mode),
-                       seed=seed, horizon=horizon,
-                       eval_every_time=eval_every_time)
+              eval_mode="server", engine="vec", **meta) -> SimRun:
+    eng = ENGINES[engine](fleet, policy, ServerBridge(server, eval_mode),
+                          seed=seed, horizon=horizon,
+                          eval_every_time=eval_every_time)
     meta.update({"policy": policy.name, "seed": seed, "horizon": horizon,
-                 "strategy": server.cfg.strategy,
+                 "strategy": server.cfg.strategy, "engine": engine,
                  "mesh_shards": server._n_shards})
-    return SimRun(name, engine, server, meta)
+    return SimRun(name, eng, server, meta)
+
+
+# per-scenario device fleets, shared by the full-FL builders below and the
+# server-less ``engine_only`` path (equivalence tests, throughput benchmarks)
+
+
+def _fleet_semi_sync(hist):
+    return intertwined_fleet(
+        hist, TARGET, n_slow=3,
+        slow=LatencyDist("lognormal", 2.8, 0.35),
+        fast=LatencyDist("lognormal", 0.45, 0.25),
+        network=LatencyDist("lognormal", 0.05, 0.3),
+        dropout_prob=0.01, downtime=LatencyDist("fixed", 2.0))
+
+
+def _fleet_pure_async(hist):
+    return intertwined_fleet(
+        hist, TARGET, n_slow=3,
+        slow=LatencyDist("pareto", 1.5, 0.6),
+        fast=LatencyDist("pareto", 0.3, 0.3),
+        network=LatencyDist("fixed", 0.02))
+
+
+def _fleet_fedbuff(hist):
+    return intertwined_fleet(
+        hist, TARGET, n_slow=3,
+        slow=LatencyDist("lognormal", 2.2, 0.5),
+        fast=LatencyDist("lognormal", 0.4, 0.3),
+        network=LatencyDist("lognormal", 0.05, 0.3),
+        dropout_prob=0.02, downtime=LatencyDist("fixed", 1.5))
+
+
+def _fleet_heavy_churn(hist):
+    return intertwined_fleet(
+        hist, TARGET, n_slow=3,
+        slow=LatencyDist("lognormal", 2.0, 0.6),
+        fast=LatencyDist("lognormal", 0.5, 0.4),
+        dropout_prob=0.2, slow_dropout_prob=0.35,
+        downtime=LatencyDist("lognormal", 1.0, 0.5))
+
+
+# engine-only wiring per stock scenario: (fleet builder taking hist,
+# policy factory, default horizon, eval interval divisor or None)
+_ENGINE_PARTS = {
+    "degenerate_sync": (None, lambda: SemiSyncDeadline(1.0, pipelined=True),
+                        8.0, None),
+    "semi_sync_deadline": (_fleet_semi_sync, lambda: SemiSyncDeadline(1.0),
+                           12.0, 4),
+    "pure_async": (_fleet_pure_async, PureAsync, 10.0, 4),
+    "fedbuff_k4": (_fleet_fedbuff, lambda: FedBuffK(4), 12.0, 4),
+    "heavy_churn": (_fleet_heavy_churn, lambda: FedBuffK(3), 12.0, 4),
+}
+
+
+def engine_only(name: str, seed: int = 0, horizon: Optional[float] = None,
+                engine: str = "vec", **engine_kw):
+    """A stock scenario's fleet + policy on a ``RecordingAggregator`` —
+    the full event process without the FL data/model stack. This is what
+    the heap-vs-vec equivalence tests and the events/sec benchmarks drive:
+    identical trace digests here certify identical cohorts everywhere."""
+    fleet_fn, policy_fn, default_h, eval_div = _ENGINE_PARTS[name]
+    _, y = make_feature_dataset(20, n_classes=N_CLASSES,
+                                n_features=N_FEATURES, seed=seed)
+    idx = dirichlet_partition(y, 10, alpha=0.1, seed=seed)
+    hist = client_label_histograms(y, idx, N_CLASSES)
+    if fleet_fn is None:       # degenerate_sync: fleet from the schedule
+        sched = intertwined_schedule(hist, TARGET, n_slow=3, tau=[2, 3, 2])
+        fleet = fleet_from_schedule(sched.staleness, round_len=1.0)
+    else:
+        fleet = fleet_fn(hist)
+    horizon = default_h if horizon is None else float(horizon)
+    eval_every = None if eval_div is None else horizon / eval_div
+    return ENGINES[engine](fleet, policy_fn(), RecordingAggregator(),
+                           seed=seed, horizon=horizon,
+                           eval_every_time=eval_every, **engine_kw)
 
 
 # --------------------------------------------------------------------------- #
@@ -133,80 +214,61 @@ def _make_run(name, seed, server, fleet, policy, horizon, eval_every_time,
 @register("degenerate_sync",
           "zero-variance oracle: replays the round-synchronous Server")
 def degenerate_sync(seed: int = 0, horizon: float = 8.0, strategy: str = "ours",
-                    tau=None, **kw) -> SimRun:
+                    tau=None, engine: str = "vec", **kw) -> SimRun:
     """Deterministic latencies + pipelined deadline == the sync harness."""
     tau = tau if tau is not None else [2, 3, 2]
     server, hist, sched = _fl_setup(seed, strategy=strategy, tau=tau, **kw)
     fleet = fleet_from_schedule(sched.staleness, round_len=1.0)
     policy = SemiSyncDeadline(round_len=1.0, pipelined=True)
     return _make_run("degenerate_sync", seed, server, fleet, policy,
-                     horizon, eval_every_time=None)
+                     horizon, eval_every_time=None, engine=engine)
 
 
 @register("semi_sync_deadline",
           "lognormal device tiers, aggregate at a fixed deadline")
 def semi_sync_deadline(seed: int = 0, horizon: float = 12.0,
                        strategy: str = "ours", round_len: float = 1.0,
-                       **kw) -> SimRun:
+                       engine: str = "vec", **kw) -> SimRun:
     """Semi-synchronous FL: a deadline every round_len; stragglers arrive
     rounds late with lognormal jitter, slow tier correlated with the target
     class."""
     server, hist, _ = _fl_setup(seed, strategy=strategy, **kw)
-    fleet = intertwined_fleet(
-        hist, TARGET, n_slow=3,
-        slow=LatencyDist("lognormal", 2.8, 0.35),
-        fast=LatencyDist("lognormal", 0.45, 0.25),
-        network=LatencyDist("lognormal", 0.05, 0.3),
-        dropout_prob=0.01, downtime=LatencyDist("fixed", 2.0))
+    fleet = _fleet_semi_sync(hist)
     policy = SemiSyncDeadline(round_len=round_len)
     return _make_run("semi_sync_deadline", seed, server, fleet, policy,
-                     horizon, eval_every_time=horizon / 4)
+                     horizon, eval_every_time=horizon / 4, engine=engine)
 
 
 @register("pure_async",
           "Pareto-tail latencies, aggregate on every arrival (FedAsync-style)")
 def pure_async(seed: int = 0, horizon: float = 10.0, strategy: str = "ours",
-               **kw) -> SimRun:
+               engine: str = "vec", **kw) -> SimRun:
     """Pure async: unbounded Pareto tails make realized staleness unlimited —
     the regime the paper's title claims robustness to."""
     server, hist, _ = _fl_setup(seed, strategy=strategy, **kw)
-    fleet = intertwined_fleet(
-        hist, TARGET, n_slow=3,
-        slow=LatencyDist("pareto", 1.5, 0.6),
-        fast=LatencyDist("pareto", 0.3, 0.3),
-        network=LatencyDist("fixed", 0.02))
+    fleet = _fleet_pure_async(hist)
     return _make_run("pure_async", seed, server, fleet, PureAsync(),
-                     horizon, eval_every_time=horizon / 4)
+                     horizon, eval_every_time=horizon / 4, engine=engine)
 
 
 @register("fedbuff_k4",
           "buffered async: aggregate every K=4 arrivals (FedBuff-style)")
 def fedbuff_k4(seed: int = 0, horizon: float = 12.0, strategy: str = "ours",
-               k: int = 4, **kw) -> SimRun:
-    """Buffered async: arrivals accumulate; every K-th triggers aggregation,
-    so each cohort mixes base versions."""
+               k: int = 4, engine: str = "vec", **kw) -> SimRun:
+    """Buffered async: arrivals accumulate; every K-th distinct client
+    triggers aggregation, so each cohort mixes base versions."""
     server, hist, _ = _fl_setup(seed, strategy=strategy, **kw)
-    fleet = intertwined_fleet(
-        hist, TARGET, n_slow=3,
-        slow=LatencyDist("lognormal", 2.2, 0.5),
-        fast=LatencyDist("lognormal", 0.4, 0.3),
-        network=LatencyDist("lognormal", 0.05, 0.3),
-        dropout_prob=0.02, downtime=LatencyDist("fixed", 1.5))
+    fleet = _fleet_fedbuff(hist)
     return _make_run("fedbuff_k4", seed, server, fleet, FedBuffK(k),
-                     horizon, eval_every_time=horizon / 4)
+                     horizon, eval_every_time=horizon / 4, engine=engine)
 
 
 @register("heavy_churn",
           "high dropout/rejoin churn under a FedBuff trigger")
 def heavy_churn(seed: int = 0, horizon: float = 12.0, strategy: str = "ours",
-                **kw) -> SimRun:
+                engine: str = "vec", **kw) -> SimRun:
     """Stress the dropout/rejoin machinery: a fifth of jobs die mid-flight."""
     server, hist, _ = _fl_setup(seed, strategy=strategy, **kw)
-    fleet = intertwined_fleet(
-        hist, TARGET, n_slow=3,
-        slow=LatencyDist("lognormal", 2.0, 0.6),
-        fast=LatencyDist("lognormal", 0.5, 0.4),
-        dropout_prob=0.2, slow_dropout_prob=0.35,
-        downtime=LatencyDist("lognormal", 1.0, 0.5))
+    fleet = _fleet_heavy_churn(hist)
     return _make_run("heavy_churn", seed, server, fleet, FedBuffK(3),
-                     horizon, eval_every_time=horizon / 4)
+                     horizon, eval_every_time=horizon / 4, engine=engine)

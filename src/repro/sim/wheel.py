@@ -1,0 +1,171 @@
+"""Bucketed time wheel: struct-of-arrays pending-event storage.
+
+The heap engine pays O(log n) Python-object work per event push/pop. The
+wheel replaces that with integer-bucketed array chunks: a dispatch wave of
+100k jobs lands as ONE chunk append (split across the buckets its upload
+times hash to), and draining a bucket is one concatenate + lexsort. Event
+ordering — ``(time, seq)``, identical to the heap — is restored per bucket
+by the sort, so wheel resolution ``dt`` is a pure throughput knob: any
+``dt`` replays the exact same event sequence (``tests/test_sim_vec.py``
+runs the equivalence suite at several resolutions).
+
+Bucket occupancy is tracked by a lazy min-heap of bucket indices (a few
+ints per *bucket*, not per event); chunks are parallel arrays
+``(time, seq, kind, client, job, force)`` — ``job`` doubles as the generic
+integer payload, ``force`` is only meaningful for dispatches.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+              np.ndarray]
+
+
+def _empty_chunk() -> Chunk:
+    z = np.empty(0)
+    return (z, np.empty(0, np.int64), np.empty(0, np.int8),
+            np.empty(0, np.int64), np.empty(0, np.int64),
+            np.empty(0, bool))
+
+
+def concat_chunks(chunks: List[Chunk]) -> Chunk:
+    if len(chunks) == 1:
+        return chunks[0]
+    return tuple(np.concatenate([c[i] for c in chunks])  # type: ignore
+                 for i in range(6))
+
+
+def _time_order(t: np.ndarray) -> np.ndarray:
+    """Permutation realizing the ``(time, seq)`` order of a batch whose
+    storage order is seq order (the engine's invariant: one globally
+    monotone counter assigned in array order). A stable time sort is
+    exactly that — but numpy's stable float sort (timsort) is ~2x slower
+    than introsort, so try the unstable sort first: with no duplicate
+    times the permutations coincide, and duplicates (zero-variance
+    fleets, grid ticks) are caught by one equality pass and re-sorted
+    stably."""
+    order = np.argsort(t)
+    ts = t[order]
+    if bool((ts[1:] == ts[:-1]).any()):
+        return np.argsort(t, kind="stable")
+    return order
+
+
+def sort_chunk(c: Chunk) -> Chunk:
+    """Order by ``(time, seq)`` — the heap engine's exact tie-break.
+
+    A single STABLE sort on time suffices: the engine's seq counter is
+    globally monotone and assigned in array order within every push, so
+    storage order is already seq order — stability preserves it for
+    time-ties, which is exactly the ``(time, seq)`` lexsort."""
+    t = c[0]
+    if len(t) < 2 or bool(np.all(t[1:] >= t[:-1])):
+        return c                   # already time-sorted (ties: storage
+    order = _time_order(t)         # order IS seq order)
+    return tuple(a[order] for a in c)  # type: ignore
+
+
+def merge_chunks(a: Chunk, b: Chunk) -> Chunk:
+    """Linear merge of two (time, seq)-sorted chunks where every seq in
+    ``b`` exceeds every seq in ``a`` (b was pushed later) — time-ties land
+    a-first, which is exactly the seq tie-break."""
+    na, nb = len(a[0]), len(b[0])
+    if na == 0:
+        return b
+    if nb == 0:
+        return a
+    pos_a = np.arange(na) + np.searchsorted(b[0], a[0], side="left")
+    pos_b = np.arange(nb) + np.searchsorted(a[0], b[0], side="right")
+    out = tuple(np.empty(na + nb, x.dtype) for x in a)
+    for o, x, y in zip(out, a, b):
+        o[pos_a] = x
+        o[pos_b] = y
+    return out  # type: ignore
+
+
+class TimeWheel:
+    """Integer-bucketed event store with batched push and bucket drain."""
+
+    def __init__(self, dt: float = 1.0):
+        assert dt > 0
+        self.dt = float(dt)
+        self._buckets: Dict[int, List[Chunk]] = {}
+        self._order: List[int] = []          # lazy min-heap of bucket ids
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def push(self, time: np.ndarray, seq: np.ndarray, kind: np.ndarray,
+             client: np.ndarray, job: np.ndarray,
+             force: np.ndarray) -> None:
+        """Append a batch of events (parallel arrays, any order)."""
+        n = len(time)
+        if n == 0:
+            return
+        self._n += n
+        b = np.floor_divide(time, self.dt).astype(np.int64)
+        chunk = (time, seq, kind, client, job, force)
+        if n == 1 or b[0] == b[-1] and (b[0] == b).all():
+            # chunks are stored pre-sorted so ``take`` can fold them with
+            # a linear merge instead of re-sorting the concatenation
+            self._add(int(b[0]), chunk if n == 1 else sort_chunk(chunk))
+            return
+        # sort the batch by TIME (stable, so storage order == seq order is
+        # kept for ties): buckets become contiguous slices, and every slice
+        # lands pre-sorted — draining it skips the sort entirely
+        if not bool(np.all(time[1:] >= time[:-1])):
+            order = _time_order(time)
+            b = b[order]
+            chunk = tuple(a[order] for a in chunk)
+        cuts = np.flatnonzero(np.diff(b)) + 1
+        for lo, hi in zip(np.r_[0, cuts], np.r_[cuts, n]):
+            self._add(int(b[lo]), tuple(a[lo:hi] for a in chunk))
+
+    def _add(self, b: int, chunk: Chunk) -> None:
+        got = self._buckets.get(b)
+        if got is None:
+            self._buckets[b] = [chunk]
+            heapq.heappush(self._order, b)
+        else:
+            got.append(chunk)
+
+    def next_bucket(self) -> Optional[int]:
+        """Smallest non-empty bucket id (None when drained)."""
+        while self._order:
+            b = self._order[0]
+            if b in self._buckets:
+                return b
+            heapq.heappop(self._order)        # lazily drop consumed ids
+        return None
+
+    def take(self, b: int) -> Chunk:
+        """Remove and return bucket ``b``'s events sorted by (time, seq).
+
+        Every stored chunk is individually sorted (``push`` guarantees it)
+        and the list is in push order — later chunks carry strictly larger
+        seqs — so a left fold of ``merge_chunks`` reconstructs the exact
+        ``(time, seq)`` order in linear time, no re-sort."""
+        chunks = self._buckets.pop(b, None)
+        if chunks is None:
+            return _empty_chunk()
+        out = chunks[0]
+        for c in chunks[1:]:
+            out = merge_chunks(out, c)
+        self._n -= len(out[0])
+        return out
+
+    def has_new(self, b: int) -> bool:
+        """Did anything land in bucket ``b`` since it was taken? (Handlers
+        may schedule zero-delay events into the bucket being drained.)"""
+        return b in self._buckets
+
+    def scan_kind(self, code: int) -> bool:
+        """Any pending event of this kind? (Resume-time timer checks.)"""
+        return any((c[2] == code).any()
+                   for chunks in self._buckets.values() for c in chunks)

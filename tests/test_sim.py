@@ -78,16 +78,38 @@ def test_deterministic_replay():
 
 
 def test_fedbuff_trigger_counts():
+    # raw mode (the pre-fix behavior, kept behind distinct=False): the
+    # trigger counts buffer ENTRIES, so superseded duplicates tick it too
+    agg = RecordingAggregator()
+    fleet = homogeneous_fleet(8, LatencyDist("lognormal", 1.0, 0.3))
+    eng = SimEngine(fleet, FedBuffK(4, distinct=False), agg, seed=0,
+                    horizon=20.0)
+    s = eng.run()
+    assert s["aggregations"] == s["arrivals"] // 4
+    sizes = [len(c["fresh"]) + len(c["stale"]) for c in agg.cohorts]
+    assert all(1 <= n <= 4 for n in sizes)
+    assert sum(sizes) + s["superseded"] + s["buffer_pending"] == s["arrivals"]
+
+
+def test_fedbuff_distinct_gates_on_clients():
+    # default mode: the trigger fires on K DISTINCT clients, so every
+    # cohort delivers exactly K updates — duplicates can no longer shrink
+    # the cohort below the nominal buffer depth
     agg = RecordingAggregator()
     fleet = homogeneous_fleet(8, LatencyDist("lognormal", 1.0, 0.3))
     eng = SimEngine(fleet, FedBuffK(4), agg, seed=0, horizon=20.0)
     s = eng.run()
-    assert s["aggregations"] == s["arrivals"] // 4
-    # every trigger fires on a 4-deep buffer; a client arriving twice within
-    # one buffer is deduped to its freshest update and counted superseded
-    sizes = [len(c["fresh"]) + len(c["stale"]) for c in agg.cohorts]
-    assert all(1 <= n <= 4 for n in sizes)
-    assert sum(sizes) + s["superseded"] + s["buffer_pending"] == s["arrivals"]
+    assert s["aggregations"] > 0
+    assert all(len(c["fresh"]) + len(c["stale"]) == 4 for c in agg.cohorts)
+    assert sum(4 for _ in agg.cohorts) + s["superseded"] \
+        + s["buffer_pending"] == s["arrivals"]
+    # a single client can never supply K=5 distinct uploads: the raw
+    # trigger fired on its pile-up, the distinct trigger must not
+    solo = SimEngine(homogeneous_fleet(1, LatencyDist("fixed", 0.3)),
+                     FedBuffK(5), RecordingAggregator(), seed=0,
+                     horizon=10.0)
+    assert solo.run()["aggregations"] == 0
+    assert solo.buffer_size(distinct=True) == 1
 
 
 def test_pure_async_aggregates_every_arrival():
@@ -124,7 +146,8 @@ def test_buffer_dedup_counts_superseded():
     # buffer, the cohort dedupes to the freshest and counts the rest
     agg = RecordingAggregator()
     fleet = homogeneous_fleet(1, LatencyDist("fixed", 0.3))
-    eng = SimEngine(fleet, FedBuffK(5), agg, seed=0, horizon=10.0)
+    eng = SimEngine(fleet, FedBuffK(5, distinct=False), agg, seed=0,
+                    horizon=10.0)
     s = eng.run()
     assert s["aggregations"] > 0
     assert all(len(c["fresh"]) + len(c["stale"]) == 1 for c in agg.cohorts)
@@ -146,6 +169,41 @@ def test_eval_ticks_and_realized_view():
     assert sched.slow_clients == [3]
     assert sched.tau(3) == 2
     assert all(sched.tau(i) == 0 for i in range(3))
+
+
+def test_summary_reports_every_counter():
+    # regression: skipped_busy and cancelled_uploads used to vanish from
+    # summary() whenever they were zero — every canonical counter key must
+    # appear unconditionally
+    from repro.sim.engine import COUNTER_KEYS
+    _, s = _run_engine(SemiSyncDeadline(1.0), horizon=5.0, n=4,
+                       latency=LatencyDist("fixed", 0.5))
+    for key in COUNTER_KEYS:
+        assert key in s, key
+    assert "skipped_busy" in s and "cancelled_uploads" in s
+    # reading summary() must not mutate the counters it reports
+    eng, _ = _run_engine(PureAsync(), horizon=3.0, n=2)
+    snap = dict(eng.counters)
+    eng.summary()
+    assert dict(eng.counters) == snap
+
+
+def test_resume_rearms_eval_ticks():
+    # regression: a second run(until=...) never re-scheduled the eval tick,
+    # so extending the horizon silently stopped producing eval points
+    fleet = homogeneous_fleet(4, LatencyDist("fixed", 0.5))
+    eng = SimEngine(fleet, SemiSyncDeadline(1.0), RecordingAggregator(),
+                    seed=0, horizon=4.0, eval_every_time=2.0)
+    eng.run()
+    assert [t for t, _, _ in eng.evals] == [2.0, 4.0]
+    eng.run(until=10.0)
+    assert [t for t, _, _ in eng.evals] == [2.0, 4.0, 6.0, 8.0, 10.0]
+    # one-shot run over the same horizon sees the same eval grid
+    one = SimEngine(homogeneous_fleet(4, LatencyDist("fixed", 0.5)),
+                    SemiSyncDeadline(1.0), RecordingAggregator(),
+                    seed=0, horizon=10.0, eval_every_time=2.0)
+    one.run()
+    assert [t for t, _, _ in one.evals] == [t for t, _, _ in eng.evals]
 
 
 def test_observed_schedule_reducers():

@@ -1,0 +1,339 @@
+"""Heap-vs-vectorized engine equivalence suite (repro.sim.engine_vec).
+
+The vectorized engine is only allowed to exist because it replays the heap
+oracle bit-for-bit: every test here pins some axis of that contract —
+trace digests across the stock scenarios, wheel resolution and edge fan-in
+invariance, counter-based RNG block slicing, fast-mode summaries, staged
+``run(until=...)`` resume, and the dropout/cancellation bookkeeping the
+accounting fixes in this layer exist to protect.
+"""
+
+import numpy as np
+import pytest
+
+from repro.sim import (FedBuffK, FleetArrays, LatencyDist, NullAggregator,
+                       PureAsync, RecordingAggregator, SemiSyncDeadline,
+                       SimEngine, VecEngine, homogeneous_fleet, trace_fleet)
+from repro.sim.rand import (JobRandoms, job_uniforms, lognormal_from_uniforms,
+                            pareto_from_uniforms, trace_from_uniforms)
+from repro.sim.scenarios import _ENGINE_PARTS, engine_only
+from repro.sim.wheel import TimeWheel, merge_chunks, sort_chunk
+
+# regenerated deliberately in this PR: the per-job counter-based RNG and
+# the distinct-client FedBuff trigger both change the event stream vs the
+# sequential-stream engine these scenarios shipped with
+STOCK_DIGESTS = {
+    "degenerate_sync": "d3c9bef802dcc8f4",
+    "semi_sync_deadline": "7badebe186d4c157",
+    "pure_async": "070c41fe59505b69",
+    "fedbuff_k4": "915e97d00a7bf144",
+    "heavy_churn": "61e2f2ecc64fe54b",
+}
+
+
+def _summaries_equal(a, b):
+    ka = {k: v for k, v in a.items() if k != "trace_digest"}
+    kb = {k: v for k, v in b.items() if k != "trace_digest"}
+    assert ka == kb
+
+
+# --------------------------------------------------------------------------- #
+# Scenario-level equivalence
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("name", sorted(_ENGINE_PARTS))
+def test_stock_scenario_digest_equivalence(name):
+    heap = engine_only(name, seed=0, engine="heap")
+    heap.run()
+    assert heap.trace_digest() == STOCK_DIGESTS[name]
+    vec = engine_only(name, seed=0, engine="vec")
+    vec.run()
+    assert vec.trace_digest() == STOCK_DIGESTS[name]
+    _summaries_equal(heap.summary(), vec.summary())
+
+
+@pytest.mark.parametrize("wheel_dt", [0.25, 1.0, 5.0, 1000.0])
+def test_wheel_resolution_is_pure_throughput_knob(wheel_dt):
+    # any bucket width replays the exact same event sequence
+    for name in ("heavy_churn", "fedbuff_k4"):
+        vec = engine_only(name, seed=0, engine="vec", wheel_dt=wheel_dt)
+        vec.run()
+        assert vec.trace_digest() == STOCK_DIGESTS[name], (name, wheel_dt)
+
+
+@pytest.mark.parametrize("n_edges", [3, 10])
+def test_edge_fanin_preserves_cohorts(n_edges):
+    # per-edge buffers dedup independently; concatenating the contiguous
+    # edge ranges reproduces the flat engine's cohorts exactly
+    for name in ("semi_sync_deadline", "heavy_churn"):
+        vec = engine_only(name, seed=0, engine="vec", n_edges=n_edges)
+        vec.run()
+        assert vec.trace_digest() == STOCK_DIGESTS[name], (name, n_edges)
+
+
+def test_fast_mode_matches_traced_summary():
+    for name in ("pure_async", "heavy_churn"):
+        traced = engine_only(name, seed=0, engine="vec")
+        traced.run()
+        fast = engine_only(name, seed=0, engine="vec", record_trace=False,
+                           record_realized=False, collect_agg_log=False)
+        fast.run()
+        st, sf = traced.summary(), fast.summary()
+        assert sf.pop("trace_digest") == "untraced"
+        st.pop("trace_digest")
+        assert st == sf, name
+
+
+def test_deferred_upload_fast_path_is_exact():
+    # with no dropouts and a declared-no-op upload hook, fast mode keeps
+    # uploads out of the wheel and commits them by (time, seq) just before
+    # the next wheel event. Fixed latencies land uploads EXACTLY on round
+    # and eval ticks, pinning the seq tie-break: round-before-upload,
+    # upload-before-next-round's-dispatches
+    cfgs = [
+        (homogeneous_fleet(12, LatencyDist("lognormal", 0.9, 0.4)),
+         True, None),
+        (homogeneous_fleet(8, LatencyDist("fixed", 1.0)), True, 2.0),
+        (homogeneous_fleet(8, LatencyDist("fixed", 1.0)), False, 1.0),
+    ]
+    for fleet, pipelined, eval_every in cfgs:
+        heap = SimEngine(fleet, SemiSyncDeadline(1.0, pipelined=pipelined),
+                         RecordingAggregator(), seed=0, horizon=9.0,
+                         eval_every_time=eval_every)
+        sh = heap.run()
+        fast = VecEngine(fleet, SemiSyncDeadline(1.0, pipelined=pipelined),
+                         RecordingAggregator(), seed=0, horizon=9.0,
+                         eval_every_time=eval_every, record_trace=False,
+                         record_realized=False, collect_agg_log=False)
+        assert fast._fast_uploads          # the path actually engages
+        sf = fast.run()
+        sh.pop("trace_digest"), sf.pop("trace_digest")
+        assert sh == sf
+        # staged resume keeps pending deferred uploads across run() calls
+        # (compared against a STAGED heap run: re-armed timers at a resume
+        # legitimately reorder coincident ticks vs a one-shot run)
+        staged = VecEngine(fleet, SemiSyncDeadline(1.0, pipelined=pipelined),
+                           RecordingAggregator(), seed=0, horizon=4.0,
+                           eval_every_time=eval_every, record_trace=False,
+                           record_realized=False, collect_agg_log=False)
+        staged.run()
+        staged.run(until=9.0)
+        staged_heap = SimEngine(fleet,
+                                SemiSyncDeadline(1.0, pipelined=pipelined),
+                                RecordingAggregator(), seed=0, horizon=4.0,
+                                eval_every_time=eval_every)
+        staged_heap.run()
+        staged_heap.run(until=9.0)
+        ss, ssh = staged.summary(), staged_heap.summary()
+        ss.pop("trace_digest"), ssh.pop("trace_digest")
+        assert ss == ssh
+
+
+def test_staged_resume_matches_across_engines():
+    # satellite: run(until=...) twice — the eval tick re-arms and both
+    # engines replay the identical staged event sequence
+    for name in sorted(_ENGINE_PARTS):
+        _, _, horizon, _ = _ENGINE_PARTS[name]
+        mid = horizon / 2.0
+        heap = engine_only(name, seed=0, engine="heap")
+        heap.run(until=mid)
+        heap.run(until=horizon)
+        vec = engine_only(name, seed=0, engine="vec")
+        vec.run(until=mid)
+        vec.run(until=horizon)
+        assert heap.trace_digest() == vec.trace_digest(), name
+        _summaries_equal(heap.summary(), vec.summary())
+        assert len(heap.evals) == len(vec.evals)
+
+
+def test_vec_engine_drives_real_server():
+    # the vectorized engine slots under the ServerBridge unchanged: the
+    # degenerate oracle reproduces the heap run digest with jax in the loop
+    from repro.sim import scenarios
+    a = scenarios.build("degenerate_sync", seed=0, horizon=3.0, gi_iters=2,
+                        engine="heap").run()
+    b = scenarios.build("degenerate_sync", seed=0, horizon=3.0, gi_iters=2,
+                        engine="vec").run()
+    assert a["trace_digest"] == b["trace_digest"]
+    assert a["final_acc"] == b["final_acc"]
+
+
+# --------------------------------------------------------------------------- #
+# Accounting-fix coverage (dropout storms, cancellation after rejoin)
+# --------------------------------------------------------------------------- #
+
+
+def _churn_engines(seed=2):
+    fleet = homogeneous_fleet(6, LatencyDist("lognormal", 1.0, 0.4),
+                              dropout_prob=0.3,
+                              downtime=LatencyDist("fixed", 0.5))
+    mk = lambda E: E(fleet, SemiSyncDeadline(1.0, pipelined=True),  # noqa: E731
+                     RecordingAggregator(), seed=seed, horizon=12.0)
+    return mk(SimEngine), mk(VecEngine)
+
+
+def test_doomed_job_with_pipelined_inflight():
+    # a dropout kills the failing job AND every pipelined job in flight:
+    # lost_jobs must exceed dropouts, identically on both engines
+    heap, vec = _churn_engines()
+    sh, sv = heap.run(), vec.run()
+    assert sh["dropouts"] > 0
+    assert sh["lost_jobs"] > sh["dropouts"]
+    assert heap.trace_digest() == vec.trace_digest()
+    _summaries_equal(sh, sv)
+    assert sh["dispatches"] == sh["arrivals"] + sh["lost_jobs"] \
+        + sh["inflight"]
+
+
+def test_cancelled_upload_after_rejoin():
+    # an upload whose job was killed by a dropout arrives AFTER the client
+    # rejoined: it must be dropped as cancelled, not buffered — and the
+    # buffers must agree entry-for-entry across engines
+    heap, vec = _churn_engines()
+    sh, sv = heap.run(), vec.run()
+    assert sh["cancelled_uploads"] > 0
+    assert sh["rejoins"] > 0
+    assert sh["cancelled_uploads"] == sv["cancelled_uploads"]
+    assert [(a.client, a.base_version, a.job_id) for a in heap.buffer] == \
+        [(a.client, a.base_version, a.job_id) for a in vec.buffer]
+
+
+# --------------------------------------------------------------------------- #
+# RNG: counter-based per-job blocks
+# --------------------------------------------------------------------------- #
+
+
+def test_job_uniform_wave_slicing_is_bitwise():
+    whole = job_uniforms(seed=5, job0=0, n=64)
+    # any sub-wave drawn at its own counter offset is the same bits
+    for j0, k in [(0, 1), (7, 3), (10, 54), (63, 1)]:
+        assert np.array_equal(job_uniforms(5, j0, k), whole[j0:j0 + k])
+    # the chunk-cached per-job accessor the heap oracle uses agrees too
+    jr = JobRandoms(seed=5)
+    for j in (0, 13, 63):
+        assert np.array_equal(jr.block(j), whole[j])
+
+
+def test_transforms_scalar_vs_wave_bitwise():
+    u = job_uniforms(seed=9, job0=0, n=257)
+    u1, u2 = u[:, 0], u[:, 1]
+    table = np.sort(np.random.default_rng(0).uniform(0.1, 4.0, 100))
+    wave_ln = lognormal_from_uniforms(1.3, 0.7, u1.copy(), u2.copy())
+    wave_pa = pareto_from_uniforms(1.3, 0.7, u1)
+    wave_tr = trace_from_uniforms(1.3, table, u1)
+    for i in range(0, 257, 41):
+        assert lognormal_from_uniforms(1.3, 0.7, u1[i], u2[i]) == wave_ln[i]
+        assert pareto_from_uniforms(1.3, 0.7, u1[i]) == wave_pa[i]
+        assert trace_from_uniforms(1.3, table, u1[i]) == wave_tr[i]
+
+
+def test_fleet_arrays_match_profile_blocks():
+    fleet = homogeneous_fleet(16, LatencyDist("lognormal", 1.2, 0.4),
+                              network=LatencyDist("pareto", 0.1, 0.3),
+                              dropout_prob=0.2,
+                              downtime=LatencyDist("fixed", 2.0))
+    fa = fleet.arrays()
+    cl = np.arange(16, dtype=np.int64)
+    u = job_uniforms(seed=3, job0=100, n=16)
+    lat = fa.job_latency(cl, u)
+    drops = fa.job_drops(cl, u)
+    down = fa.downtime_of(cl, u)
+    for i in range(16):
+        assert fleet.job_latency_from_block(i, u[i]) == lat[i]
+        assert fleet.job_drops_from_block(i, u[i]) == drops[i]
+        assert fleet.downtime_from_block(i, u[i]) == down[i]
+
+
+def test_trace_latency_dist():
+    table = [0.5, 1.0, 2.0, 8.0]
+    d = LatencyDist("trace", 2.0, table=table)
+    rng = np.random.default_rng(0)
+    vals = {d.sample(rng) for _ in range(200)}
+    assert vals <= {1.0, 2.0, 4.0, 16.0}      # loc-scaled table entries
+    assert len(vals) > 1
+    fleet = trace_fleet(4, table, loc_spread=0.3, seed=1)
+    heap = SimEngine(fleet, PureAsync(), RecordingAggregator(), seed=0,
+                     horizon=10.0)
+    vec = VecEngine(fleet, PureAsync(), RecordingAggregator(), seed=0,
+                    horizon=10.0)
+    sh, sv = heap.run(), vec.run()
+    assert heap.trace_digest() == vec.trace_digest()
+    _summaries_equal(sh, sv)
+
+
+# --------------------------------------------------------------------------- #
+# Time wheel unit tests
+# --------------------------------------------------------------------------- #
+
+
+def _mk_chunk(times, seq0=0):
+    n = len(times)
+    t = np.asarray(times, float)
+    return (t, np.arange(seq0, seq0 + n), np.zeros(n, np.int8),
+            np.arange(n, dtype=np.int64), np.arange(n, dtype=np.int64),
+            np.zeros(n, bool))
+
+
+def test_sort_chunk_is_time_seq_lexsort():
+    # duplicate times force the stable fallback: seq (storage) order must
+    # survive within every tie group
+    c = _mk_chunk([3.0, 1.0, 1.0, 2.0, 1.0])
+    out = sort_chunk(c)
+    assert out[0].tolist() == [1.0, 1.0, 1.0, 2.0, 3.0]
+    assert out[1].tolist() == [1, 2, 4, 3, 0]
+
+
+def test_merge_chunks_is_exact():
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        na, nb = rng.integers(1, 40, 2)
+        a = sort_chunk(_mk_chunk(rng.integers(0, 10, na).astype(float)))
+        b = sort_chunk(_mk_chunk(rng.integers(0, 10, nb).astype(float),
+                                 seq0=1000))
+        m = merge_chunks(a, b)
+        ref = sort_chunk(tuple(np.concatenate([x, y])
+                               for x, y in zip(a, b)))
+        for x, y in zip(m, ref):
+            assert np.array_equal(x, y)
+
+
+def test_wheel_drains_in_time_seq_order():
+    w = TimeWheel(dt=1.0)
+    t1 = np.array([2.5, 0.5, 7.1, 0.5])
+    w.push(t1, np.arange(4), np.zeros(4, np.int8),
+           np.arange(4, dtype=np.int64), np.arange(4, dtype=np.int64),
+           np.zeros(4, bool))
+    t2 = np.array([0.5, 2.5])
+    w.push(t2, np.arange(10, 12), np.ones(2, np.int8),
+           np.arange(2, dtype=np.int64), np.arange(2, dtype=np.int64),
+           np.zeros(2, bool))
+    assert len(w) == 6
+    drained = []
+    while (b := w.next_bucket()) is not None:
+        chunk = w.take(b)
+        drained += list(zip(chunk[0].tolist(), chunk[1].tolist()))
+    assert drained == sorted(drained)          # global (time, seq) order
+    assert drained == [(0.5, 1), (0.5, 3), (0.5, 10), (2.5, 0), (2.5, 11),
+                       (7.1, 2)]
+    assert len(w) == 0 and w.next_bucket() is None
+
+
+# --------------------------------------------------------------------------- #
+# Scale smoke (the benchmark path, shrunk)
+# --------------------------------------------------------------------------- #
+
+
+def test_null_aggregator_scale_smoke():
+    fa = FleetArrays.homogeneous(
+        10_000, compute=LatencyDist("lognormal", 0.8, 0.3),
+        network=LatencyDist("lognormal", 0.05, 0.2))
+    eng = VecEngine(fa, SemiSyncDeadline(1.0, pipelined=True),
+                    NullAggregator(), seed=0, horizon=5.0,
+                    max_events=10_000_000, wheel_dt=0.5,
+                    record_trace=False, record_realized=False,
+                    collect_agg_log=False)
+    s = eng.run()
+    assert s["events"] > 80_000
+    assert eng.aggregator.n_updates == s["arrivals"] - s["superseded"] \
+        - s["buffer_pending"]
