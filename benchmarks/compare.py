@@ -136,6 +136,14 @@ def compare(baseline: Dict[str, Dict[str, Any]],
         if ok:
             print(f"PASS {line}")
         else:
+            # rows that carry a span breakdown (benchmarks/run.py records
+            # one traced call per server row) say WHERE the regression
+            # landed, not just that the row got slower
+            sb = (frow.get("metrics") or {}).get("span_breakdown")
+            if sb:
+                line += ("\n  span breakdown: " + ", ".join(
+                    f"{k}={float(v) * 1e3:.1f}ms" for k, v in
+                    sorted(sb.items(), key=lambda kv: -float(kv[1]))))
             failures.append(line)
     return failures
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.disparity import tree_scale, tree_sub
+from repro.obs import tracer
 
 # ``history`` arguments below accept anything with len() and [-1]/[-2]
 # indexing: the historic Python list of snapshots or the bounded
@@ -54,6 +55,11 @@ def staleness_weight_batch(taus: Sequence[float], a: float = 0.25,
             w = staleness_weight(tau, a, b)
             _SW_MEMO[key] = w
         out[j] = w
+    if tracer.enabled and len(out):
+        tracer.metric("compensation", strategy="weighted", n=len(out),
+                      alpha_mean=float(out.mean()),
+                      alpha_min=float(out.min()),
+                      alpha_max=float(out.max()))
     return out
 
 
@@ -93,6 +99,19 @@ def w_pred(update_stale: Any, history: List[Any], w_global_stale: Any,
 # --------------------------------------------------------------------------- #
 
 
+def _first_order_stacked(updates_stacked: Any, w_target: Any,
+                         w_base_stacked: Any, lam: float) -> Any:
+    """Shared math for the stacked first-order forms (no telemetry —
+    public wrappers emit their own per-strategy metric row)."""
+    dw = tree_sub(w_target, w_base_stacked)
+    return jax.tree_util.tree_map(
+        lambda g, d: g + lam * g * g * d, updates_stacked, dw)
+
+
+def _cohort_size(tree: Any) -> int:
+    return int(jax.tree_util.tree_leaves(tree)[0].shape[0])
+
+
 def first_order_batch(updates_stacked: Any, w_global_now: Any,
                       w_base_stacked: Any, lam: float = 1.0) -> Any:
     """``first_order`` over a stacked cohort in one pass per leaf.
@@ -102,9 +121,11 @@ def first_order_batch(updates_stacked: Any, w_global_now: Any,
     may be cohort-invariant (broadcast) or stacked too. Elementwise, so
     every lane is bit-for-bit the per-client ``first_order`` result.
     """
-    dw = tree_sub(w_global_now, w_base_stacked)
-    return jax.tree_util.tree_map(
-        lambda g, d: g + lam * g * g * d, updates_stacked, dw)
+    if tracer.enabled:
+        tracer.metric("compensation", strategy="first_order",
+                      lam=float(lam), n=_cohort_size(updates_stacked))
+    return _first_order_stacked(updates_stacked, w_global_now,
+                                w_base_stacked, lam)
 
 
 def predict_future_global_batch(history, taus: Sequence[int]) -> Any:
@@ -130,5 +151,11 @@ def w_pred_batch(updates_stacked: Any, history, w_base_stacked: Any,
                  taus: Sequence[int], lam: float = 1.0) -> Any:
     """Stacked-cohort W-Pred: extrapolate once per lane, compensate in one
     leading-axis pass (no per-client pytree traffic)."""
+    if tracer.enabled:
+        tv = np.asarray(taus, np.float64)
+        tracer.metric("compensation", strategy="w_pred", lam=float(lam),
+                      n=_cohort_size(updates_stacked),
+                      tau_mean=float(tv.mean()) if tv.size else 0.0)
     w_future = predict_future_global_batch(history, taus)
-    return first_order_batch(updates_stacked, w_future, w_base_stacked, lam)
+    return _first_order_stacked(updates_stacked, w_future, w_base_stacked,
+                                lam)

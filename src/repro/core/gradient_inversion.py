@@ -72,6 +72,7 @@ from repro.core.disparity import (l1_disparity, masked_cosine_distance,
 from repro.launch.mesh import mesh_shard_count, shard_map_compat
 from repro.launch.sharding import (cohort_spec, replicated_spec,
                                    segment_bucket, shard_bucket)
+from repro.obs import tracer
 from repro.optim import adam, apply_updates
 
 
@@ -446,7 +447,11 @@ class GradientInverter:
                 + ((state["m"],) if has_mask else ()) \
                 + (state["n"], state["i"], state["drec"], state["opt"],
                    state["losses"], state["last"])
-            i_new, drec_s, opt_s, losses_s, last_s, done = seg_fn(*args)
+            with tracer.span("gi.segment") as _sp:
+                _sp.arg("bucket", int(C))
+                _sp.arg("resident", int(n_res))
+                i_new, drec_s, opt_s, losses_s, last_s, done = seg_fn(*args)
+                _sp.fence(i_new)
             segments += 1
             buckets.append(C)
 
@@ -498,6 +503,7 @@ class GradientInverter:
                 "useful_lane_iters": int(useful),
                 "wasted_lane_iters": int(cost - useful),
                 "lane_iter_cost": int(cost),
+                "budgets": np.asarray(n_host),
                 "occupancy": occupancy}
         return drec, info
 
@@ -603,9 +609,11 @@ class GradientInverter:
             lanes = (self.cfg.max_lanes if max_lanes is None
                      else int(max_lanes))
             drec0 = self._blend_drec0(keys, inits, init_flags, B, B)
-            return self._invert_segmented(
+            drec, info = self._invert_segmented(
                 w_global_stale, target, masks, drec0, n_host, max_iters,
                 seg, lanes)
+            self._emit_gi_metric(info)
+            return drec, info
 
         n_iters = jnp.asarray(n_host)
 
@@ -625,18 +633,48 @@ class GradientInverter:
                 None if masks is None else _pad_leading(masks, pad),
                 drec0,
                 jnp.concatenate([n_iters, jnp.zeros((pad,), jnp.int32)]))
-        if self.n_shards > 1:
-            fn = self._get_invert_many_sharded(max_iters, masks is not None)
-            args = args[:2] + args[3:] if masks is None else args
-            drec, losses, final_loss, used = fn(*args)
-        else:
-            drec, losses, final_loss, used = \
-                self._get_invert_many(max_iters)(*args)
+        with tracer.span("gi.invert") as _sp:
+            _sp.arg("batch", B)
+            _sp.arg("bucket", Bp)
+            if self.n_shards > 1:
+                fn = self._get_invert_many_sharded(max_iters,
+                                                   masks is not None)
+                args = args[:2] + args[3:] if masks is None else args
+                drec, losses, final_loss, used = fn(*args)
+            else:
+                drec, losses, final_loss, used = \
+                    self._get_invert_many(max_iters)(*args)
+            _sp.fence(used)
         drec = _take_leading(drec, B)
         info = {"losses": losses[:B], "final_loss": final_loss[:B],
                 "iters_used": used[:B], "batch": B, "padded_to": Bp,
-                "n_shards": self.n_shards, "engine": "oneshot"}
+                "n_shards": self.n_shards, "engine": "oneshot",
+                "budgets": n_host}
+        self._emit_gi_metric(info)
         return drec, info
+
+    def _emit_gi_metric(self, info: Dict[str, Any]) -> None:
+        """One ``gi_exec`` metric row per batched-executor invocation:
+        lane occupancy, iterations-to-converge stats, and final-loss
+        (disparity) values. Reads ``info``'s device arrays, so it only
+        runs with the tracer enabled."""
+        if not tracer.enabled:
+            return
+        iu = np.asarray(info["iters_used"])
+        fl = np.asarray(info["final_loss"])
+        fl = fl[np.isfinite(fl)]
+        B = int(info["batch"])
+        occ = info.get("occupancy")
+        tracer.metric(
+            "gi_exec", engine=info["engine"], batch=B,
+            padded_to=int(info["padded_to"]),
+            segments=int(info.get("segments", 1)),
+            occupancy=None if occ is None else float(occ),
+            iters_mean=float(iu.mean()) if B else 0.0,
+            iters_min=int(iu.min()) if B else 0,
+            iters_max=int(iu.max()) if B else 0,
+            final_loss_mean=float(fl.mean()) if fl.size else None,
+            final_loss_max=float(fl.max()) if fl.size else None)
 
     # ------------------------------------------------------------------ #
     def invert(
@@ -688,17 +726,20 @@ class GradientInverter:
         operand); a 1-shard mesh uses the plain vmap bit-for-bit.
         """
         x, y = drec
-        if self.n_shards <= 1:
-            return self._estimate_many(w_global_now, x, y)
-        if self._estimate_sharded is None:
-            ax = cohort_spec(self.mesh)
-            self._estimate_sharded = jax.jit(shard_map_compat(
-                jax.vmap(lambda w, xx, yy: self.local_update(w, xx, yy)[0],
-                         in_axes=(None, 0, 0)),
-                self.mesh,
-                in_specs=(replicated_spec(), ax, ax), out_specs=ax))
-        B = x.shape[0]
-        Bp = shard_bucket(B, self.n_shards)
-        w_hat = self._estimate_sharded(
-            w_global_now, _pad_leading(x, Bp - B), _pad_leading(y, Bp - B))
-        return _take_leading(w_hat, B)
+        with tracer.span("gi.estimate") as _sp:
+            if self.n_shards <= 1:
+                return _sp.fence(self._estimate_many(w_global_now, x, y))
+            if self._estimate_sharded is None:
+                ax = cohort_spec(self.mesh)
+                self._estimate_sharded = jax.jit(shard_map_compat(
+                    jax.vmap(lambda w, xx, yy:
+                             self.local_update(w, xx, yy)[0],
+                             in_axes=(None, 0, 0)),
+                    self.mesh,
+                    in_specs=(replicated_spec(), ax, ax), out_specs=ax))
+            B = x.shape[0]
+            Bp = shard_bucket(B, self.n_shards)
+            w_hat = self._estimate_sharded(
+                w_global_now, _pad_leading(x, Bp - B),
+                _pad_leading(y, Bp - B))
+            return _sp.fence(_take_leading(w_hat, B))

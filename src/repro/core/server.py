@@ -61,6 +61,7 @@ from repro.data.staleness import StalenessSchedule
 from repro.launch.mesh import mesh_shard_count, shard_map_compat
 from repro.launch.sharding import (cohort_spec, multi_version_specs,
                                    replicated_spec, shard_bucket)
+from repro.obs import tracer
 
 STRATEGIES = ("unweighted", "weighted", "first_order", "w_pred",
               "asyn_tiers", "ours", "unstale")
@@ -167,9 +168,17 @@ class Server:
         self.gi_log: List[Dict[str, Any]] = []
         self.metrics: List[Dict[str, float]] = []
         # last aggregation's GI executor telemetry (occupancy / wasted lane
-        # iters) — surfaced in the per-round metrics row and the sim
-        # bridge's wall rows
+        # iters, per-client iteration counts and early-stop reasons) —
+        # surfaced in the per-round metrics row and the sim bridge's wall
+        # rows
         self._last_gi: Optional[Dict[str, Any]] = None
+        # cross-round GI accounting, surfaced through summary(): total
+        # iterations spent per client, inversions per client, and how lanes
+        # stopped ("tol" = loss tolerance fired before the budget,
+        # "budget" = the full iteration budget ran out)
+        self.gi_client_iters: Dict[int, int] = {}
+        self.gi_client_calls: Dict[int, int] = {}
+        self.gi_stop_counts: Dict[str, int] = {"tol": 0, "budget": 0}
 
     # ------------------------------------------------------------------ #
     def _eval_fn(self, params):
@@ -326,31 +335,53 @@ class Server:
         # "ours" without the batched GI engine is inherently per-client
         # (the sequential seed inverter), so it always takes the loop path
         fused = cfg.fused_step and (cfg.batched_gi or cfg.strategy != "ours")
-        if fused:
-            gi_iters_this_round = self._aggregate_fused(t, fast, stale_pairs)
-        else:
-            gi_iters_this_round = self._aggregate_loop(t, fast, stale_pairs)
-        self.history.append(self.global_params)
+        with tracer.span("server.step") as _sp:
+            _sp.arg("version", t)
+            if fused:
+                gi_iters_this_round = self._aggregate_fused(t, fast,
+                                                            stale_pairs)
+            else:
+                gi_iters_this_round = self._aggregate_loop(t, fast,
+                                                           stale_pairs)
+            self.history.append(self.global_params)
 
-        # --- switching monitor: observe delayed arrivals of true updates
-        if cfg.strategy == "ours" and cfg.switching:
-            self._run_pending_checks(t)
+            # --- switching monitor: observe delayed arrivals of true updates
+            if cfg.strategy == "ours" and cfg.switching:
+                self._run_pending_checks(t)
 
-        row: Dict[str, float] = {"round": t, "gi_iters": gi_iters_this_round}
-        if self._last_gi is not None:
-            # GI executor telemetry: fraction of paid lane-iterations that
-            # advanced a real client (1.0 = no lockstep/padding waste)
-            row["gi_occupancy"] = self._last_gi["occupancy"]
-            row["gi_wasted_lane_iters"] = float(
-                self._last_gi["wasted_lane_iters"])
-        if eval_now is None:
-            eval_now = (t % cfg.eval_every == 0)
-        if eval_now:
-            acc, per_class = self.evaluate()
-            row["acc"] = acc
-            for c, a in enumerate(per_class):
-                row[f"acc_class_{c}"] = float(a)
-        self.metrics.append(row)
+            row: Dict[str, float] = {"round": t,
+                                     "gi_iters": gi_iters_this_round}
+            if self._last_gi is not None:
+                # GI executor telemetry: fraction of paid lane-iterations
+                # that advanced a real client (1.0 = no lockstep/padding
+                # waste)
+                row["gi_occupancy"] = self._last_gi["occupancy"]
+                row["gi_wasted_lane_iters"] = float(
+                    self._last_gi["wasted_lane_iters"])
+            if eval_now is None:
+                eval_now = (t % cfg.eval_every == 0)
+            if eval_now:
+                with tracer.span("step.eval"):
+                    acc, per_class = self.evaluate()
+                row["acc"] = acc
+                for c, a in enumerate(per_class):
+                    row[f"acc_class_{c}"] = float(a)
+            self.metrics.append(row)
+            if tracer.enabled:
+                # cohort composition: fresh/stale split, base-round
+                # scatter, realized staleness, and the pow2 bucket the GI
+                # executor chose this round
+                bases = [b for _, b in stale_pairs]
+                taus = np.asarray([t - b for b in bases], np.int64)
+                tracer.metric(
+                    "cohort", version=t, n_fresh=len(fast),
+                    n_stale=len(bases), n_base_rounds=len(set(bases)),
+                    tau_mean=float(taus.mean()) if taus.size else 0.0,
+                    tau_max=int(taus.max()) if taus.size else 0,
+                    tau_hist=(np.bincount(taus).tolist()
+                              if taus.size else []),
+                    gi_bucket=(self._last_gi or {}).get("padded_to"),
+                    gi_engine=(self._last_gi or {}).get("engine"))
         return row
 
     # ------------------------------------------------------------------ #
@@ -375,9 +406,10 @@ class Server:
 
         fast_stack = None
         if fast:
-            xs, ys, ms = self._client_stack(fast)
-            w_fast = self._run_cohort(self.global_params, xs, ys, ms)
-            fast_stack = tree_sub(w_fast, self.global_params)
+            with tracer.span("step.fresh_update") as _sp:
+                xs, ys, ms = self._client_stack(fast)
+                w_fast = self._run_cohort(self.global_params, xs, ys, ms)
+                fast_stack = _sp.fence(tree_sub(w_fast, self.global_params))
 
         gi_iters = 0
         stale_stack = None
@@ -395,14 +427,18 @@ class Server:
                 # model, batched like the fresh cohort — the stale
                 # LocalUpdates are never aggregated, so skip the base-param
                 # gather and the multi-version dispatch entirely
-                w_true = self._run_cohort(self.global_params, xs, ys, ms)
-                stale_stack = tree_sub(w_true, self.global_params)
+                with tracer.span("step.stale_update") as _sp:
+                    w_true = self._run_cohort(self.global_params, xs, ys, ms)
+                    stale_stack = _sp.fence(
+                        tree_sub(w_true, self.global_params))
                 taus = np.zeros((S,), np.int64)
             else:
-                w_base_stack = self.history.gather(bases)
-                w_stale_stack = self._run_cohort_multi(w_base_stack, xs, ys,
-                                                       ms)
-                delta_stack = tree_sub(w_stale_stack, w_base_stack)
+                with tracer.span("step.stale_update") as _sp:
+                    w_base_stack = self.history.gather(bases)
+                    w_stale_stack = self._run_cohort_multi(w_base_stack, xs,
+                                                           ys, ms)
+                    delta_stack = _sp.fence(
+                        tree_sub(w_stale_stack, w_base_stack))
                 if strat in ("unweighted", "asyn_tiers"):
                     stale_stack = delta_stack
                 elif strat == "weighted":
@@ -425,20 +461,24 @@ class Server:
 
         parts = [p for p in (fast_stack, stale_stack) if p is not None]
         if parts:
-            updates = tree_concat_leading(parts)
-            weights = np.concatenate(
-                [self._counts[np.asarray(fast, np.int64)], stale_weights])
-            if cfg.strategy == "asyn_tiers" and S:
-                # tiering runs on the cohort's *realized* staleness — under
-                # the simulator these are observed delays, not the schedule
-                staleness = ([0.0] * len(fast)
-                             + [float(x) for x in taus])
-                agg = tiers.tiered_aggregate_stacked(
-                    updates, staleness, weights.tolist(), cfg.n_tiers)
-            else:
-                agg = aggregation.fedavg_stacked(updates, weights.tolist())
-            self.global_params = aggregation.apply_update(
-                self.global_params, agg, cfg.server_lr)
+            with tracer.span("step.fedavg") as _sp:
+                updates = tree_concat_leading(parts)
+                weights = np.concatenate(
+                    [self._counts[np.asarray(fast, np.int64)],
+                     stale_weights])
+                if cfg.strategy == "asyn_tiers" and S:
+                    # tiering runs on the cohort's *realized* staleness —
+                    # under the simulator these are observed delays, not
+                    # the schedule
+                    staleness = ([0.0] * len(fast)
+                                 + [float(x) for x in taus])
+                    agg = tiers.tiered_aggregate_stacked(
+                        updates, staleness, weights.tolist(), cfg.n_tiers)
+                else:
+                    agg = aggregation.fedavg_stacked(updates,
+                                                     weights.tolist())
+                self.global_params = _sp.fence(aggregation.apply_update(
+                    self.global_params, agg, cfg.server_lr))
         return gi_iters
 
     def _ours_update_fused(self, t: int, ids: List[int], taus: np.ndarray,
@@ -484,24 +524,25 @@ class Server:
             subs.append(sub)
         keys = jnp.stack(subs)
 
-        inits, flags = None, None
-        if cfg.gi.warm_start:
-            if self._n_shards > 1:
-                xs, ys, warm = self.warm.gather_sharded(
-                    gi_ids, self.mesh,
-                    pad_to=shard_bucket(len(gi_ids), self._n_shards))
-            else:
-                xs, ys, warm = self.warm.gather(gi_ids)
-            if xs is not None:
-                inits, flags = (xs, ys), jnp.asarray(warm)
-        drec, info = self.inverter.invert_batch(
-            w_base_g, w_stale_g, keys,
-            masks=masks, inits=inits, init_flags=flags)
-        w_hat_stack = self.inverter.estimate_unstale_batch(
-            self.global_params, drec)
+        with tracer.span("step.gi") as _sp:
+            inits, flags = None, None
+            if cfg.gi.warm_start:
+                if self._n_shards > 1:
+                    xs, ys, warm = self.warm.gather_sharded(
+                        gi_ids, self.mesh,
+                        pad_to=shard_bucket(len(gi_ids), self._n_shards))
+                else:
+                    xs, ys, warm = self.warm.gather(gi_ids)
+                if xs is not None:
+                    inits, flags = (xs, ys), jnp.asarray(warm)
+            drec, info = self.inverter.invert_batch(
+                w_base_g, w_stale_g, keys,
+                masks=masks, inits=inits, init_flags=flags)
+            w_hat_stack = _sp.fence(self.inverter.estimate_unstale_batch(
+                self.global_params, drec))
         iters_used = np.asarray(info["iters_used"])
         final_loss = np.asarray(info["final_loss"])
-        self._record_gi_telemetry(info, iters_used)
+        stops = self._record_gi_telemetry(info, iters_used, gi_ids)
 
         if cfg.gi.warm_start:
             self.warm.put_stacked(gi_ids, *drec)
@@ -511,7 +552,8 @@ class Server:
         for b, i in enumerate(gi_ids):
             self.gi_log.append({"round": t, "client": i,
                                 "final_loss": float(final_loss[b]),
-                                "iters_used": int(iters_used[b])})
+                                "iters_used": int(iters_used[b]),
+                                "stop": stops[b]})
             if schedule_checks:
                 # delayed E1/E2 check (observable at t + tau); only the
                 # clients that actually ran GI are unstacked, on the host
@@ -521,6 +563,9 @@ class Server:
                 self._pending_checks.setdefault(t + tau, []).append(
                     (t, i, w_hat_b, w_stale_b))
 
+        if tracer.enabled:
+            tracer.metric("compensation", strategy="ours",
+                          gamma=float(gamma), n=len(gi_ids))
         if gamma < 1.0:
             hat_delta = jax.tree_util.tree_map(
                 lambda h, s: gamma * h + (1.0 - gamma) * s,
@@ -532,7 +577,22 @@ class Server:
         return out, iters
 
     def _record_gi_telemetry(self, info: Dict[str, Any],
-                             iters_used: np.ndarray) -> None:
+                             iters_used: np.ndarray,
+                             gi_ids: Optional[Sequence[int]] = None
+                             ) -> List[str]:
+        """Record one GI invocation's executor telemetry into ``_last_gi``
+        and the cross-round accumulators.
+
+        Returns the per-client early-stop reasons: ``"tol"`` when the lane
+        stopped before its iteration budget (the loss tolerance fired),
+        ``"budget"`` when it ran the budget out. Budgets come from the
+        executor's ``info`` (per-client when warm starts or callers vary
+        them) and default to ``cfg.gi.iters``.
+        """
+        budgets = np.asarray(info.get(
+            "budgets", np.full(len(iters_used), self.cfg.gi.iters)))
+        stops = ["tol" if int(u) < int(b) else "budget"
+                 for u, b in zip(iters_used, budgets)]
         occ = info.get("occupancy")
         if occ is None:
             # one-shot engine: lockstep cost model — every resident lane
@@ -545,7 +605,21 @@ class Server:
             wasted = int(info["wasted_lane_iters"])
         self._last_gi = {"occupancy": float(occ),
                          "wasted_lane_iters": wasted,
-                         "engine": info.get("engine", "oneshot")}
+                         "engine": info.get("engine", "oneshot"),
+                         "padded_to": int(info.get("padded_to",
+                                                   len(iters_used))),
+                         "clients": ([] if gi_ids is None
+                                     else [int(i) for i in gi_ids]),
+                         "iters": [int(u) for u in iters_used],
+                         "stops": stops}
+        if gi_ids is not None:
+            for i, u, s in zip(gi_ids, iters_used, stops):
+                i = int(i)
+                self.gi_client_iters[i] = (self.gi_client_iters.get(i, 0)
+                                           + int(u))
+                self.gi_client_calls[i] = self.gi_client_calls.get(i, 0) + 1
+                self.gi_stop_counts[s] += 1
+        return stops
 
     # ------------------------------------------------------------------ #
     # Loop aggregation round (per-client reference path)
@@ -697,28 +771,37 @@ class Server:
                     xs, ys, warm = self.warm.gather(gi_ids)
                 if xs is not None:
                     inits, flags = (xs, ys), jnp.asarray(warm)
-            drec, info = self.inverter.invert_batch(
-                w_base_stack, w_stale_stack, keys,
-                masks=masks, inits=inits, init_flags=flags)
-            w_hat_stack = self.inverter.estimate_unstale_batch(
-                self.global_params, drec)
+            with tracer.span("step.gi") as _sp:
+                drec, info = self.inverter.invert_batch(
+                    w_base_stack, w_stale_stack, keys,
+                    masks=masks, inits=inits, init_flags=flags)
+                w_hat_stack = _sp.fence(
+                    self.inverter.estimate_unstale_batch(
+                        self.global_params, drec))
             iters_used = np.asarray(info["iters_used"])
             final_loss = np.asarray(info["final_loss"])
-            self._record_gi_telemetry(info, iters_used)
         else:   # sequential reference engine (same inputs, per-client loop)
-            drecs, iters_used, final_loss = [], [], []
-            for b, i in enumerate(gi_ids):
-                init_b = self.warm.get(i) if cfg.gi.warm_start else None
-                mask_b = None if masks is None else masks[b]
-                d, inf = self.inverter.invert(
-                    deliveries[i][1], deliveries[i][0], keys[b],
-                    mask=mask_b, init=init_b)
-                drecs.append(d)
-                iters_used.append(inf["iters_used"])
-                final_loss.append(inf["final_loss"])
-            drec = tree_stack(drecs)
-            w_hat_stack = self.inverter.estimate_unstale_batch(
-                self.global_params, drec)
+            with tracer.span("step.gi") as _sp:
+                drecs, iters_used, final_loss = [], [], []
+                for b, i in enumerate(gi_ids):
+                    init_b = self.warm.get(i) if cfg.gi.warm_start else None
+                    mask_b = None if masks is None else masks[b]
+                    d, inf = self.inverter.invert(
+                        deliveries[i][1], deliveries[i][0], keys[b],
+                        mask=mask_b, init=init_b)
+                    drecs.append(d)
+                    iters_used.append(inf["iters_used"])
+                    final_loss.append(inf["final_loss"])
+                drec = tree_stack(drecs)
+                w_hat_stack = _sp.fence(
+                    self.inverter.estimate_unstale_batch(
+                        self.global_params, drec))
+            iters_used = np.asarray(iters_used)
+            # the sequential engine runs one lane at a time: no lockstep
+            # waste by construction, budget = cfg.gi.iters for every lane
+            info = {"engine": "sequential", "padded_to": len(gi_ids),
+                    "occupancy": 1.0, "wasted_lane_iters": 0}
+        stops = self._record_gi_telemetry(info, iters_used, gi_ids)
 
         if cfg.gi.warm_start:
             self.warm.put_stacked(gi_ids, *drec)
@@ -728,7 +811,8 @@ class Server:
             w_stale = deliveries[i][0]
             self.gi_log.append({"round": t, "client": i,
                                 "final_loss": float(final_loss[b]),
-                                "iters_used": int(iters_used[b])})
+                                "iters_used": int(iters_used[b]),
+                                "stop": stops[b]})
             hat_delta = tree_sub(w_hat, self.global_params)
 
             # schedule the delayed E1/E2 check (observable at t + tau) —
@@ -762,6 +846,25 @@ class Server:
                 x, y, m = self._client_shard(i)
                 w_true = self._local_update(w_base, x, y, m)[0]
                 self.monitor.observe(t0, w_hat, w_stale, w_true)
+
+    def summary(self) -> Dict[str, Any]:
+        """Cross-round GI accounting: total/per-client iteration counts and
+        early-stop reasons (tol vs budget), plus the last invocation's
+        executor telemetry."""
+        gi: Dict[str, Any] = {
+            "total_iters": int(sum(self.gi_client_iters.values())),
+            "clients_inverted": len(self.gi_client_iters),
+            "per_client_iters": {int(k): int(v) for k, v in
+                                 sorted(self.gi_client_iters.items())},
+            "per_client_calls": {int(k): int(v) for k, v in
+                                 sorted(self.gi_client_calls.items())},
+            "stop_reasons": dict(self.gi_stop_counts),
+        }
+        if self._last_gi is not None:
+            gi["last"] = dict(self._last_gi)
+        return {"strategy": self.cfg.strategy,
+                "versions": len(self.metrics),
+                "gi": gi}
 
     # ------------------------------------------------------------------ #
     def run(self, rounds: Optional[int] = None) -> List[Dict[str, float]]:

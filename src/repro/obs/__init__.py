@@ -1,0 +1,35 @@
+"""Unified telemetry layer: spans, counters, and staleness metrics.
+
+Usage at an instrumentation site (hot paths bind the singleton once)::
+
+    from repro.obs import tracer
+
+    with tracer.span("step.gi", args={"batch": B}) as sp:
+        out = invert(...)
+        sp.fence(out)            # span covers the dispatched device work
+    if tracer.enabled:
+        tracer.metric("gi_exec", batch=B, occupancy=occ)
+
+Enabling/exporting (CLIs, benchmarks, tests)::
+
+    from repro import obs
+    obs.configure(enabled=True, reset=True)
+    ... run workload ...
+    obs.write_chrome_trace(obs.tracer, "trace.json")   # open in Perfetto
+    obs.write_jsonl(obs.tracer.metrics, "metrics.jsonl")
+
+Disabled (the default) is a true no-op: ``tracer.span`` returns a shared
+singleton and ``metric``/``counter`` return immediately, so instrumented
+code paths stay bit-for-bit identical and allocation-free. See
+``docs/observability.md`` for the span taxonomy and metrics schema.
+"""
+
+from .export import chrome_trace, write_chrome_trace
+from .metrics import SCHEMA, read_rows, rows_of_kind, write_jsonl
+from .tracer import NOOP_SPAN, Tracer, configure, tracer
+
+__all__ = [
+    "Tracer", "tracer", "configure", "NOOP_SPAN",
+    "SCHEMA", "write_jsonl", "read_rows", "rows_of_kind",
+    "chrome_trace", "write_chrome_trace",
+]

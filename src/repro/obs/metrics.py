@@ -1,0 +1,113 @@
+"""The unified JSONL metrics schema (``obs-metrics-v1``).
+
+One row = one JSON object with a ``kind`` discriminator. This schema
+replaces the two ad-hoc wall-row formats that used to live in
+``sim/bridge.py`` (``ServerBridge.rows``) and ``repro.sweep``
+(``step_walls``): both now emit/consume these rows, and ``read_rows``
+still loads the legacy trajectory JSONs (the old keys are aliases for one
+release — see ``_normalize_legacy``).
+
+Row kinds (producers in parentheses; every kind may carry extra fields —
+readers must ignore unknown keys):
+
+``server_step`` (``ServerBridge.aggregate``)
+    ``version, n_fresh, n_stale, n_base_rounds, wall_s, gi_iters,
+    gi_occupancy`` — per-aggregation server hot-path cost — plus
+    ``spans``: the span-name → seconds breakdown of that step when the
+    tracer was enabled (where the wall time went: fresh/stale update, GI,
+    stacked FedAvg, eval).
+``aggregation`` (sim engines)
+    Cohort composition as the *engine* saw it: ``time, version, n_fresh,
+    n_stale, n_base_rounds, mean_tau, tau_hist`` (realized-staleness
+    histogram: ``tau_hist[t]`` = number of stale updates with realized
+    staleness ``t``; index 0 counts fresh).
+``gi_exec`` (``core.gradient_inversion``)
+    Per-invocation executor telemetry: ``engine`` (oneshot|segmented),
+    ``batch, padded_to, occupancy, iters_mean/min/max, segments,
+    final_loss_mean/max`` (disparity proxies).
+``compensation`` (``core.compensation`` / ``Server``)
+    Per-strategy mixing weights: ``strategy`` plus e.g. ``alpha_mean``
+    for staleness weighting or ``gamma`` for the ours-blend.
+``wave`` (vectorized engine)
+    Per-wave dispatch/upload batch sizes: ``wave`` (dispatch|upload),
+    ``time, n``.
+
+Compatibility: a trajectory JSON's ``step_walls`` list (the legacy
+bridge-row format, which is a strict subset of ``server_step``) loads via
+``read_rows`` and is tagged ``kind: server_step`` on the way in.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, List
+
+SCHEMA = "obs-metrics-v1"
+
+__all__ = ["SCHEMA", "write_jsonl", "read_rows", "rows_of_kind"]
+
+
+def write_jsonl(rows: Iterable[Dict[str, Any]], path: str) -> int:
+    """Write metric rows as JSONL, one object per line, preceded by a
+    schema header line. Returns the number of data rows written."""
+    n = 0
+    with open(path, "w") as f:
+        f.write(json.dumps({"schema": SCHEMA}) + "\n")
+        for row in rows:
+            f.write(json.dumps(row, default=float) + "\n")
+            n += 1
+    return n
+
+
+def _normalize_legacy(doc: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Rows from a trajectory JSON (legacy ``step_walls`` +
+    ``server_metrics``) — the one-release alias path."""
+    rows: List[Dict[str, Any]] = []
+    for r in doc.get("step_walls", []) or []:
+        row = dict(r)
+        row.setdefault("kind", "server_step")
+        rows.append(row)
+    for r in doc.get("server_metrics", []) or []:
+        row = dict(r)
+        row.setdefault("kind", "server_metric")
+        rows.append(row)
+    return rows
+
+
+def read_rows(path: str) -> List[Dict[str, Any]]:
+    """Load metric rows from any supported container:
+
+    * ``*.jsonl`` — the canonical stream (schema header line optional);
+    * a JSON object with a ``metrics`` or ``rows`` list of kind-tagged rows;
+    * a legacy trajectory JSON (``step_walls``/``server_metrics`` keys).
+    """
+    if path.endswith(".jsonl"):
+        rows = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                obj = json.loads(line)
+                if set(obj.keys()) == {"schema"}:
+                    continue
+                rows.append(obj)
+        return rows
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):
+        return doc
+    if "step_walls" in doc or "server_metrics" in doc:
+        return _normalize_legacy(doc)
+    for key in ("metrics", "rows"):
+        if isinstance(doc.get(key), list):
+            return doc[key]
+    raise ValueError(f"{os.path.basename(path)}: no metric rows found "
+                     f"(expected .jsonl, a metrics/rows list, or a "
+                     f"trajectory JSON)")
+
+
+def rows_of_kind(rows: Iterable[Dict[str, Any]], kind: str
+                 ) -> List[Dict[str, Any]]:
+    return [r for r in rows if r.get("kind") == kind]

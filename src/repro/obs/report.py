@@ -1,0 +1,212 @@
+"""Render a per-round time/staleness breakdown from recorded telemetry.
+
+    PYTHONPATH=src python -m repro.obs.report trace.json
+    PYTHONPATH=src python -m repro.obs.report metrics.jsonl
+    PYTHONPATH=src python -m repro.obs.report sweep_out/trajectory_*.json
+
+Accepts any artifact the obs layer (or its predecessors) writes: a Chrome
+trace exported by ``repro.obs.export``, an ``obs-metrics-v1`` JSONL
+stream, or a legacy trajectory JSON (``step_walls`` alias). Prints one row
+per aggregation round — wall time, cohort composition (fresh/stale split,
+base-round scatter), realized staleness, GI occupancy — followed by the
+span-time breakdown and counters when the source carries spans.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+from . import metrics as obs_metrics
+
+__all__ = ["load_any", "per_round_table", "render", "main"]
+
+
+def _is_chrome_trace(doc: Any) -> bool:
+    return isinstance(doc, dict) and "traceEvents" in doc
+
+
+def _from_chrome(doc: Dict[str, Any]) -> Tuple[List[Dict[str, Any]],
+                                               Dict[str, float],
+                                               Dict[str, float]]:
+    """(metric_rows, span_totals_s, counters) out of a trace document."""
+    rows: List[Dict[str, Any]] = []
+    span_totals: Dict[str, float] = {}
+    for ev in doc.get("traceEvents", []):
+        ph = ev.get("ph")
+        if ph == "i":
+            row = dict(ev.get("args") or {})
+            row["kind"] = ev.get("name", "metric")
+            row["ts_s"] = float(ev.get("ts", 0.0)) / 1e6
+            rows.append(row)
+        elif ph == "X":
+            name = ev.get("name", "?")
+            span_totals[name] = (span_totals.get(name, 0.0)
+                                 + float(ev.get("dur", 0.0)) / 1e6)
+    counters = (doc.get("otherData") or {}).get("counters") or {}
+    return rows, span_totals, counters
+
+
+def load_any(path: str) -> Tuple[List[Dict[str, Any]], Dict[str, float],
+                                 Dict[str, float]]:
+    """Load (metric_rows, span_totals_s, counters) from any supported
+    artifact; span info is empty for metrics-only sources."""
+    if path.endswith(".jsonl"):
+        return obs_metrics.read_rows(path), {}, {}
+    with open(path) as f:
+        doc = json.load(f)
+    if _is_chrome_trace(doc):
+        return _from_chrome(doc)
+    if isinstance(doc, dict) and ("step_walls" in doc
+                                  or "server_metrics" in doc):
+        return obs_metrics._normalize_legacy(doc), {}, {}
+    if isinstance(doc, dict):
+        for key in ("metrics", "rows"):
+            if isinstance(doc.get(key), list):
+                return doc[key], {}, {}
+    if isinstance(doc, list):
+        return doc, {}, {}
+    raise ValueError(f"{path}: unrecognized telemetry artifact")
+
+
+def _mean_tau(row: Dict[str, Any]) -> Optional[float]:
+    if row.get("mean_tau") is not None:
+        return float(row["mean_tau"])
+    hist = row.get("tau_hist")
+    if hist:
+        total = sum(hist)
+        if total:
+            return sum(t * n for t, n in enumerate(hist)) / total
+    return None
+
+
+def per_round_table(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Join ``server_step`` and engine ``aggregation`` rows per round."""
+    by_version: Dict[int, Dict[str, Any]] = {}
+    order: List[int] = []
+
+    def slot(v: int) -> Dict[str, Any]:
+        if v not in by_version:
+            by_version[v] = {"round": v}
+            order.append(v)
+        return by_version[v]
+
+    for row in rows:
+        kind = row.get("kind")
+        if kind == "server_step" and row.get("version") is not None:
+            s = slot(int(row["version"]))
+            for key in ("n_fresh", "n_stale", "n_base_rounds", "wall_s",
+                        "gi_iters", "gi_occupancy", "spans"):
+                if row.get(key) is not None:
+                    s[key] = row[key]
+        elif kind == "aggregation" and row.get("version") is not None:
+            s = slot(int(row["version"]))
+            s.setdefault("n_fresh", row.get("n_fresh"))
+            s.setdefault("n_stale", row.get("n_stale"))
+            s.setdefault("n_base_rounds", row.get("n_base_rounds"))
+            mt = _mean_tau(row)
+            if mt is not None:
+                s["mean_tau"] = mt
+            if row.get("time") is not None:
+                s["time"] = row["time"]
+    return [by_version[v] for v in order]
+
+
+def _fmt(val, spec: str, width: int) -> str:
+    if val is None:
+        return "-".rjust(width)
+    try:
+        return format(val, spec).rjust(width)
+    except (TypeError, ValueError):
+        return str(val).rjust(width)
+
+
+def render(rows: List[Dict[str, Any]], span_totals: Dict[str, float],
+           counters: Dict[str, float], out=None) -> None:
+    out = out or sys.stdout
+    table = per_round_table(rows)
+    if table:
+        hdr = (f"{'round':>5} {'wall_ms':>8} {'fresh':>5} {'stale':>5} "
+               f"{'bases':>5} {'mean_tau':>8} {'gi_iters':>8} {'gi_occ':>6}")
+        print(hdr, file=out)
+        print("-" * len(hdr), file=out)
+        for r in table:
+            wall_ms = (r["wall_s"] * 1e3) if r.get("wall_s") is not None \
+                else None
+            print(f"{_fmt(r.get('round'), 'd', 5)} "
+                  f"{_fmt(wall_ms, '.1f', 8)} "
+                  f"{_fmt(r.get('n_fresh'), 'd', 5)} "
+                  f"{_fmt(r.get('n_stale'), 'd', 5)} "
+                  f"{_fmt(r.get('n_base_rounds'), 'd', 5)} "
+                  f"{_fmt(r.get('mean_tau'), '.2f', 8)} "
+                  f"{_fmt(r.get('gi_iters'), 'd', 8)} "
+                  f"{_fmt(r.get('gi_occupancy'), '.2f', 6)}", file=out)
+        # per-round span breakdown when server_step rows carried one
+        spanned = [r for r in table if r.get("spans")]
+        if spanned:
+            names = sorted({n for r in spanned for n in r["spans"]})
+            print(f"\nper-round span breakdown (ms):", file=out)
+            print(f"{'round':>5} " + " ".join(f"{n:>18}" for n in names),
+                  file=out)
+            for r in spanned:
+                cells = " ".join(
+                    _fmt(r["spans"].get(n, 0.0) * 1e3, ".1f", 18)
+                    for n in names)
+                print(f"{_fmt(r.get('round'), 'd', 5)} {cells}", file=out)
+    else:
+        print("no per-round rows (source has no server_step/aggregation "
+              "metrics)", file=out)
+
+    gi = obs_metrics.rows_of_kind(rows, "gi_exec")
+    if gi:
+        occ = [r.get("occupancy") for r in gi if r.get("occupancy")
+               is not None]
+        segs = sum(int(r.get("segments") or 0) for r in gi)
+        print(f"\ngi executor: {len(gi)} invocation(s), "
+              f"{segs} segment(s)"
+              + (f", mean occupancy "
+                 f"{sum(occ) / len(occ):.2f}" if occ else ""), file=out)
+    waves = obs_metrics.rows_of_kind(rows, "wave")
+    if waves:
+        n_disp = sum(int(r.get("n") or 0) for r in waves
+                     if r.get("wave") == "dispatch")
+        n_up = sum(int(r.get("n") or 0) for r in waves
+                   if r.get("wave") == "upload")
+        print(f"engine waves: {len(waves)} wave(s), "
+              f"{n_disp} dispatches, {n_up} uploads", file=out)
+    if span_totals:
+        print("\nspan totals:", file=out)
+        for name, secs in sorted(span_totals.items(),
+                                 key=lambda kv: -kv[1]):
+            print(f"  {name:<24} {secs * 1e3:10.1f} ms", file=out)
+    if counters:
+        print("\ncounters:", file=out)
+        for name, val in sorted(counters.items()):
+            print(f"  {name:<24} {val:g}", file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="per-round time/staleness breakdown from a Chrome "
+                    "trace, obs-metrics-v1 JSONL, or trajectory JSON")
+    ap.add_argument("paths", nargs="+", help="telemetry artifact(s)")
+    args = ap.parse_args(argv)
+    status = 0
+    for path in args.paths:
+        if len(args.paths) > 1:
+            print(f"== {path} ==")
+        try:
+            rows, span_totals, counters = load_any(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            status = 2
+            continue
+        render(rows, span_totals, counters)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

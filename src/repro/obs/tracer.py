@@ -1,0 +1,328 @@
+"""Low-overhead tracing/metrics core (the unified telemetry layer).
+
+One process-wide ``Tracer`` (``repro.obs.tracer``) is threaded through every
+hot layer — sim engines, ``Server.step``, the GI executor, compensation —
+and records three kinds of telemetry:
+
+* **spans** — nestable wall-time intervals stored as monotonically-growing
+  struct-of-arrays columns (``name_id`` / ``start_ns`` / ``dur_ns`` /
+  ``parent`` / ``compiles``; names interned to ids) — the same SoA ethos as
+  ``sim/engine_vec.py``: no per-span dict, no per-span object retained.
+  Exported as Chrome trace events (``repro.obs.export``) loadable in
+  Perfetto / chrome://tracing.
+* **counters** — monotonically-growing named totals (``tracer.counter``),
+  e.g. per-wave dispatch/upload counts from the vectorized engine and the
+  jit compile accounting below.
+* **metric rows** — structured dict records (``tracer.metric``) forming the
+  JSONL metrics stream (``repro.obs.metrics``): per-aggregation cohort
+  composition, realized-staleness histograms, GI executor occupancy,
+  compensation mixing weights. One schema shared by ``sim/bridge.py`` and
+  ``repro.sweep``.
+
+**Disabled is a true no-op.** ``tracer.span(name)`` on a disabled tracer
+returns one preallocated singleton whose ``__enter__``/``__exit__``/
+``fence`` do nothing — no allocation, no clock read, no dict; ``counter``
+and ``metric`` return immediately. The neutrality contract (identical trace
+digests and bit-for-bit trajectories with tracing on or off) holds because
+every record is read-only and the only side effect — ``fence`` — is a
+``jax.block_until_ready`` wait that cannot change values.
+
+**JAX-awareness.** Spans accept an explicit fence (``sp.fence(x)``) so the
+recorded duration covers the device work a dispatch launched, not just the
+Python dispatch itself; and a ``jax.monitoring`` duration listener counts
+backend compiles (``jit_compiles`` / ``jit_compile_s`` counters, per-span
+``compiles`` column), so a trace distinguishes a round that paid an XLA
+compile from one that ran entirely from the jit cache
+(``spans_with_compile`` vs ``spans_cache_hit`` counters).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["Tracer", "tracer", "configure", "NOOP_SPAN"]
+
+
+class _Col:
+    """Append-only growable column (amortized doubling) — SoA building
+    block shared with the vectorized engine's ``_Grow``."""
+
+    __slots__ = ("a", "n")
+
+    def __init__(self, dtype, cap: int = 256):
+        self.a = np.empty(cap, dtype)
+        self.n = 0
+
+    def push(self, val) -> int:
+        i = self.n
+        if i == len(self.a):
+            grown = np.empty(2 * len(self.a), self.a.dtype)
+            grown[:i] = self.a
+            self.a = grown
+        self.a[i] = val
+        self.n = i + 1
+        return i
+
+    def view(self) -> np.ndarray:
+        return self.a[:self.n]
+
+
+class _NoopSpan:
+    """The disabled fast path: one shared instance, zero work."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    # explicit 3-arg signature: ``*exc`` would pack a tuple per call and
+    # the disabled span path is pinned allocation-free by tests/test_obs.py
+    def __exit__(self, exc_type=None, exc=None, tb=None):
+        return False
+
+    def fence(self, x):
+        return x
+
+    def arg(self, name, value):
+        return None
+
+
+NOOP_SPAN = _NoopSpan()
+
+
+class _LiveSpan:
+    """Context manager recording one span row on exit."""
+
+    __slots__ = ("_tr", "_name", "_args", "_idx", "_fence")
+
+    def __init__(self, tr: "Tracer", name: str, args: Optional[dict]):
+        self._tr = tr
+        self._name = name
+        self._args = args
+        self._fence = None
+
+    def __enter__(self):
+        self._idx = self._tr._open(self._name, self._args)
+        return self
+
+    def fence(self, x):
+        """Register a jax value to block on at span close, so the span
+        covers the asynchronously-dispatched device work. Returns ``x``."""
+        self._fence = x
+        return x
+
+    def arg(self, name, value):
+        """Attach one arg to the span after it opened (values often only
+        exist mid-span, e.g. the pow2 bucket an executor picked)."""
+        self._tr._arg(self._idx, name, value)
+
+    def __exit__(self, exc_type=None, exc=None, tb=None):
+        if self._fence is not None:
+            import jax
+            jax.block_until_ready(self._fence)
+            self._fence = None
+        self._tr._close(self._idx)
+        return False
+
+
+class Tracer:
+    """SoA span recorder + counters + metric-row stream."""
+
+    def __init__(self, enabled: bool = False):
+        self.enabled = bool(enabled)
+        self.counters: Dict[str, float] = {}
+        self.metrics: List[Dict[str, Any]] = []
+        self._names: Dict[str, int] = {}      # interned span names
+        self._name_list: List[str] = []
+        self._name_id = _Col(np.int32)
+        self._start_ns = _Col(np.int64)
+        self._dur_ns = _Col(np.int64)
+        self._parent = _Col(np.int32)
+        self._compiles = _Col(np.int32)       # backend compiles inside span
+        self._span_args: Dict[int, Dict[str, Any]] = {}   # sparse
+        self._stack: List[int] = []
+        self._t0_ns = time.perf_counter_ns()
+
+    # -------------------------------------------------------------- #
+    # Recording (fast paths first)
+    # -------------------------------------------------------------- #
+    def span(self, name: str, args: Optional[dict] = None):
+        """Open a nested span. Disabled: returns the shared no-op singleton
+        (no allocation — the span fast path the neutrality tests pin)."""
+        if not self.enabled:
+            return NOOP_SPAN
+        return _LiveSpan(self, name, args)
+
+    def counter(self, name: str, n: float = 1) -> None:
+        if not self.enabled:
+            return
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def metric(self, kind: str, **fields) -> None:
+        """Append one structured metric row (the JSONL stream). Callers
+        building non-trivial fields should guard with ``tracer.enabled``."""
+        if not self.enabled:
+            return
+        fields["kind"] = kind
+        fields.setdefault("ts_s", (time.perf_counter_ns() - self._t0_ns)
+                          / 1e9)
+        self.metrics.append(fields)
+
+    def metric_row(self, row: Dict[str, Any]) -> None:
+        """Append an externally-built row (e.g. a bridge server_step row)
+        to the metrics stream without copying."""
+        if self.enabled:
+            self.metrics.append(row)
+
+    def fence(self, x):
+        """Module-style fence: block on ``x`` only when tracing. Returns x."""
+        if self.enabled:
+            import jax
+            jax.block_until_ready(x)
+        return x
+
+    # -------------------------------------------------------------- #
+    # Span internals
+    # -------------------------------------------------------------- #
+    def _intern(self, name: str) -> int:
+        nid = self._names.get(name)
+        if nid is None:
+            nid = len(self._name_list)
+            self._names[name] = nid
+            self._name_list.append(name)
+        return nid
+
+    def _open(self, name: str, args: Optional[dict]) -> int:
+        parent = self._stack[-1] if self._stack else -1
+        idx = self._name_id.push(self._intern(name))
+        self._start_ns.push(time.perf_counter_ns() - self._t0_ns)
+        self._dur_ns.push(-1)
+        self._parent.push(parent)
+        self._compiles.push(self.counters.get("jit_compiles", 0))
+        if args:
+            self._span_args[idx] = dict(args)
+        self._stack.append(idx)
+        return idx
+
+    def _close(self, idx: int) -> None:
+        now = time.perf_counter_ns() - self._t0_ns
+        self._dur_ns.a[idx] = now - self._start_ns.a[idx]
+        # compiles column held the open-time snapshot; close resolves it to
+        # the delta (compiles that happened inside the span, children incl.)
+        n_comp = int(self.counters.get("jit_compiles", 0)
+                     - self._compiles.a[idx])
+        self._compiles.a[idx] = n_comp
+        if n_comp:
+            self.counter("spans_with_compile")
+        else:
+            self.counter("spans_cache_hit")
+        # tolerate mis-nested exits: pop back to this span
+        while self._stack:
+            top = self._stack.pop()
+            if top == idx:
+                break
+
+    def _arg(self, idx: int, name: str, value) -> None:
+        self._span_args.setdefault(idx, {})[name] = value
+
+    # -------------------------------------------------------------- #
+    # Reading
+    # -------------------------------------------------------------- #
+    def __len__(self) -> int:
+        return self._name_id.n
+
+    def mark(self) -> int:
+        """Current span-row count; pass to ``span_totals`` to aggregate the
+        spans recorded after a point in time (e.g. one ``Server.step``)."""
+        return self._name_id.n
+
+    def span_totals(self, since: int = 0) -> Dict[str, float]:
+        """Total seconds per span name over rows ``[since:]`` (closed spans
+        only). Nested spans each count under their own name."""
+        if not self.enabled and self._name_id.n <= since:
+            return {}
+        nid = self._name_id.view()[since:]
+        dur = self._dur_ns.view()[since:]
+        ok = dur >= 0
+        out: Dict[str, float] = {}
+        if not ok.any():
+            return out
+        totals = np.bincount(nid[ok], weights=dur[ok],
+                             minlength=len(self._name_list))
+        for name, tot in zip(self._name_list, totals):
+            if tot > 0:
+                out[name] = float(tot) / 1e9
+        return out
+
+    def spans(self) -> List[Dict[str, Any]]:
+        """Materialized span rows (exporters / tests; not a hot path)."""
+        out = []
+        for i in range(self._name_id.n):
+            out.append({
+                "name": self._name_list[int(self._name_id.a[i])],
+                "start_ns": int(self._start_ns.a[i]),
+                "dur_ns": int(self._dur_ns.a[i]),
+                "parent": int(self._parent.a[i]),
+                "compiles": int(self._compiles.a[i]),
+                "args": self._span_args.get(i),
+            })
+        return out
+
+    def reset(self) -> None:
+        """Drop recorded spans/counters/metrics (keeps interned names)."""
+        self.counters = {}
+        self.metrics = []
+        self._name_id = _Col(np.int32)
+        self._start_ns = _Col(np.int64)
+        self._dur_ns = _Col(np.int64)
+        self._parent = _Col(np.int32)
+        self._compiles = _Col(np.int32)
+        self._span_args = {}
+        self._stack = []
+        self._t0_ns = time.perf_counter_ns()
+
+
+# process-wide singleton: call sites bind ``from repro.obs import tracer``
+# once at import time; ``configure`` toggles the flag on the same object so
+# the binding stays valid however early the import happened
+tracer = Tracer(enabled=False)
+
+_JIT_LISTENER_INSTALLED = False
+
+
+def _install_jit_listener() -> None:
+    """Count XLA backend compiles via jax.monitoring (best-effort: the
+    event name is version-dependent, so a missing API degrades to zero
+    counters rather than failing)."""
+    global _JIT_LISTENER_INSTALLED
+    if _JIT_LISTENER_INSTALLED:
+        return
+    _JIT_LISTENER_INSTALLED = True
+    try:
+        from jax import monitoring
+
+        def _on_duration(event: str, duration: float, **kw) -> None:
+            if not tracer.enabled:
+                return
+            if event.endswith("backend_compile_duration"):
+                tracer.counter("jit_compiles")
+                tracer.counter("jit_compile_s", duration)
+
+        monitoring.register_event_duration_secs_listener(_on_duration)
+    except Exception:       # noqa: BLE001 - monitoring API moved/missing
+        pass
+
+
+def configure(enabled: Optional[bool] = None, reset: bool = False) -> Tracer:
+    """Toggle/reset the process-wide tracer. ``configure(enabled=True)``
+    also installs the jit compile listener (once)."""
+    if reset:
+        tracer.reset()
+    if enabled is not None:
+        tracer.enabled = bool(enabled)
+        if enabled:
+            _install_jit_listener()
+    return tracer

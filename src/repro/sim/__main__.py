@@ -46,6 +46,12 @@ def main(argv=None) -> int:
                     help="event engine: vectorized time-wheel (default) or "
                          "the per-event heap oracle — same trace digest")
     ap.add_argument("--out", default=None, help="also write JSON here")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable tracing; write a Chrome trace-event JSON "
+                         "(open in https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable tracing; write the obs-metrics-v1 JSONL "
+                         "stream (input to python -m repro.obs.report)")
     args = ap.parse_args(argv)
 
     if args.list or not args.scenario:
@@ -63,6 +69,11 @@ def main(argv=None) -> int:
         overrides["mesh"] = make_server_mesh(args.mesh)
     if args.engine is not None:
         overrides["engine"] = args.engine
+    tracing = args.trace is not None or args.metrics is not None
+    if tracing:
+        # enable BEFORE build so scenario/server construction spans record
+        from repro import obs
+        obs.configure(enabled=True, reset=True)
     run = scenarios.build(args.scenario, seed=args.seed,
                           horizon=args.horizon, **overrides)
     summary = run.run()
@@ -73,6 +84,16 @@ def main(argv=None) -> int:
     if args.out:
         with open(args.out, "w") as f:
             f.write(text + "\n")
+    if tracing:
+        # status lines on stderr: stdout stays one parseable JSON document
+        if args.trace:
+            n = obs.write_chrome_trace(
+                obs.tracer, args.trace,
+                label=f"repro.sim {args.scenario} seed{args.seed}")
+            print(f"wrote {args.trace} ({n} trace events)", file=sys.stderr)
+        if args.metrics:
+            n = obs.write_jsonl(obs.tracer.metrics, args.metrics)
+            print(f"wrote {args.metrics} ({n} metric rows)", file=sys.stderr)
     return 0
 
 

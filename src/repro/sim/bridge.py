@@ -31,6 +31,7 @@ import time
 from typing import Any, Dict, List, Sequence, Tuple
 
 from repro.core.server import Server
+from repro.obs import tracer
 
 
 class RecordingAggregator:
@@ -99,9 +100,10 @@ class ServerBridge:
         assert eval_mode in ("server", "never", "always"), eval_mode
         self.server = server
         self.eval_mode = eval_mode
-        # per-aggregation wall-time rows: the batched-GI hot path's cost per
-        # trigger, consumed by ``benchmarks.run --only server`` and the
-        # ``repro.sweep`` trajectories
+        # per-aggregation ``server_step`` rows (obs-metrics-v1): the
+        # batched-GI hot path's cost per trigger, consumed by
+        # ``benchmarks.run --only server``, the ``repro.sweep``
+        # trajectories, and ``repro.obs.report``
         self.rows: List[Dict[str, Any]] = []
 
     def aggregate(self, version: int, fresh_ids: Sequence[int],
@@ -109,22 +111,29 @@ class ServerBridge:
         assert version == len(self.server.history) - 1, \
             (version, len(self.server.history))
         eval_now = {"server": None, "never": False, "always": True}[self.eval_mode]
+        mark = tracer.mark()
         t0 = time.perf_counter()
         row = self.server.step(version, fresh_ids, stale_pairs,
                                eval_now=eval_now)
-        self.rows.append({"version": version, "n_fresh": len(fresh_ids),
-                          "n_stale": len(stale_pairs),
-                          # distinct base versions in the stale cohort: the
-                          # dispatch count the pre-fused grouped path would
-                          # have paid (the fused round always pays one)
-                          "n_base_rounds": len({b for _, b in stale_pairs}),
-                          "wall_s": time.perf_counter() - t0,
-                          "gi_iters": row.get("gi_iters", 0),
-                          # GI executor occupancy (None when no GI ran this
-                          # aggregation): how much of the paid lane-iter
-                          # budget advanced real clients — the quantity the
-                          # segmented executor exists to push toward 1.0
-                          "gi_occupancy": row.get("gi_occupancy")})
+        mrow = {"kind": "server_step", "version": version,
+                "n_fresh": len(fresh_ids), "n_stale": len(stale_pairs),
+                # distinct base versions in the stale cohort: the
+                # dispatch count the pre-fused grouped path would
+                # have paid (the fused round always pays one)
+                "n_base_rounds": len({b for _, b in stale_pairs}),
+                "wall_s": time.perf_counter() - t0,
+                "gi_iters": row.get("gi_iters", 0),
+                # GI executor occupancy (None when no GI ran this
+                # aggregation): how much of the paid lane-iter
+                # budget advanced real clients — the quantity the
+                # segmented executor exists to push toward 1.0
+                "gi_occupancy": row.get("gi_occupancy")}
+        if tracer.enabled:
+            spans = tracer.span_totals(mark)
+            if spans:
+                mrow["spans"] = spans
+            tracer.metric(**mrow)       # copy onto the stream, stamps ts_s
+        self.rows.append(mrow)
         return row
 
     def evaluate(self) -> float:

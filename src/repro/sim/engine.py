@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.data.staleness import StalenessSchedule, observed_schedule
+from repro.obs import tracer
 from repro.sim.devices import DeviceFleet
 from repro.sim.rand import U_FRAC, JobRandoms
 
@@ -301,7 +302,17 @@ class SimEngine:
                 stale.append((a.client, a.base_version))
         self._trace("aggregate", -1,
                     f"v{self.version} fresh{len(fresh)} stale{len(stale)}")
-        row = self.aggregator.aggregate(self.version, fresh, stale) or {}
+        with tracer.span("sim.aggregate") as _sp:
+            _sp.arg("version", self.version)
+            row = self.aggregator.aggregate(self.version, fresh, stale) or {}
+        if tracer.enabled:
+            tracer.metric(
+                "aggregation", time=float(self.clock),
+                version=int(self.version), n_fresh=len(fresh),
+                n_stale=len(stale),
+                n_base_rounds=len({b for _, b in stale}),
+                mean_tau=float(sum(taus) / len(taus)) if taus else 0.0,
+                tau_hist=np.bincount(taus).tolist() if taus else [])
         self.agg_log.append({"time": self.clock, "version": self.version,
                              "fresh": fresh, "stale": stale,
                              "taus": taus, **row})
@@ -324,28 +335,30 @@ class SimEngine:
             # start() — that would double-dispatch the whole fleet
             self.policy.on_resume(self)
         self._arm_eval()
-        while self._heap:
-            if self.counters["events"] >= self.max_events:
-                self._trace("halt", -1, "max_events")
-                break
-            t, _, kind, client, payload = self._heap[0]
-            if t > self.horizon:
-                break
-            heapq.heappop(self._heap)
-            self.clock = t
-            self.counters["events"] += 1
-            if kind == "dispatch":
-                self._handle_dispatch(client, payload.get("force", False))
-            elif kind == "upload":
-                self._handle_upload(client, payload["job"])
-            elif kind == "dropout":
-                self._handle_dropout(client, payload["job"])
-            elif kind == "rejoin":
-                self._handle_rejoin(client)
-            elif kind == "round":
-                self.policy.on_timer(self, payload)
-            elif kind == "eval":
-                self._handle_eval()
+        with tracer.span("sim.run") as _sp:
+            _sp.arg("engine", "heap")
+            while self._heap:
+                if self.counters["events"] >= self.max_events:
+                    self._trace("halt", -1, "max_events")
+                    break
+                t, _, kind, client, payload = self._heap[0]
+                if t > self.horizon:
+                    break
+                heapq.heappop(self._heap)
+                self.clock = t
+                self.counters["events"] += 1
+                if kind == "dispatch":
+                    self._handle_dispatch(client, payload.get("force", False))
+                elif kind == "upload":
+                    self._handle_upload(client, payload["job"])
+                elif kind == "dropout":
+                    self._handle_dropout(client, payload["job"])
+                elif kind == "rejoin":
+                    self._handle_rejoin(client)
+                elif kind == "round":
+                    self.policy.on_timer(self, payload)
+                elif kind == "eval":
+                    self._handle_eval()
         return self.summary()
 
     # ------------------------------------------------------------------ #

@@ -52,6 +52,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.data.staleness import StalenessSchedule, observed_schedule
+from repro.obs import tracer
 from repro.sim.devices import DeviceFleet, FleetArrays
 from repro.sim.engine import COUNTER_KEYS, EVENT_KINDS, Arrival, trace_digest
 from repro.sim.rand import U_FRAC, job_uniforms
@@ -383,14 +384,24 @@ class VecEngine:
         self._trace_one("aggregate", -1,
                         f"v{self.version} fresh{len(fresh)} "
                         f"stale{len(stale_cl)}")
-        if getattr(self.aggregator, "wants_arrays", False):
-            row = self.aggregator.aggregate(self.version, fresh,
-                                            (stale_cl, stale_base)) or {}
-        else:
-            fresh_l = fresh.tolist()
-            stale_l = list(zip(stale_cl.tolist(), stale_base.tolist()))
-            row = self.aggregator.aggregate(self.version, fresh_l,
-                                            stale_l) or {}
+        with tracer.span("sim.aggregate") as _sp:
+            _sp.arg("version", int(self.version))
+            if getattr(self.aggregator, "wants_arrays", False):
+                row = self.aggregator.aggregate(self.version, fresh,
+                                                (stale_cl, stale_base)) or {}
+            else:
+                fresh_l = fresh.tolist()
+                stale_l = list(zip(stale_cl.tolist(), stale_base.tolist()))
+                row = self.aggregator.aggregate(self.version, fresh_l,
+                                                stale_l) or {}
+        if tracer.enabled:
+            tracer.metric(
+                "aggregation", time=float(self.clock),
+                version=int(self.version), n_fresh=int(len(fresh)),
+                n_stale=int(len(stale_cl)),
+                n_base_rounds=int(len(np.unique(stale_base))),
+                mean_tau=float(taus.mean()) if len(taus) else 0.0,
+                tau_hist=np.bincount(taus).tolist() if len(taus) else [])
         if self.collect_agg_log:
             self.agg_log.append({
                 "time": self.clock, "version": self.version,
@@ -430,6 +441,9 @@ class VecEngine:
         u = job_uniforms(self.seed, job0, k)
         lat = self.arrays.job_latency(ecl, u)
         self.counters["dispatches"] += k
+        if tracer.enabled:
+            tracer.metric("wave", wave="dispatch", time=float(self.clock),
+                          n=int(k))
         self._job_client.append(ecl)
         self._job_base.append(np.full(k, self.version, _I8))
         self._job_t0.append(et)
@@ -512,6 +526,9 @@ class VecEngine:
         self._buffer_append(cl, self._job_base.a[jobs],
                             self._job_t0.a[jobs], ts, jobs)
         self.counters["arrivals"] += k
+        if tracer.enabled:
+            tracer.metric("wave", wave="upload", time=float(self.clock),
+                          n=int(k))
         # policy.on_uploads is a declared pure no-op on this path
 
     def _do_upload_batch(self, t, cl, jobs) -> None:
@@ -544,6 +561,9 @@ class VecEngine:
         batch = ArrivalBatch(lcl, bases, self._job_t0.a[lj], lt, lj)
         self._buffer_append(lcl, bases, batch.dispatch_times, lt, lj)
         self.counters["arrivals"] += len(lcl)
+        if tracer.enabled:
+            tracer.metric("wave", wave="upload", time=float(self.clock),
+                          n=int(len(lcl)))
         self.policy.on_uploads(self, batch)
 
     def _do_upload_one(self, t, cl, job) -> None:
@@ -564,6 +584,8 @@ class VecEngine:
                             np.array([arrival.arrival_time]),
                             np.array([job], _I8))
         self.counters["arrivals"] += 1
+        if tracer.enabled:
+            tracer.metric("wave", wave="upload", time=float(t), n=1)
         self._trace_one("upload", client, f"v{base}")
         self.policy.on_upload(self, arrival)
 
@@ -672,71 +694,76 @@ class VecEngine:
             self.policy.on_resume(self)
         self._arm_eval()
 
-        wheel = self._wheel
-        while True:
-            b = wheel.next_bucket()
-            if b is None:
-                break
-            frame = wheel.take(b)
-            t_arr, seq_arr, k_arr, c_arr, j_arr, f_arr = frame
-            i, n = 0, len(t_arr)
-            stop = False
-            while i < n:
-                if t_arr[i] > self.horizon:
-                    # past the horizon: park the tail back in the wheel
-                    # (a later run(until=...) resumes from it)
-                    wheel.push(*(a[i:] for a in frame))
-                    stop = True
+        with tracer.span("sim.run") as _run_sp:
+            _run_sp.arg("engine", "vec")
+            wheel = self._wheel
+            while True:
+                b = wheel.next_bucket()
+                if b is None:
                     break
-                if self._pend:
-                    # fast path: flush deferred uploads the heap would
-                    # process before this wheel event
-                    self._commit_uploads(float(t_arr[i]), int(seq_arr[i]))
-                if self.counters["events"] >= self.max_events:
-                    self._trace_one("halt", -1, "max_events")
-                    wheel.push(*(a[i:] for a in frame))
-                    stop = True
+                frame = wheel.take(b)
+                t_arr, seq_arr, k_arr, c_arr, j_arr, f_arr = frame
+                i, n = 0, len(t_arr)
+                stop = False
+                while i < n:
+                    if t_arr[i] > self.horizon:
+                        # past the horizon: park the tail back in the wheel
+                        # (a later run(until=...) resumes from it)
+                        wheel.push(*(a[i:] for a in frame))
+                        stop = True
+                        break
+                    if self._pend:
+                        # fast path: flush deferred uploads the heap would
+                        # process before this wheel event
+                        self._commit_uploads(float(t_arr[i]),
+                                             int(seq_arr[i]))
+                    if self.counters["events"] >= self.max_events:
+                        self._trace_one("halt", -1, "max_events")
+                        wheel.push(*(a[i:] for a in frame))
+                        stop = True
+                        break
+                    j = self._batch_end(k_arr, t_arr, i, n)
+                    # clamp to horizon and event budget
+                    j = i + int(np.searchsorted(t_arr[i:j], self.horizon,
+                                                side="right"))
+                    j = min(j, i + self.max_events
+                            - self.counters["events"])
+                    j = max(j, i + 1)
+                    kind = k_arr[i]
+                    self.clock = float(t_arr[j - 1])
+                    self.counters["events"] += j - i
+                    if kind == K_DISPATCH:
+                        self._do_dispatch(t_arr[i:j], c_arr[i:j], f_arr[i:j])
+                    elif kind == K_UPLOAD:
+                        if j - i == 1 and not self.policy.passive_uploads:
+                            self._do_upload_one(t_arr[i], c_arr[i], j_arr[i])
+                        else:
+                            self._do_upload_batch(t_arr[i:j], c_arr[i:j],
+                                                  j_arr[i:j])
+                    elif kind == K_DROPOUT:
+                        self._do_dropout(t_arr[i:j], c_arr[i:j], j_arr[i:j])
+                    elif kind == K_REJOIN:
+                        self._do_rejoin(t_arr[i:j], c_arr[i:j])
+                    elif kind == K_ROUND:
+                        self.policy.on_timer(self, {})
+                    elif kind == K_EVAL:
+                        self._do_eval()
+                    i = j
+                    if wheel.has_new(b):
+                        # zero-delay events landed in the bucket being
+                        # drained: merge them into the unprocessed tail (the
+                        # new chunk's seqs are all larger, so a linear merge
+                        # is exact)
+                        frame = merge_chunks(tuple(a[i:] for a in frame),
+                                             wheel.take(b))
+                        t_arr, seq_arr, k_arr, c_arr, j_arr, f_arr = frame
+                        i, n = 0, len(t_arr)
+                if stop:
                     break
-                j = self._batch_end(k_arr, t_arr, i, n)
-                # clamp to horizon and event budget
-                j = i + int(np.searchsorted(t_arr[i:j], self.horizon,
-                                            side="right"))
-                j = min(j, i + self.max_events - self.counters["events"])
-                j = max(j, i + 1)
-                kind = k_arr[i]
-                self.clock = float(t_arr[j - 1])
-                self.counters["events"] += j - i
-                if kind == K_DISPATCH:
-                    self._do_dispatch(t_arr[i:j], c_arr[i:j], f_arr[i:j])
-                elif kind == K_UPLOAD:
-                    if j - i == 1 and not self.policy.passive_uploads:
-                        self._do_upload_one(t_arr[i], c_arr[i], j_arr[i])
-                    else:
-                        self._do_upload_batch(t_arr[i:j], c_arr[i:j],
-                                              j_arr[i:j])
-                elif kind == K_DROPOUT:
-                    self._do_dropout(t_arr[i:j], c_arr[i:j], j_arr[i:j])
-                elif kind == K_REJOIN:
-                    self._do_rejoin(t_arr[i:j], c_arr[i:j])
-                elif kind == K_ROUND:
-                    self.policy.on_timer(self, {})
-                elif kind == K_EVAL:
-                    self._do_eval()
-                i = j
-                if wheel.has_new(b):
-                    # zero-delay events landed in the bucket being drained:
-                    # merge them into the unprocessed tail (the new chunk's
-                    # seqs are all larger, so a linear merge is exact)
-                    frame = merge_chunks(tuple(a[i:] for a in frame),
-                                         wheel.take(b))
-                    t_arr, seq_arr, k_arr, c_arr, j_arr, f_arr = frame
-                    i, n = 0, len(t_arr)
-            if stop:
-                break
-        if self._pend:
-            # wheel drained (or horizon hit): uploads due by the horizon
-            # still deliver, exactly as the heap drains its queue
-            self._commit_uploads(self.horizon, None)
+            if self._pend:
+                # wheel drained (or horizon hit): uploads due by the horizon
+                # still deliver, exactly as the heap drains its queue
+                self._commit_uploads(self.horizon, None)
         return self.summary()
 
     # ------------------------------------------------------------------ #

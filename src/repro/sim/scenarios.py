@@ -56,6 +56,7 @@ class SimRun:
         summary["realized_taus"] = {
             int(c): list(map(int, v))
             for c, v in sorted(self.engine.realized.items())}
+        summary["server"] = self.server.summary()
         summary.update(self.meta)
         return summary
 

@@ -15,7 +15,10 @@ mesh — the sweep-level analogue of the server's cohort axis.
 
 Outputs:
 * ``<out>/trajectory_<scenario>_seed<k>.json`` — per-seed trajectory
-  (summary + eval curve + per-aggregation server metrics + step wall times);
+  (summary + eval curve + per-aggregation ``server_step`` rows in the
+  obs-metrics-v1 schema; ``step_walls`` kept as a one-release alias);
+* ``<out>/metrics_<scenario>_seed<k>.jsonl`` — the same per-aggregation
+  rows as an ``obs-metrics-v1`` JSONL stream (``repro.obs.report`` input);
 * ``<out>/sweep.json`` — merged rows in the same ``bench-v1`` schema that
   ``benchmarks/run.py --json`` emits, so ``benchmarks/compare.py`` and the
   CI artifact tooling consume either file interchangeably.
@@ -137,18 +140,27 @@ def main(argv=None) -> int:
             summary = run.run()
             wall = time.perf_counter() - t0
             runs.append(run)
+            # per-aggregation rows in the shared obs-metrics-v1 schema
+            # (bridge rows carry kind="server_step"); "step_walls" is a
+            # one-release alias of "metrics" for saved-trajectory loaders
+            step_rows = getattr(run.engine.aggregator, "rows", [])
             traj = {
                 "scenario": scen, "seed": seed, "wall_s": wall,
                 "summary": summary,
                 "evals": [{"time": t, "version": v, "acc": a}
                           for t, v, a in run.engine.evals],
                 "server_metrics": run.server.metrics,
-                "step_walls": getattr(run.engine.aggregator, "rows", []),
+                "metrics": step_rows,
+                "step_walls": step_rows,
             }
             tpath = os.path.join(args.out,
                                  f"trajectory_{scen}_seed{seed}.json")
             with open(tpath, "w") as f:
                 json.dump(traj, f, indent=2, default=float)
+            if step_rows:
+                from repro.obs import write_jsonl
+                write_jsonl(step_rows, os.path.join(
+                    args.out, f"metrics_{scen}_seed{seed}.jsonl"))
             rows.append({
                 "name": f"sweep/{scen}_seed{seed}",
                 "us_per_call": wall * 1e6,

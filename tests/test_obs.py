@@ -1,0 +1,326 @@
+"""Tests for the unified telemetry layer (repro.obs).
+
+Pins the two contracts the subsystem ships on:
+
+* **zero-cost when disabled** — ``tracer.span`` returns one shared no-op
+  singleton and the span fast path allocates nothing, so instrumentation
+  can live on the hot paths permanently;
+* **neutrality when enabled** — tracing records but never perturbs:
+  identical trace digests (heap and vec engines) and identical eval curves
+  on a stock scenario with tracing on vs off.
+
+Plus the recording/export layer (span nesting, interning, Chrome trace
+structure, JSONL round trip incl. the legacy ``step_walls`` alias, report
+CLI) and the server's per-client GI stop-reason telemetry.
+"""
+
+import gc
+import itertools
+import json
+import sys
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import NOOP_SPAN, Tracer
+from repro.obs import report as obs_report
+from repro.sim.scenarios import engine_only
+
+
+@pytest.fixture
+def enabled_tracer():
+    """Enable the process-wide tracer for one test, always restoring the
+    disabled default (other tests pin the disabled fast path)."""
+    obs.configure(enabled=True, reset=True)
+    try:
+        yield obs.tracer
+    finally:
+        obs.configure(enabled=False, reset=True)
+
+
+# --------------------------------------------------------------------------- #
+# Disabled fast path
+# --------------------------------------------------------------------------- #
+
+
+def test_disabled_span_is_shared_noop_singleton():
+    t = obs.tracer
+    assert not t.enabled
+    sp = t.span("server.step")
+    assert sp is NOOP_SPAN
+    assert t.span("anything.else", args={"x": 1}) is NOOP_SPAN
+    obj = object()
+    assert sp.fence(obj) is obj
+    assert sp.arg("bucket", 8) is None
+    with sp:
+        pass
+    # counters/metrics record nothing while disabled
+    t.counter("c")
+    t.metric("gi_exec", batch=4)
+    assert t.counters == {} and t.metrics == [] and len(t) == 0
+
+
+def test_disabled_span_fast_path_allocates_nothing():
+    t = obs.tracer
+    assert not t.enabled
+    span = t.span            # hot sites bind the method once
+    counter = t.counter
+    fence = t.fence
+    payload = object()
+    for _ in itertools.repeat(None, 256):        # warm caches/ints
+        with span("warm"):
+            counter("n")
+            fence(payload)
+    deltas = []
+    for _ in range(3):
+        it = itertools.repeat(None, 10_000)    # allocated before measuring
+        gc.collect()
+        before = sys.getallocatedblocks()
+        for _ in it:
+            with span("hot"):
+                counter("n")
+                fence(payload)
+        deltas.append(sys.getallocatedblocks() - before)
+    assert min(deltas) <= 0, deltas
+
+
+# --------------------------------------------------------------------------- #
+# Recording: nesting, interning, fences, compile counters
+# --------------------------------------------------------------------------- #
+
+
+def test_span_nesting_interning_and_totals():
+    t = Tracer(enabled=True)
+    with t.span("outer", args={"round": 0}):
+        with t.span("inner") as sp:
+            sp.arg("bucket", 8)
+        with t.span("inner"):
+            pass
+    rows = t.spans()
+    assert [r["name"] for r in rows] == ["outer", "inner", "inner"]
+    assert rows[0]["parent"] == -1
+    assert rows[1]["parent"] == 0 and rows[2]["parent"] == 0
+    assert all(r["dur_ns"] >= 0 for r in rows)
+    assert rows[0]["args"] == {"round": 0}
+    assert rows[1]["args"] == {"bucket": 8}
+    # both "inner" rows share one interned id
+    assert t._name_id.view()[1] == t._name_id.view()[2]
+    totals = t.span_totals()
+    assert set(totals) == {"outer", "inner"}
+    assert totals["outer"] >= totals["inner"] > 0
+    # mark() scopes totals to a suffix
+    mark = t.mark()
+    with t.span("late"):
+        pass
+    assert set(t.span_totals(mark)) == {"late"}
+
+
+def test_live_span_fence_returns_value_and_blocks():
+    import jax.numpy as jnp
+    t = Tracer(enabled=True)
+    x = jnp.arange(4.0)
+    with t.span("gi.invert") as sp:
+        y = sp.fence(x * 2)
+    assert np.allclose(np.asarray(y), [0, 2, 4, 6])
+    assert t.spans()[0]["dur_ns"] >= 0
+
+
+def test_metric_rows_and_counters():
+    t = Tracer(enabled=True)
+    t.metric("cohort", version=3, n_fresh=2, n_stale=5)
+    t.counter("waves")
+    t.counter("waves", 2)
+    (row,) = t.metrics
+    assert row["kind"] == "cohort" and row["n_stale"] == 5
+    assert row["ts_s"] >= 0
+    assert t.counters["waves"] == 3
+    t.reset()
+    assert t.metrics == [] and t.counters == {} and len(t) == 0
+
+
+# --------------------------------------------------------------------------- #
+# Exporters: Chrome trace + JSONL round trip (incl. legacy aliases)
+# --------------------------------------------------------------------------- #
+
+
+def test_chrome_trace_structure(tmp_path):
+    t = Tracer(enabled=True)
+    with t.span("sim.run"):
+        with t.span("server.step", args={"version": 0}):
+            pass
+    t.metric("cohort", version=0, n_fresh=1, n_stale=0)
+    doc = obs.chrome_trace(t, label="unit")
+    assert doc["displayTimeUnit"] == "ms"
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    inst = [e for e in doc["traceEvents"] if e.get("ph") == "i"]
+    assert {e["name"] for e in xs} == {"sim.run", "server.step"}
+    assert all(e["dur"] > 0 for e in xs)
+    (ev,) = inst
+    assert ev["name"] == "cohort" and ev["args"]["n_fresh"] == 1
+    assert doc["otherData"]["n_spans"] == 2
+    path = tmp_path / "trace.json"
+    n = obs.write_chrome_trace(t, str(path), label="unit")
+    assert n == len(doc["traceEvents"])
+    assert "traceEvents" in json.load(open(path))
+
+
+def test_jsonl_roundtrip(tmp_path):
+    rows = [{"kind": "server_step", "version": 0, "wall_s": 0.5},
+            {"kind": "wave", "wave": "dispatch", "n": 12}]
+    path = tmp_path / "metrics.jsonl"
+    assert obs.write_jsonl(rows, str(path)) == 2
+    back = obs.read_rows(str(path))
+    assert back == rows
+    assert obs.rows_of_kind(back, "wave") == [rows[1]]
+
+
+def test_legacy_trajectory_aliases_still_load(tmp_path):
+    # pre-obs trajectory JSON: step_walls/server_metrics, no kind fields
+    legacy = {"scenario": "x", "step_walls": [
+        {"version": 0, "n_fresh": 2, "n_stale": 1, "wall_s": 0.1}],
+        "server_metrics": [{"round": 0, "n_fast": 2}]}
+    path = tmp_path / "trajectory_x_seed0.json"
+    path.write_text(json.dumps(legacy))
+    rows = obs.read_rows(str(path))
+    steps = obs.rows_of_kind(rows, "server_step")
+    assert len(steps) == 1 and steps[0]["version"] == 0
+
+
+def test_report_cli_renders_all_formats(tmp_path, capsys):
+    t = Tracer(enabled=True)
+    with t.span("server.step"):
+        pass
+    t.metric("server_step", version=0, n_fresh=1, n_stale=2,
+             n_base_rounds=2, wall_s=0.25, gi_iters=4, gi_occupancy=0.5)
+    t.metric("aggregation", version=0, time=1.0, n_fresh=1, n_stale=2,
+             n_base_rounds=2, mean_tau=1.5, tau_hist=[1, 1, 1])
+    trace = tmp_path / "trace.json"
+    jsonl = tmp_path / "metrics.jsonl"
+    obs.write_chrome_trace(t, str(trace))
+    obs.write_jsonl(t.metrics, str(jsonl))
+    legacy = tmp_path / "trajectory.json"
+    legacy.write_text(json.dumps({"step_walls": [
+        {"version": 0, "n_fresh": 1, "n_stale": 2, "wall_s": 0.25}]}))
+    for path in (trace, jsonl, legacy):
+        assert obs_report.main([str(path)]) == 0
+        out = capsys.readouterr().out
+        assert "round" in out and "wall_ms" in out
+        assert "250.0" in out                  # wall_s rendered in ms
+    assert obs_report.main([str(tmp_path / "missing.json")]) == 2
+
+
+# --------------------------------------------------------------------------- #
+# Neutrality: tracing on vs off changes nothing observable
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("engine", ["heap", "vec"])
+def test_tracing_neutral_engine_digest(engine):
+    base = engine_only("fedbuff_k4", seed=0, engine=engine)
+    base.run()
+    obs.configure(enabled=True, reset=True)
+    try:
+        traced = engine_only("fedbuff_k4", seed=0, engine=engine)
+        traced.run()
+        assert len(obs.tracer) > 0              # spans actually recorded
+        aggs = obs.rows_of_kind(obs.tracer.metrics, "aggregation")
+        assert len(aggs) == traced.counters["aggregations"]
+        assert all("tau_hist" in r for r in aggs)
+    finally:
+        obs.configure(enabled=False, reset=True)
+    assert traced.trace_digest() == base.trace_digest()
+    assert traced.counters == base.counters
+
+
+def test_tracing_neutral_server_trajectory_and_bridge_rows():
+    """Full stack (vec engine + real Server): tracing on vs off yields the
+    identical digest, eval curve, and final accuracy — and the traced run's
+    bridge rows carry the obs-metrics-v1 schema with span breakdowns."""
+    from repro.sim import scenarios
+
+    def run_once():
+        run = scenarios.build("fedbuff_k4", seed=0, horizon=3, gi_iters=2)
+        summary = run.run()
+        return run, summary
+
+    run_off, off = run_once()
+    obs.configure(enabled=True, reset=True)
+    try:
+        run_on, on = run_once()
+        rows = run_on.engine.aggregator.rows
+        assert rows and all(r["kind"] == "server_step" for r in rows)
+        assert any(r.get("spans") for r in rows)
+        assert any("server.step" in (r.get("spans") or {}) for r in rows)
+        stream = obs.rows_of_kind(obs.tracer.metrics, "server_step")
+        assert len(stream) == len(rows)
+        assert obs.rows_of_kind(obs.tracer.metrics, "cohort")
+        # nested sim -> step -> GI spans all present
+        names = {s["name"] for s in obs.tracer.spans()}
+        assert {"sim.run", "sim.aggregate", "server.step"} <= names
+    finally:
+        obs.configure(enabled=False, reset=True)
+    assert on["trace_digest"] == off["trace_digest"]
+    assert on["final_acc"] == off["final_acc"]
+    assert run_on.engine.evals == run_off.engine.evals
+    # the untraced run's bridge rows share the same schema, just no spans
+    off_rows = run_off.engine.aggregator.rows
+    assert off_rows and all(r["kind"] == "server_step" for r in off_rows)
+    assert not any(r.get("spans") for r in off_rows)
+    # server-side GI accounting is telemetry-independent
+    assert on["server"]["gi"] == off["server"]["gi"]
+
+
+# --------------------------------------------------------------------------- #
+# Server GI telemetry: per-client iteration counts + early-stop reasons
+# --------------------------------------------------------------------------- #
+
+
+def _gi_server(tol):
+    from repro.core.client import LocalProgram
+    from repro.core.gradient_inversion import GIConfig
+    from repro.core.server import FLConfig, Server
+    from repro.data.partition import (client_label_histograms,
+                                      dirichlet_partition, pad_client_shards)
+    from repro.data.staleness import intertwined_schedule
+    from repro.data.synthetic import make_feature_dataset
+    from repro.models.small import mlp3
+
+    x, y = make_feature_dataset(20, n_classes=3, n_features=8, seed=0)
+    tx, ty = make_feature_dataset(8, n_classes=3, n_features=8, seed=99)
+    idx = dirichlet_partition(y, 6, alpha=0.5, seed=0)
+    cx, cy, cm = pad_client_shards(x, y, idx, m=12)
+    hist = client_label_histograms(y, idx, 3)
+    sched = intertwined_schedule(hist, 1, n_slow=2, tau=2)
+    prog = LocalProgram(steps=2, lr=0.1, momentum=0.5)
+    cfg = FLConfig(strategy="ours", rounds=0,
+                   gi=GIConfig(n_rec=4, iters=5, lr=0.1, tol=tol),
+                   uniqueness_check=False, eval_every=10_000, seed=0)
+    return Server(mlp3(n_features=8, n_classes=3, hidden=16), prog, cfg,
+                  cx, cy, cm, sched, tx, ty)
+
+
+@pytest.mark.parametrize("tol,reason", [(0.0, "budget"), (1e9, "tol")])
+def test_gi_stop_reason_telemetry(tol, reason):
+    srv = _gi_server(tol)
+    slow = srv.schedule.slow_clients
+    srv.step(0, [c for c in range(6) if c not in slow][:2], [])
+    srv.step(1, [], [(c, 0) for c in slow])
+    gi_rows = [r for r in srv.gi_log]
+    assert gi_rows and all(r["stop"] == reason for r in gi_rows)
+    if reason == "budget":
+        assert all(r["iters_used"] == 5 for r in gi_rows)
+    else:
+        assert all(r["iters_used"] < 5 for r in gi_rows)
+    # cross-round accumulators + summary() surface the same accounting
+    assert srv.gi_stop_counts[reason] == len(gi_rows)
+    other = "tol" if reason == "budget" else "budget"
+    assert srv.gi_stop_counts[other] == 0
+    s = srv.summary()
+    assert s["strategy"] == "ours"
+    assert s["gi"]["stop_reasons"][reason] == len(gi_rows)
+    assert s["gi"]["clients_inverted"] == len(slow)
+    assert set(s["gi"]["per_client_iters"]) == set(int(c) for c in slow)
+    assert s["gi"]["total_iters"] == sum(r["iters_used"] for r in gi_rows)
+    assert all(v == 1 for v in s["gi"]["per_client_calls"].values())
+    assert s["gi"]["last"]["stops"] == [reason] * len(slow)
