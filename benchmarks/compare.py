@@ -14,7 +14,10 @@ Gated rows (everything else is informational):
   reduction; FAILS like ``server/*`` on ``us_per_call``;
 * ``step/*``        — the fused aggregation round (multi-version cohort
   LocalUpdate + stacked FedAvg pipeline) vs the loop path at scattered base
-  rounds, and VersionStore append/gather; FAILS on ``us_per_call``.
+  rounds, and VersionStore append/gather; FAILS on ``us_per_call``;
+* ``serve/*``       — the streaming service in steady state: sustained
+  uploads/sec (FAILS like ``sim/engine_*`` on ``events_per_sec``) and p99
+  trigger-to-aggregate latency (FAILS on ``us_per_call``).
 
 ``--max-slowdown-factor`` defaults to 1.25 (the >25% gate). Slowdowns are
 **canary-normalized**: both JSONs carry ``calibration/*`` rows (fixed
@@ -47,7 +50,8 @@ import json
 import sys
 from typing import Any, Dict, List, Optional, Tuple
 
-GATED_PREFIXES = ("sim/engine_", "sim_scale/", "server/", "gi/", "step/")
+GATED_PREFIXES = ("sim/engine_", "sim_scale/", "server/", "gi/", "step/",
+                  "serve/")
 
 # calibration canaries (benchmarks/run.py::calibrate): fixed reference
 # workloads whose baseline/fresh ratio measures machine-wide speed, which

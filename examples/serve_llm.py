@@ -2,6 +2,9 @@
 
 Exercises the production serving path — prefill into a KV cache, batched
 greedy decode via serve_step — for any of the 10 assigned architectures.
+The drive loop lives in ``repro.launch.decode`` (previously
+``repro.launch.serve``); this example is a thin front-end with
+example-friendly defaults.
 
 Run:  PYTHONPATH=src python examples/serve_llm.py --arch rwkv6-1.6b
       PYTHONPATH=src python examples/serve_llm.py --arch qwen3-1.7b --batch 4
@@ -10,63 +13,23 @@ Run:  PYTHONPATH=src python examples/serve_llm.py --arch rwkv6-1.6b
 import argparse
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ALIASES, ARCH_IDS, get_config
-from repro.launch.specs import concrete_train_batch
-from repro.models import transformer as T
-from repro.models.model import make_serve_step
+from repro.launch import decode
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b",
-                    choices=sorted(ALIASES) + ARCH_IDS)
+    ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--batch", type=int, default=3)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen-len", type=int, default=24)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=True)
-    key = jax.random.PRNGKey(0)
-    params = T.init_params(key, cfg)
-    B, S = args.batch, args.prompt_len
-    max_len = S + args.gen_len
-
-    batch = concrete_train_batch(cfg, B, S, key)
-    prompts = batch.get("tokens")
-    if prompts is None:
-        prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
-    caches = T.init_cache(cfg, B, max_len)
-    cross_kv = (T.precompute_cross_kv(params, cfg, batch["frames"])
-                if cfg.is_encdec else None)
-    step = jax.jit(make_serve_step(cfg))
-
-    t0 = time.time()
-    logits = None
-    for i in range(S):
-        logits, caches = step(params, caches, prompts[:, i:i + 1],
-                              jnp.array(i, jnp.int32), cross_kv)
-    cur = jnp.argmax(logits[:, -1], -1)[:, None]
-    generated = [cur]
-    for i in range(S, max_len - 1):
-        logits, caches = step(params, caches, cur, jnp.array(i, jnp.int32),
-                              cross_kv)
-        cur = jnp.argmax(logits[:, -1], -1)[:, None]
-        generated.append(cur)
-    out = jnp.concatenate(generated, axis=1)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} family={cfg.family} "
-          f"{B} requests x {out.shape[1]} tokens in {dt:.1f}s "
-          f"({B * out.shape[1] / dt:.1f} tok/s incl. prefill)")
-    for b in range(B):
-        print(f"  req{b}: prompt={prompts[b, :6].tolist()}... "
-              f"-> generated={out[b, :8].tolist()}...")
+    decode.main(["--arch", args.arch, "--batch", str(args.batch),
+                 "--prompt-len", str(args.prompt_len),
+                 "--gen-len", str(args.gen_len)])
 
 
 if __name__ == "__main__":

@@ -105,6 +105,182 @@ _pad_leading = tree_pad_leading
 _take_leading = tree_take_leading
 
 
+class LanePool:
+    """Resident lane pool for the segmented continuous-batching executor.
+
+    Owns the executor's mutable lane machinery — the pending-client queue,
+    the per-lane client map, the carried survivor state and the host-side
+    iteration counters — as *instance* state instead of per-call locals, so
+    a long-running service (``repro.service``) pays the pool's construction
+    exactly once per :class:`GradientInverter` and every aggregation trigger
+    reuses the same warm object. ``run_cohort`` drains one stale cohort to
+    completion through the K-iteration segments; between cohorts the pool is
+    idle (no resident lanes, empty queue) but its identity, compiled-segment
+    cache (held by the inverter) and lifetime occupancy accounting persist.
+
+    Lifetime counters (``stats``): ``cohorts``, ``segments``,
+    ``useful_lane_iters``, ``lane_iter_cost``, ``peak_lanes``. They
+    accumulate across every cohort the pool ever drains — the service layer
+    surfaces them as ``obs`` counters.
+    """
+
+    def __init__(self, inverter: "GradientInverter"):
+        self.inv = inverter
+        # persistent pending-client queue: client rows waiting for a lane
+        self.pending: deque = deque()
+        self.lane_client: List[int] = []   # client row per resident lane
+        self.surv_state: Optional[Dict[str, Any]] = None
+        self.i_host = np.zeros((0,), np.int32)
+        self.stats: Dict[str, int] = {
+            "cohorts": 0, "segments": 0, "useful_lane_iters": 0,
+            "lane_iter_cost": 0, "peak_lanes": 0}
+
+    def idle(self) -> bool:
+        return not self.lane_client and not self.pending
+
+    def run_cohort(self, w_global_stale, target, masks, drec0,
+                   n_host: np.ndarray, max_iters: int, seg_iters: int,
+                   max_lanes: int
+                   ) -> Tuple[Tuple[jax.Array, jax.Array], Dict[str, Any]]:
+        """Drain a stale-client cohort through K-iteration jitted segments.
+
+        Between segments the host compacts finished lanes out (their D_rec /
+        loss rows land in per-client result buffers), shrinks the resident
+        bucket down the pow2 ladder, and refills free lanes from the pending
+        queue — so a skewed cohort runs at near-full occupancy instead of
+        every lane waiting for the slowest. Per-lane math is carried state
+        through ``GradientInverter._segment_core``, so the recovered D_rec
+        is bit-for-bit the one-shot engine's.
+        """
+        if not self.idle():
+            raise RuntimeError("LanePool.run_cohort on a non-idle pool "
+                               f"({len(self.lane_client)} resident lanes, "
+                               f"{len(self.pending)} pending)")
+        inv = self.inv
+        B = jax.tree_util.tree_leaves(drec0)[0].shape[0]
+        ns = inv.n_shards
+        has_mask = masks is not None
+        seg_fn = inv._get_segment_fn(seg_iters, has_mask)
+
+        x0, y0 = drec0
+        out_x = np.zeros(x0.shape, x0.dtype)
+        out_y = np.zeros(y0.shape, y0.dtype)
+        losses_out = np.full((B, max_iters), np.nan, np.float32)
+        final_out = np.full((B,), np.inf, np.float32)
+        used_out = np.zeros((B,), np.int32)
+
+        self.pending.extend(range(B))
+        queue = self.pending
+        useful = 0
+        cost = 0
+        segments = 0
+        buckets: List[int] = []
+
+        packed = None        # (state, n_res, C) ready to run without repack
+        while self.lane_client or queue:
+            if packed is not None:
+                state, n_res, C = packed
+                packed = None
+            else:
+                n_res, C = segment_bucket(
+                    len(self.lane_client) + len(queue), ns, max_lanes)
+                refill = [queue.popleft()
+                          for _ in range(n_res - len(self.lane_client))]
+                parts = [self.surv_state]
+                if refill:
+                    parts.append(inv._fresh_lane_state(
+                        np.asarray(refill, np.int64), w_global_stale, target,
+                        masks, drec0, n_host, max_iters))
+                    self.lane_client = self.lane_client + refill
+                    self.i_host = np.concatenate(
+                        [self.i_host, np.zeros(len(refill), np.int32)])
+                state = inv._cat_lane_states(parts)
+                pad = C - n_res
+                if pad:
+                    # padded lanes replicate row 0 with a zero budget —
+                    # done immediately, never read back (the one-shot
+                    # bucket trick)
+                    state = {
+                        k: (None if v is None else (
+                            jnp.concatenate(
+                                [v, jnp.zeros((pad,), jnp.int32)])
+                            if k == "n" else tree_pad_leading(v, pad)))
+                        for k, v in state.items()}
+            args = (state["w"], state["t"]) \
+                + ((state["m"],) if has_mask else ()) \
+                + (state["n"], state["i"], state["drec"], state["opt"],
+                   state["losses"], state["last"])
+            with tracer.span("gi.segment") as _sp:
+                _sp.arg("bucket", int(C))
+                _sp.arg("resident", int(n_res))
+                i_new, drec_s, opt_s, losses_s, last_s, done = seg_fn(*args)
+                _sp.fence(i_new)
+            segments += 1
+            buckets.append(C)
+
+            i_h = np.asarray(i_new[:n_res])          # the one host sync
+            done_h = np.asarray(done[:n_res])
+            steps = i_h - self.i_host
+            useful += int(steps.sum())
+            cost += C * int(steps.max())
+
+            new_state = {"i": i_new, "drec": drec_s, "opt": opt_s,
+                         "losses": losses_s, "last": last_s,
+                         "w": state["w"], "t": state["t"],
+                         "m": state["m"], "n": state["n"]}
+            fin = np.flatnonzero(done_h)
+            if fin.size == 0:
+                # no lane finished => no compaction, no freed lane to
+                # refill, same bucket: hand the carried state straight to
+                # the next segment (zero gathers)
+                self.i_host = i_h
+                packed = (new_state, n_res, C)
+                continue
+            idx = jnp.asarray(fin)
+            fx = np.asarray(drec_s[0][idx])
+            fy = np.asarray(drec_s[1][idx])
+            fl = np.asarray(losses_s[idx])
+            flast = np.asarray(last_s[idx])
+            for j, l in enumerate(fin):
+                ci = self.lane_client[l]
+                out_x[ci] = fx[j]
+                out_y[ci] = fy[j]
+                losses_out[ci] = fl[j]
+                final_out[ci] = flast[j]
+                used_out[ci] = i_h[l]
+            surv = np.flatnonzero(~done_h)
+            self.lane_client = [self.lane_client[l] for l in surv]
+            self.i_host = i_h[surv]
+            self.surv_state = (inv._take_lane_state(new_state, surv)
+                               if len(self.lane_client) else None)
+
+        self.surv_state = None
+        self.i_host = np.zeros((0,), np.int32)
+        self.stats["cohorts"] += 1
+        self.stats["segments"] += segments
+        self.stats["useful_lane_iters"] += useful
+        self.stats["lane_iter_cost"] += cost
+        if buckets:
+            self.stats["peak_lanes"] = max(self.stats["peak_lanes"],
+                                           max(buckets))
+
+        occupancy = float(useful / cost) if cost else 1.0
+        drec = (jnp.asarray(out_x), jnp.asarray(out_y))
+        info = {"losses": jnp.asarray(losses_out),
+                "final_loss": jnp.asarray(final_out),
+                "iters_used": jnp.asarray(used_out),
+                "batch": B, "padded_to": buckets[0] if buckets else 0,
+                "n_shards": ns, "engine": "segmented",
+                "segment_iters": seg_iters, "segments": segments,
+                "buckets": buckets, "max_lanes": int(max_lanes),
+                "useful_lane_iters": int(useful),
+                "wasted_lane_iters": int(cost - useful),
+                "lane_iter_cost": int(cost),
+                "budgets": np.asarray(n_host),
+                "occupancy": occupancy}
+        return drec, info
+
+
 class GradientInverter:
     """Builds and runs the jitted GI optimization for a given small model."""
 
@@ -140,6 +316,10 @@ class GradientInverter:
         # (seg_iters, has_mask); XLA re-specializes it per (bucket, losses
         # buffer) shape, i.e. one compile per pow2 bucket x K
         self._segment_cache: Dict[Tuple[int, bool], Callable] = {}
+        # the resident lane pool — built once, reused by every segmented
+        # cohort this inverter ever drains (repro.service relies on this
+        # object surviving across aggregation triggers)
+        self.pool = LanePool(self)
 
     def _get_invert_many(self, max_iters: int) -> Callable:
         fn = self._invert_many_cache.get(max_iters)
@@ -382,130 +562,14 @@ class GradientInverter:
                           max_lanes: int
                           ) -> Tuple[Tuple[jax.Array, jax.Array],
                                      Dict[str, Any]]:
-        """Drain a stale-client queue through K-iteration jitted segments.
+        """Drain a stale-client queue through the resident :class:`LanePool`.
 
-        Between segments the host compacts finished lanes out (their D_rec /
-        loss rows land in per-client result buffers), shrinks the resident
-        bucket down the pow2 ladder, and refills free lanes from the pending
-        queue — so a skewed cohort runs at near-full occupancy instead of
-        every lane waiting for the slowest. Per-lane math is carried state
-        through ``_segment_core``, so the recovered D_rec is bit-for-bit the
-        one-shot engine's.
+        The pool object (pending queue, lane machinery, lifetime occupancy
+        counters) is built once in ``__init__`` and reused for every cohort —
+        see :class:`LanePool` for the drain loop itself.
         """
-        B = jax.tree_util.tree_leaves(drec0)[0].shape[0]
-        ns = self.n_shards
-        has_mask = masks is not None
-        seg_fn = self._get_segment_fn(seg_iters, has_mask)
-
-        x0, y0 = drec0
-        out_x = np.zeros(x0.shape, x0.dtype)
-        out_y = np.zeros(y0.shape, y0.dtype)
-        losses_out = np.full((B, max_iters), np.nan, np.float32)
-        final_out = np.full((B,), np.inf, np.float32)
-        used_out = np.zeros((B,), np.int32)
-
-        queue = deque(range(B))
-        lane_client: List[int] = []      # client row per resident lane
-        surv_state: Optional[Dict[str, Any]] = None  # dim == len(lane_client)
-        i_host = np.zeros((0,), np.int32)
-        useful = 0
-        cost = 0
-        segments = 0
-        buckets: List[int] = []
-
-        packed = None        # (state, n_res, C) ready to run without repack
-        while lane_client or queue:
-            if packed is not None:
-                state, n_res, C = packed
-                packed = None
-            else:
-                n_res, C = segment_bucket(len(lane_client) + len(queue), ns,
-                                          max_lanes)
-                refill = [queue.popleft()
-                          for _ in range(n_res - len(lane_client))]
-                parts = [surv_state]
-                if refill:
-                    parts.append(self._fresh_lane_state(
-                        np.asarray(refill, np.int64), w_global_stale, target,
-                        masks, drec0, n_host, max_iters))
-                    lane_client = lane_client + refill
-                    i_host = np.concatenate(
-                        [i_host, np.zeros(len(refill), np.int32)])
-                state = self._cat_lane_states(parts)
-                pad = C - n_res
-                if pad:
-                    # padded lanes replicate row 0 with a zero budget —
-                    # done immediately, never read back (the one-shot
-                    # bucket trick)
-                    state = {
-                        k: (None if v is None else (
-                            jnp.concatenate(
-                                [v, jnp.zeros((pad,), jnp.int32)])
-                            if k == "n" else tree_pad_leading(v, pad)))
-                        for k, v in state.items()}
-            args = (state["w"], state["t"]) \
-                + ((state["m"],) if has_mask else ()) \
-                + (state["n"], state["i"], state["drec"], state["opt"],
-                   state["losses"], state["last"])
-            with tracer.span("gi.segment") as _sp:
-                _sp.arg("bucket", int(C))
-                _sp.arg("resident", int(n_res))
-                i_new, drec_s, opt_s, losses_s, last_s, done = seg_fn(*args)
-                _sp.fence(i_new)
-            segments += 1
-            buckets.append(C)
-
-            i_h = np.asarray(i_new[:n_res])          # the one host sync
-            done_h = np.asarray(done[:n_res])
-            steps = i_h - i_host
-            useful += int(steps.sum())
-            cost += C * int(steps.max())
-
-            new_state = {"i": i_new, "drec": drec_s, "opt": opt_s,
-                         "losses": losses_s, "last": last_s,
-                         "w": state["w"], "t": state["t"],
-                         "m": state["m"], "n": state["n"]}
-            fin = np.flatnonzero(done_h)
-            if fin.size == 0:
-                # no lane finished => no compaction, no freed lane to
-                # refill, same bucket: hand the carried state straight to
-                # the next segment (zero gathers)
-                i_host = i_h
-                packed = (new_state, n_res, C)
-                continue
-            idx = jnp.asarray(fin)
-            fx = np.asarray(drec_s[0][idx])
-            fy = np.asarray(drec_s[1][idx])
-            fl = np.asarray(losses_s[idx])
-            flast = np.asarray(last_s[idx])
-            for j, l in enumerate(fin):
-                ci = lane_client[l]
-                out_x[ci] = fx[j]
-                out_y[ci] = fy[j]
-                losses_out[ci] = fl[j]
-                final_out[ci] = flast[j]
-                used_out[ci] = i_h[l]
-            surv = np.flatnonzero(~done_h)
-            lane_client = [lane_client[l] for l in surv]
-            i_host = i_h[surv]
-            surv_state = (self._take_lane_state(new_state, surv)
-                          if len(lane_client) else None)
-
-        occupancy = float(useful / cost) if cost else 1.0
-        drec = (jnp.asarray(out_x), jnp.asarray(out_y))
-        info = {"losses": jnp.asarray(losses_out),
-                "final_loss": jnp.asarray(final_out),
-                "iters_used": jnp.asarray(used_out),
-                "batch": B, "padded_to": buckets[0] if buckets else 0,
-                "n_shards": ns, "engine": "segmented",
-                "segment_iters": seg_iters, "segments": segments,
-                "buckets": buckets, "max_lanes": int(max_lanes),
-                "useful_lane_iters": int(useful),
-                "wasted_lane_iters": int(cost - useful),
-                "lane_iter_cost": int(cost),
-                "budgets": np.asarray(n_host),
-                "occupancy": occupancy}
-        return drec, info
+        return self.pool.run_cohort(w_global_stale, target, masks, drec0,
+                                    n_host, max_iters, seg_iters, max_lanes)
 
     def _blend_drec0(self, keys: jax.Array,
                      inits: Optional[Tuple[jax.Array, jax.Array]],

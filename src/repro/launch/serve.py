@@ -1,77 +1,24 @@
-"""Serving launcher: prefill a batch of requests then decode tokens.
+"""Deprecated alias for :mod:`repro.launch.decode` (one-release shim).
 
-Exercises the same prefill / serve_step the decode dry-runs lower, at a
-CPU-feasible reduced size (or --full on a real slice).
+``repro.launch.serve`` used to be the LLM prefill+decode driver; that
+collided with the natural name for the streaming FL aggregation service
+(``repro.service``), so the launcher now lives at ``repro.launch.decode``.
+This shim keeps ``python -m repro.launch.serve`` and imports working for
+one release, with a DeprecationWarning.
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.launch.decode import main
 
-from repro.configs import ALIASES, ARCH_IDS, get_config
-from repro.launch.specs import concrete_train_batch
-from repro.models import transformer as T
-from repro.models.model import make_serve_step
+warnings.warn(
+    "repro.launch.serve is deprecated; use repro.launch.decode "
+    "(the FL streaming service lives at repro.service)",
+    DeprecationWarning, stacklevel=2)
 
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b",
-                    choices=sorted(ALIASES) + ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, reduced=not args.full)
-    key = jax.random.PRNGKey(args.seed)
-    params = T.init_params(key, cfg)
-    B, S = args.batch, args.prompt_len
-    max_len = S + args.gen_len
-
-    batch = concrete_train_batch(cfg, B, S, key)
-    caches = T.init_cache(cfg, B, max_len)
-    cross_kv = None
-    if cfg.is_encdec:
-        cross_kv = T.precompute_cross_kv(params, cfg, batch["frames"])
-
-    serve_step = jax.jit(make_serve_step(cfg))
-
-    # prefill by stepping the prompt through the cache (teacher forcing)
-    tokens = batch.get("tokens")
-    if tokens is None:  # vlm stub path: use random token ids for the driver
-        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
-    t0 = time.time()
-    logits = None
-    for i in range(S):
-        logits, caches = serve_step(params, caches, tokens[:, i:i + 1],
-                                    jnp.array(i, jnp.int32), cross_kv)
-    prefill_s = time.time() - t0
-
-    # greedy decode
-    out_tokens = []
-    cur = jnp.argmax(logits[:, -1], -1)[:, None]
-    t0 = time.time()
-    for i in range(S, max_len):
-        out_tokens.append(cur)
-        logits, caches = serve_step(params, caches, cur,
-                                    jnp.array(i, jnp.int32), cross_kv)
-        cur = jnp.argmax(logits[:, -1], -1)[:, None]
-    decode_s = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    assert gen.shape == (B, args.gen_len)
-    assert bool(jnp.all(gen >= 0)) and bool(jnp.all(gen < cfg.vocab_size))
-    print(f"arch={cfg.name} prefill {S} steps in {prefill_s:.2f}s; "
-          f"decoded {args.gen_len} tokens in {decode_s:.2f}s "
-          f"({args.gen_len * B / max(decode_s, 1e-9):.1f} tok/s)")
-    print("sample token ids:", gen[0, :8].tolist())
-
+__all__ = ["main"]
 
 if __name__ == "__main__":
     main()

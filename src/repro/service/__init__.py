@@ -1,0 +1,21 @@
+"""Long-running streaming aggregation service (``python -m repro.service``).
+
+The drive-a-loop harness (``repro.sim``) builds a world and runs it to a
+horizon; this package is the production-shaped complement — a service that
+never stops: a persistent ``Server`` (global model, ``VersionStore``,
+``WarmStartCache``) plus the GI executor's resident ``LanePool`` behind an
+upload-stream frontend with admission control, backpressure and timely
+update dissemination. See docs/streaming_service.md.
+"""
+
+from repro.service.admission import AdmissionQueue, StreamArrival
+from repro.service.runtime import (ServiceConfig, StreamingService,
+                                   build_service)
+from repro.service.stream import (UploadJob, UploadLog, log_from_scenario,
+                                  read_upload_log, synthetic_log)
+
+__all__ = [
+    "AdmissionQueue", "StreamArrival", "ServiceConfig", "StreamingService",
+    "build_service", "UploadJob", "UploadLog", "log_from_scenario",
+    "read_upload_log", "synthetic_log",
+]

@@ -1,0 +1,152 @@
+"""CLI for the streaming aggregation service.
+
+    PYTHONPATH=src python -m repro.service --horizon 6
+    PYTHONPATH=src python -m repro.service --trigger async --admission coalesce
+    PYTHONPATH=src python -m repro.service --scenario-log fedbuff_k4 \
+        --log-out /tmp/uploads.jsonl --trace /tmp/service.json
+    PYTHONPATH=src python -m repro.service --log-in /tmp/uploads.jsonl \
+        --min-wall 30
+
+Prints one JSON summary: sustained uploads/sec, p50/p99
+trigger-to-aggregate wall latency, queue depth / admission counters,
+realized staleness and the event-stream digest (the replay fingerprint:
+same log + config => same digest). ``--min-wall`` keeps replaying the log
+back to back until that many wall seconds have elapsed — the sustained
+mode the CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.service.admission import POLICIES
+from repro.service.runtime import (TRIGGERS, ServiceConfig, StreamingService,
+                                   build_service)
+from repro.service.stream import (log_from_scenario, read_upload_log,
+                                  synthetic_log)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.service")
+    # upload stream: a file, a recorded scenario, or synthetic chains
+    ap.add_argument("--log-in", default=None, metavar="PATH",
+                    help="replay an upload-log-v1 JSONL file")
+    ap.add_argument("--scenario-log", default=None, metavar="NAME",
+                    help="record NAME's arrival process (repro.sim "
+                         "scenario) as the upload stream")
+    ap.add_argument("--log-out", default=None, metavar="PATH",
+                    help="also write the upload log used (JSONL)")
+    ap.add_argument("--horizon", type=float, default=8.0,
+                    help="synthetic/scenario log length in virtual seconds")
+    ap.add_argument("--n-clients", type=int, default=10)
+    ap.add_argument("--n-slow", type=int, default=3,
+                    help="clients on the slow latency tier (synthetic log)")
+    ap.add_argument("--seed", type=int, default=0)
+    # FL server
+    ap.add_argument("--strategy", default="ours")
+    ap.add_argument("--gi-iters", type=int, default=6)
+    ap.add_argument("--segment-iters", type=int, default=3,
+                    help="segmented GI executor segment length (0 = "
+                         "one-shot engine, no LanePool)")
+    ap.add_argument("--max-lanes", type=int, default=8)
+    ap.add_argument("--loop-oracle", action="store_true",
+                    help="FLConfig(fused_step=False): the per-client loop "
+                         "path (bit-for-bit oracle for a replayed log)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="shard the server hot path over the first N devices")
+    # service
+    ap.add_argument("--trigger", choices=TRIGGERS, default="fedbuff")
+    ap.add_argument("--k", type=int, default=4,
+                    help="FedBuff trigger threshold (distinct clients)")
+    ap.add_argument("--round-len", type=float, default=1.0,
+                    help="deadline trigger period (virtual seconds)")
+    ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--admission", choices=POLICIES, default="reject")
+    ap.add_argument("--max-cohort", type=int, default=8,
+                    help="uploads drained per trigger (0 = whole queue)")
+    ap.add_argument("--disseminate", action="store_true",
+                    help="timely update dissemination (arxiv 2507.06031)")
+    ap.add_argument("--min-wall", type=float, default=None, metavar="SECONDS",
+                    help="keep replaying the log until this much wall time "
+                         "has elapsed (sustained mode)")
+    ap.add_argument("--flush", action="store_true",
+                    help="force-aggregate the queue remainder at the end")
+    ap.add_argument("--eval-final", action="store_true",
+                    help="evaluate the final global model (adds final_acc)")
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable tracing; write a Chrome trace-event JSON "
+                         "(open in https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable tracing; write the obs-metrics-v1 JSONL "
+                         "stream (input to python -m repro.obs.report)")
+    args = ap.parse_args(argv)
+
+    tracing = args.trace is not None or args.metrics is not None
+    if tracing:
+        from repro import obs
+        obs.configure(enabled=True, reset=True)
+
+    if args.log_in:
+        log = read_upload_log(args.log_in)
+    elif args.scenario_log:
+        log = log_from_scenario(args.scenario_log, seed=args.seed,
+                                horizon=args.horizon)
+    else:
+        log = synthetic_log(n_clients=args.n_clients, horizon=args.horizon,
+                            seed=args.seed,
+                            slow_ids=range(args.n_slow))
+    if args.log_out:
+        log.write_jsonl(args.log_out)
+        print(f"wrote {args.log_out} ({len(log)} jobs, "
+              f"digest {log.digest()})", file=sys.stderr)
+
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_server_mesh
+        mesh = make_server_mesh(args.mesh)
+    cfg = ServiceConfig(trigger=args.trigger, k=args.k,
+                        round_len=args.round_len,
+                        queue_capacity=args.queue_capacity,
+                        admission=args.admission,
+                        max_cohort=args.max_cohort,
+                        disseminate=args.disseminate)
+    svc = build_service(seed=args.seed, strategy=args.strategy,
+                        n_clients=log.n_clients, gi_iters=args.gi_iters,
+                        segment_iters=args.segment_iters,
+                        max_lanes=args.max_lanes,
+                        fused_step=not args.loop_oracle, mesh=mesh, cfg=cfg)
+    if args.min_wall is not None:
+        summary = svc.run_for(args.min_wall, log)
+    else:
+        summary = svc.run_log(log)
+    if args.flush:
+        svc.flush()
+        summary = svc.summary()
+    summary["log_digest"] = log.digest()
+    summary["log_jobs"] = len(log)
+    summary["pool_stats"] = dict(svc.server.inverter.pool.stats)
+    if args.eval_final:
+        summary["final_acc"] = float(svc.server.evaluate()[0])
+    text = json.dumps(summary, indent=2, default=float)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if tracing:
+        from repro import obs
+        if args.trace:
+            n = obs.write_chrome_trace(
+                obs.tracer, args.trace,
+                label=f"repro.service {args.trigger} seed{args.seed}")
+            print(f"wrote {args.trace} ({n} trace events)", file=sys.stderr)
+        if args.metrics:
+            n = obs.write_jsonl(obs.tracer.metrics, args.metrics)
+            print(f"wrote {args.metrics} ({n} metric rows)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

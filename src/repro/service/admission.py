@@ -1,0 +1,101 @@
+"""Admission control for the stale-upload queue (backpressure frontend).
+
+When stale arrivals outpace GI throughput the service cannot buffer them
+unboundedly — recovered-dataset inversion is the expensive stage, so the
+queue between the upload stream and the aggregation trigger is *bounded*
+(``capacity``) with a configurable overflow policy:
+
+* ``reject``      — turn the new arrival away (client retries later);
+* ``drop_oldest`` — evict the oldest queued upload to make room (freshest
+  information wins);
+* ``coalesce``    — per-client dedup at admission: a new upload from a
+  client already queued *replaces* that entry in place (the freshest base
+  version wins, queue depth unchanged — the admission-time version of the
+  engine's per-cohort dedup); with no duplicate to replace, a full queue
+  rejects.
+
+Counter contract (asserted by the soak tests): every offer is counted
+exactly once — ``offered == admitted + coalesced + rejected`` — and queued
+entries are conserved — ``admitted == popped + dropped_oldest + depth``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List
+
+POLICIES = ("reject", "drop_oldest", "coalesce")
+
+
+@dataclasses.dataclass
+class StreamArrival:
+    """One delivered upload as the service sees it: ``base_version`` is the
+    global version the job trained from (assigned at dispatch, possibly
+    refreshed by timely dissemination), ``arrival_t`` the virtual time it
+    reached the server."""
+    client: int
+    base_version: int
+    dispatch_t: float
+    arrival_t: float
+    job_id: int
+
+
+class AdmissionQueue:
+    """Bounded FIFO of :class:`StreamArrival` with an overflow policy."""
+
+    def __init__(self, capacity: int, policy: str = "reject"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"have {POLICIES}")
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.policy = policy
+        self._q: Deque[StreamArrival] = deque()
+        self.counters: Dict[str, int] = {
+            "offered": 0, "admitted": 0, "coalesced": 0, "rejected": 0,
+            "dropped_oldest": 0, "popped": 0}
+        self.max_depth = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def distinct(self) -> int:
+        """Distinct clients queued (the FedBuff trigger counts these, same
+        as ``SimEngine.buffer_size(distinct=True)``)."""
+        return len({a.client for a in self._q})
+
+    def offer(self, arrival: StreamArrival) -> str:
+        """Admit / coalesce / reject one arrival; returns what happened
+        (``"admitted" | "coalesced" | "rejected"``)."""
+        c = self.counters
+        c["offered"] += 1
+        if self.policy == "coalesce":
+            for i, q in enumerate(self._q):
+                if q.client == arrival.client:
+                    # in-place replace keeps the old queue position: the
+                    # client does not jump the line by re-uploading
+                    self._q[i] = arrival
+                    c["coalesced"] += 1
+                    return "coalesced"
+        if len(self._q) >= self.capacity:
+            if self.policy == "drop_oldest":
+                self._q.popleft()
+                c["dropped_oldest"] += 1
+            else:
+                c["rejected"] += 1
+                return "rejected"
+        self._q.append(arrival)
+        c["admitted"] += 1
+        self.max_depth = max(self.max_depth, len(self._q))
+        return "admitted"
+
+    def pop_cohort(self, limit: int = 0) -> List[StreamArrival]:
+        """Oldest-first drain of up to ``limit`` entries (0 = everything);
+        what stays queued waits for the next trigger — that remainder is
+        the backpressure signal."""
+        n = len(self._q) if limit <= 0 else min(limit, len(self._q))
+        out = [self._q.popleft() for _ in range(n)]
+        self.counters["popped"] += n
+        return out

@@ -1,0 +1,316 @@
+"""The long-running streaming aggregation service.
+
+:class:`StreamingService` wraps a ``core.server.Server`` behind an
+upload-stream frontend: a virtual-time event loop consumes an
+``UploadLog`` (dispatch → in-flight → arrival), admission control bounds
+the stale-upload queue (``admission.AdmissionQueue``), and a trigger rule
+(pure-async / FedBuff-K / deadline — the service-side mirrors of
+``sim.policies``) decides when the queued cohort flushes through
+``Server.step``. Everything warm persists across triggers: the ``Server``
+(global model, ``VersionStore``, ``WarmStartCache``) and the GI
+executor's resident :class:`~repro.core.gradient_inversion.LanePool` —
+the service never reconstructs them, which is the whole point of running
+as a service instead of drive-a-loop.
+
+Base-version semantics: a job's base version is the service's global
+version at the moment its *dispatch* event is processed. **Timely
+dissemination** (``ServiceConfig.disseminate``, after arxiv 2507.06031)
+refreshes that choice while the job is still in flight: on each model
+advance the service pushes the fresh global to in-flight jobs whose
+progress is below ``disseminate_max_progress`` — the job's eventual
+upload is then computed from the fresher base (the update-dissemination
+rule: the client merges the pushed model into its in-progress training
+instead of restarting), so realized staleness drops without delaying the
+arrival.
+
+Determinism: for a fixed (log, config) the event order, every admission
+decision and every cohort are fully determined — ``digest()`` fingerprints
+the event stream exactly like ``sim.engine.trace_digest`` and replaying
+the same log through a fused-step server and through the loop-mode oracle
+(``FLConfig(fused_step=False)``) yields bit-for-bit identical global
+trajectories (pinned by tests/test_service.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.obs import tracer
+from repro.service.admission import AdmissionQueue, StreamArrival
+from repro.service.stream import UploadLog
+from repro.sim.engine import trace_digest
+
+TRIGGERS = ("async", "fedbuff", "deadline")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    trigger: str = "fedbuff"        # async | fedbuff | deadline
+    k: int = 4                      # FedBuff: aggregate at K distinct clients
+    round_len: float = 1.0          # deadline: virtual seconds between ticks
+    queue_capacity: int = 64        # admission: bounded stale-upload queue
+    admission: str = "reject"       # reject | drop_oldest | coalesce
+    # cap on uploads drained per trigger (0 = whole queue) — the GI lane
+    # budget: arrivals beyond it stay queued, which is where backpressure
+    # becomes visible
+    max_cohort: int = 0
+    # timely update dissemination (arxiv 2507.06031): push the fresh global
+    # to in-flight jobs on each model advance
+    disseminate: bool = False
+    # only jobs less than this far through their training get the push —
+    # a nearly-finished job keeps its base (the merge would cost more than
+    # the staleness it saves)
+    disseminate_max_progress: float = 0.5
+
+
+@dataclasses.dataclass
+class _InFlight:
+    client: int
+    base_version: int
+    dispatch_t: float
+    duration: float
+    job_id: int
+
+
+class StreamingService:
+    """Event-loop frontend over a persistent ``Server``. Build it once,
+    feed it logs forever — versions, warm state and counters carry over
+    every ``run_log`` call."""
+
+    def __init__(self, server, cfg: Optional[ServiceConfig] = None):
+        cfg = cfg or ServiceConfig()
+        if cfg.trigger not in TRIGGERS:
+            raise ValueError(f"unknown trigger {cfg.trigger!r}; "
+                             f"have {TRIGGERS}")
+        self.server = server
+        self.cfg = cfg
+        self.queue = AdmissionQueue(cfg.queue_capacity, cfg.admission)
+        # Server.__init__ seeded history with version 0; step(t=version)
+        # asserts this alignment the same way ServerBridge does
+        self.version = len(server.history) - 1
+        self.vclock = 0.0
+        self._seq = 0
+        self._inflight: Dict[int, _InFlight] = {}
+        self.counters: Dict[str, int] = {
+            "dispatches": 0, "arrivals": 0, "aggregations": 0,
+            "empty_triggers": 0, "superseded": 0, "disseminated": 0}
+        # event stream for the determinism digest (same line format as the
+        # sim engines' trace)
+        self.events: List[Tuple[float, str, int, str]] = []
+        # per-trigger wall seconds (trigger decision -> Server.step done)
+        # and per-upload virtual queue waits / realized staleness
+        self.trigger_walls: List[float] = []
+        self.queue_waits: List[float] = []
+        self.realized_taus: List[int] = []
+        self._wall_spent = 0.0
+
+    # ------------------------------------------------------------------ #
+    def _trace(self, t: float, kind: str, client: int, info: str) -> None:
+        self.events.append((t, kind, client, info))
+
+    def digest(self) -> str:
+        """Fingerprint of the service's event stream — identical digests
+        certify identical admission decisions and cohorts."""
+        return trace_digest(self.events)
+
+    # ------------------------------------------------------------------ #
+    def run_log(self, log: UploadLog) -> Dict[str, Any]:
+        """Replay one upload log to completion (virtual time continues from
+        wherever the service left off; versions and warm state persist).
+        Returns ``summary()``."""
+        t_start = time.perf_counter()
+        offset = self.vclock
+        heap: List[Tuple[float, int, str, Any]] = []
+        for job in log:
+            self._push(heap, offset + job.dispatch_t, "dispatch", job)
+        if self.cfg.trigger == "deadline" and len(log):
+            end = offset + log.horizon
+            t = offset + self.cfg.round_len
+            while t <= end:
+                self._push(heap, t, "tick", None)
+                t += self.cfg.round_len
+        with tracer.span("service.run") as sp:
+            sp.arg("jobs", len(log))
+            while heap:
+                t, _, kind, payload = heapq.heappop(heap)
+                self.vclock = t
+                if kind == "dispatch":
+                    self._on_dispatch(heap, t, payload)
+                elif kind == "arrival":
+                    self._on_arrival(t, payload)
+                else:
+                    self._aggregate(t, "deadline")
+        self._wall_spent += time.perf_counter() - t_start
+        return self.summary()
+
+    def run_for(self, wall_seconds: float, log: UploadLog) -> Dict[str, Any]:
+        """Sustained mode: replay ``log`` back to back until ``wall_seconds``
+        of wall time have elapsed (the never-stops flavor the CI smoke
+        runs). Each pass continues virtual time and the version counter."""
+        deadline = time.monotonic() + float(wall_seconds)
+        passes = 0
+        while True:
+            summary = self.run_log(log)
+            passes += 1
+            if time.monotonic() >= deadline:
+                break
+        summary["log_passes"] = passes
+        return summary
+
+    # ------------------------------------------------------------------ #
+    def _push(self, heap, t: float, kind: str, payload) -> None:
+        heapq.heappush(heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _on_dispatch(self, heap, t: float, job) -> None:
+        fl = _InFlight(job.client, self.version, t, job.duration, job.job_id)
+        self._inflight[job.job_id] = fl
+        self.counters["dispatches"] += 1
+        self._trace(t, "dispatch", job.client, f"v{self.version}")
+        self._push(heap, t + job.duration, "arrival", fl)
+
+    def _on_arrival(self, t: float, fl: _InFlight) -> None:
+        del self._inflight[fl.job_id]
+        self.counters["arrivals"] += 1
+        arrival = StreamArrival(fl.client, fl.base_version, fl.dispatch_t,
+                                t, fl.job_id)
+        action = self.queue.offer(arrival)
+        tracer.counter(f"service.{action}")
+        self._trace(t, "arrival", fl.client,
+                    f"v{fl.base_version} {action} q{len(self.queue)}")
+        if action == "rejected":
+            return
+        cfg = self.cfg
+        if cfg.trigger == "async":
+            self._aggregate(t, "async")
+        elif cfg.trigger == "fedbuff" and self.queue.distinct() >= cfg.k:
+            self._aggregate(t, "fedbuff")
+
+    # ------------------------------------------------------------------ #
+    def _aggregate(self, now: float, reason: str) -> None:
+        cohort = self.queue.pop_cohort(self.cfg.max_cohort)
+        if not cohort:
+            self.counters["empty_triggers"] += 1
+            self._trace(now, "trigger", -1, f"{reason} empty")
+            return
+        # per-client dedup, freshest base wins — the same rule as
+        # SimEngine.aggregate, applied to the drained slice only
+        best: Dict[int, StreamArrival] = {}
+        for a in cohort:
+            b = best.get(a.client)
+            if b is None or a.base_version > b.base_version:
+                best[a.client] = a
+        self.counters["superseded"] += len(cohort) - len(best)
+        batch = sorted(best.values(), key=lambda a: a.client)
+        fresh = [a.client for a in batch if a.base_version == self.version]
+        stale = [(a.client, a.base_version) for a in batch
+                 if a.base_version < self.version]
+        t0 = time.perf_counter()
+        with tracer.span("service.aggregate") as sp:
+            sp.arg("reason", reason)
+            sp.arg("version", self.version)
+            sp.arg("n_fresh", len(fresh))
+            sp.arg("n_stale", len(stale))
+            self.server.step(self.version, fresh, stale, eval_now=False)
+        wall = time.perf_counter() - t0
+        self.version += 1
+        self.counters["aggregations"] += 1
+        self.trigger_walls.append(wall)
+        for a in batch:
+            self.queue_waits.append(now - a.arrival_t)
+            self.realized_taus.append(self.version - 1 - a.base_version)
+        self._trace(now, "aggregate", -1,
+                    f"v{self.version} f{len(fresh)} s{len(stale)} {reason}")
+        if tracer.enabled:
+            tracer.metric("service_trigger", reason=reason,
+                          version=self.version, n_fresh=len(fresh),
+                          n_stale=len(stale), wall_s=wall,
+                          queue_depth=len(self.queue),
+                          vclock=now)
+        if self.cfg.disseminate:
+            self._disseminate(now)
+
+    def _disseminate(self, now: float) -> None:
+        """Timely update dissemination (arxiv 2507.06031): on a model
+        advance, push the fresh global to in-flight jobs early enough in
+        their training that merging it is worth it — their eventual upload
+        then counts from the new base, so realized staleness drops."""
+        pushed = 0
+        with tracer.span("service.disseminate") as sp:
+            for fl in self._inflight.values():
+                if fl.base_version >= self.version:
+                    continue
+                prog = ((now - fl.dispatch_t) / fl.duration
+                        if fl.duration > 0 else 1.0)
+                if prog < self.cfg.disseminate_max_progress:
+                    fl.base_version = self.version
+                    pushed += 1
+            sp.arg("pushed", pushed)
+        if pushed:
+            self.counters["disseminated"] += pushed
+            tracer.counter("service.disseminated", pushed)
+            self._trace(now, "disseminate", -1,
+                        f"v{self.version} n{pushed}")
+
+    # ------------------------------------------------------------------ #
+    def flush(self) -> None:
+        """Force-aggregate whatever is queued (drains in ``max_cohort``
+        slices until empty)."""
+        while len(self.queue):
+            self._aggregate(self.vclock, "flush")
+
+    def summary(self) -> Dict[str, Any]:
+        walls = np.asarray(self.trigger_walls or [0.0])
+        waits = np.asarray(self.queue_waits or [0.0])
+        taus = np.asarray(self.realized_taus or [0], np.int64)
+        wall = self._wall_spent
+        out: Dict[str, Any] = {
+            "version": self.version,
+            "vclock": self.vclock,
+            "wall_s": wall,
+            "uploads_per_sec": (self.counters["arrivals"] / wall
+                                if wall > 0 else 0.0),
+            "trigger_wall_p50_ms": float(np.percentile(walls, 50) * 1e3),
+            "trigger_wall_p99_ms": float(np.percentile(walls, 99) * 1e3),
+            "trigger_wall_mean_ms": float(walls.mean() * 1e3),
+            "queue_wait_p50": float(np.percentile(waits, 50)),
+            "queue_wait_p99": float(np.percentile(waits, 99)),
+            "queue_depth": len(self.queue),
+            "queue_depth_max": self.queue.max_depth,
+            "realized_tau_mean": float(taus.mean()),
+            "realized_tau_max": int(taus.max()),
+            "digest": self.digest(),
+        }
+        out.update(self.counters)
+        out.update({k: v for k, v in self.queue.counters.items()})
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# Builder
+# --------------------------------------------------------------------------- #
+
+
+def build_service(seed: int = 0, strategy: str = "ours",
+                  n_clients: int = 10, n_slow: int = 3, gi_iters: int = 6,
+                  segment_iters: int = 3, max_lanes: int = 8,
+                  fused_step: bool = True, mesh=None,
+                  cfg: Optional[ServiceConfig] = None) -> StreamingService:
+    """A ready service over the stock small-scale FL setup
+    (``sim.scenarios.fl_setup``). ``segment_iters > 0`` (the default)
+    selects the segmented GI executor so triggers share the resident
+    ``LanePool``; ``fused_step=False`` builds the loop-mode oracle the
+    bit-for-bit replay tests compare against."""
+    from repro.sim.scenarios import fl_setup
+
+    server, _, _ = fl_setup(seed, strategy=strategy, n_clients=n_clients,
+                            n_slow=n_slow, gi_iters=gi_iters,
+                            eval_every=10 ** 9, mesh=mesh,
+                            segment_iters=segment_iters,
+                            max_lanes=max_lanes, fused_step=fused_step)
+    return StreamingService(server, cfg)

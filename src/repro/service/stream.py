@@ -1,0 +1,193 @@
+"""Upload streams: the replayable arrival process the service consumes.
+
+An :class:`UploadJob` is one client training job — dispatched at
+``dispatch_t`` (virtual seconds), its update arriving ``duration`` later.
+A log deliberately does NOT record base versions: which global version a
+job trained from is decided at replay time by the service (the version
+current when the dispatch event is processed, possibly refreshed by timely
+dissemination). That is what makes one log replayable under different
+trigger / admission / dissemination configurations while staying fully
+deterministic for a fixed configuration — the determinism contract the
+soak tests pin with :func:`UploadLog.digest`.
+
+Three ways to obtain a log:
+
+* :func:`synthetic_log` — open-loop per-client job chains from
+  ``sim.devices.LatencyDist`` latency models (a slow tier for staleness),
+  counter-seeded so each client's chain is independent of the others;
+* :func:`log_from_scenario` — record the arrival process of a stock
+  ``sim.scenarios`` scenario by running its fleet + trigger policy on the
+  event engine (``VecEngine`` by default — heap and vec traces are pinned
+  identical, so either engine yields the same log);
+* :func:`read_upload_log` — replay a JSONL file written by
+  :func:`UploadLog.write_jsonl` (schema ``upload-log-v1``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.sim.devices import LatencyDist
+
+SCHEMA = "upload-log-v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class UploadJob:
+    """One client job: dispatched at ``dispatch_t``, arrives ``duration``
+    later. ``job_id`` is the log-order index (assigned by UploadLog)."""
+    client: int
+    dispatch_t: float
+    duration: float
+    job_id: int = 0
+
+    @property
+    def arrival_t(self) -> float:
+        return self.dispatch_t + self.duration
+
+
+class UploadLog:
+    """An ordered, replayable stream of :class:`UploadJob`."""
+
+    def __init__(self, jobs: Iterable[UploadJob], n_clients: int,
+                 meta: Optional[Dict[str, Any]] = None):
+        ordered = sorted(jobs, key=lambda j: (j.dispatch_t, j.client))
+        self.jobs: List[UploadJob] = [
+            dataclasses.replace(j, job_id=i) for i, j in enumerate(ordered)]
+        self.n_clients = int(n_clients)
+        self.meta = dict(meta or {})
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+    def __iter__(self):
+        return iter(self.jobs)
+
+    @property
+    def horizon(self) -> float:
+        """Virtual time of the last arrival (0.0 for an empty log)."""
+        return max((j.arrival_t for j in self.jobs), default=0.0)
+
+    def digest(self) -> str:
+        """Content fingerprint (16 hex chars): identical digests mean the
+        service will see an identical arrival process."""
+        lines = "\n".join(f"{j.client}|{j.dispatch_t:.9f}|{j.duration:.9f}"
+                          for j in self.jobs)
+        return hashlib.sha256(lines.encode()).hexdigest()[:16]
+
+    # ------------------------------------------------------------------ #
+    # JSONL round-trip
+    # ------------------------------------------------------------------ #
+    def write_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(json.dumps({"schema": SCHEMA,
+                                "n_clients": self.n_clients,
+                                "meta": self.meta}) + "\n")
+            for j in self.jobs:
+                f.write(json.dumps({"c": j.client, "t": j.dispatch_t,
+                                    "d": j.duration}) + "\n")
+
+
+def read_upload_log(path: str) -> UploadLog:
+    with open(path) as f:
+        header = json.loads(f.readline())
+        if header.get("schema") != SCHEMA:
+            raise ValueError(f"{path}: not an {SCHEMA} document")
+        jobs = [UploadJob(int(r["c"]), float(r["t"]), float(r["d"]))
+                for r in map(json.loads, f) if r]
+    return UploadLog(jobs, header["n_clients"], header.get("meta"))
+
+
+# --------------------------------------------------------------------------- #
+# Generators
+# --------------------------------------------------------------------------- #
+
+
+def synthetic_log(n_clients: int = 10, horizon: float = 8.0, seed: int = 0,
+                  slow_ids: Sequence[int] = (),
+                  fast: Optional[LatencyDist] = None,
+                  slow: Optional[LatencyDist] = None) -> UploadLog:
+    """Open-loop job chains: each client trains back-to-back until
+    ``horizon`` (jobs whose arrival would land beyond it are cut). Each
+    chain draws from a per-client ``default_rng((seed, client))`` stream,
+    so one client's latencies never depend on another's — adding a client
+    or changing a tier perturbs only that chain."""
+    fast = fast or LatencyDist("lognormal", 0.4, 0.3)
+    slow = slow or LatencyDist("lognormal", 2.5, 0.4)
+    slow_set = set(int(c) for c in slow_ids)
+    jobs: List[UploadJob] = []
+    for c in range(n_clients):
+        dist = slow if c in slow_set else fast
+        rng = np.random.default_rng((seed, c))
+        t = 0.0
+        while True:
+            d = float(dist.sample(rng))
+            if t + d > horizon:
+                break
+            jobs.append(UploadJob(c, t, d))
+            t += d
+    return UploadLog(jobs, n_clients,
+                     meta={"source": "synthetic", "seed": seed,
+                           "horizon": horizon,
+                           "slow_ids": sorted(slow_set)})
+
+
+class _RecordingPolicy:
+    """Wraps a scenario's trigger policy, recording every delivered
+    ``Arrival``. Per-event hooks delegate to the inner policy; the passive
+    flags are cleared so both engines call ``on_upload`` per arrival (the
+    vectorized engine's batched and per-event replays are pinned
+    trace-identical, so clearing the flags never changes the event
+    process)."""
+    passive_uploads = False
+    passive_rejoins = False
+    uploads_noop = False
+
+    def __init__(self, inner, out: List):
+        self.inner = inner
+        self.out = out
+        self.name = inner.name
+
+    def start(self, eng) -> None:
+        self.inner.start(eng)
+
+    def on_resume(self, eng) -> None:
+        self.inner.on_resume(eng)
+
+    def on_upload(self, eng, arrival) -> None:
+        self.out.append(arrival)
+        self.inner.on_upload(eng, arrival)
+
+    def on_timer(self, eng, payload) -> None:
+        self.inner.on_timer(eng, payload)
+
+    def on_rejoin(self, eng, client: int) -> None:
+        self.inner.on_rejoin(eng, client)
+
+
+def log_from_scenario(name: str, seed: int = 0,
+                      horizon: Optional[float] = None,
+                      engine: str = "vec") -> UploadLog:
+    """Record a stock scenario's realized arrival process as a replayable
+    log: its fleet + trigger policy run on the event engine with a
+    recording shim, and every delivered upload becomes an
+    :class:`UploadJob`. Doomed (dropped) jobs never arrive and are absent
+    by construction."""
+    from repro.sim import scenarios
+
+    arrivals: List = []
+    eng = scenarios.engine_only(
+        name, seed=seed, horizon=horizon, engine=engine,
+        policy_wrap=lambda p: _RecordingPolicy(p, arrivals))
+    eng.run()
+    jobs = [UploadJob(a.client, a.dispatch_time,
+                      a.arrival_time - a.dispatch_time)
+            for a in arrivals]
+    return UploadLog(jobs, len(eng.fleet),
+                     meta={"source": f"scenario:{name}", "seed": seed,
+                           "engine": engine, "horizon": float(eng.horizon)})

@@ -96,13 +96,19 @@ def build(name: str, seed: int = 0, horizon: Optional[float] = None,
 # --------------------------------------------------------------------------- #
 
 
-def _fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
-              n_slow: int = 3, tau=3, gi_iters: int = 8,
-              eval_every: int = 5, mesh=None):
+def fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
+             n_slow: int = 3, tau=3, gi_iters: int = 8,
+             eval_every: int = 5, mesh=None, segment_iters: int = 0,
+             max_lanes: int = 0, fused_step: bool = True):
     """``mesh`` is a (pod, data) cohort mesh from
     ``repro.launch.mesh.make_server_mesh``: the scenario's Server then runs
     its batched hot path sharded (every stock scenario accepts ``mesh=`` as
-    an override, and ``repro.sweep`` passes it when fanning seeds)."""
+    an override, and ``repro.sweep`` passes it when fanning seeds).
+
+    ``segment_iters``/``max_lanes`` select the segmented continuous-batching
+    GI executor (the resident ``LanePool``) and ``fused_step=False`` the
+    per-client loop oracle — ``repro.service`` builds both its streaming
+    server and its bit-for-bit replay oracle through these overrides."""
     x, y = make_feature_dataset(20, n_classes=N_CLASSES,
                                 n_features=N_FEATURES, seed=seed)
     tx, ty = make_feature_dataset(8, n_classes=N_CLASSES,
@@ -113,12 +119,19 @@ def _fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
     sched = intertwined_schedule(hist, TARGET, n_slow=n_slow, tau=tau)
     prog = LocalProgram(steps=5, lr=0.1, momentum=0.5)
     cfg = FLConfig(strategy=strategy, rounds=0,
-                   gi=GIConfig(n_rec=8, iters=gi_iters, lr=0.1),
+                   gi=GIConfig(n_rec=8, iters=gi_iters, lr=0.1,
+                               segment_iters=segment_iters,
+                               max_lanes=max_lanes),
+                   fused_step=fused_step,
                    eval_every=eval_every, seed=seed)
     server = Server(mlp3(n_features=N_FEATURES, n_classes=N_CLASSES,
                          hidden=24),
                     prog, cfg, cx, cy, cm, sched, tx, ty, mesh=mesh)
     return server, hist, sched
+
+
+# historic private name, kept for existing callers (benchmarks, tests)
+_fl_setup = fl_setup
 
 
 def _make_run(name, seed, server, fleet, policy, horizon, eval_every_time,
@@ -185,11 +198,17 @@ _ENGINE_PARTS = {
 
 
 def engine_only(name: str, seed: int = 0, horizon: Optional[float] = None,
-                engine: str = "vec", **engine_kw):
+                engine: str = "vec", policy_wrap: Optional[Callable] = None,
+                **engine_kw):
     """A stock scenario's fleet + policy on a ``RecordingAggregator`` —
     the full event process without the FL data/model stack. This is what
     the heap-vs-vec equivalence tests and the events/sec benchmarks drive:
-    identical trace digests here certify identical cohorts everywhere."""
+    identical trace digests here certify identical cohorts everywhere.
+
+    ``policy_wrap`` decorates the trigger policy before the engine is
+    built (the engine captures policy capability flags at construction, so
+    wrapping after the fact would be unsound) — ``repro.service`` uses it
+    to record the arrival process as a replayable upload log."""
     fleet_fn, policy_fn, default_h, eval_div = _ENGINE_PARTS[name]
     _, y = make_feature_dataset(20, n_classes=N_CLASSES,
                                 n_features=N_FEATURES, seed=seed)
@@ -202,7 +221,10 @@ def engine_only(name: str, seed: int = 0, horizon: Optional[float] = None,
         fleet = fleet_fn(hist)
     horizon = default_h if horizon is None else float(horizon)
     eval_every = None if eval_div is None else horizon / eval_div
-    return ENGINES[engine](fleet, policy_fn(), RecordingAggregator(),
+    policy = policy_fn()
+    if policy_wrap is not None:
+        policy = policy_wrap(policy)
+    return ENGINES[engine](fleet, policy, RecordingAggregator(),
                            seed=seed, horizon=horizon,
                            eval_every_time=eval_every, **engine_kw)
 

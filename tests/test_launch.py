@@ -42,10 +42,20 @@ def test_fl_train_launcher():
 
 
 @pytest.mark.slow
-def test_serve_launcher():
+def test_decode_launcher():
     out = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
+        [sys.executable, "-m", "repro.launch.decode", "--arch", "qwen3-1.7b",
          "--batch", "2", "--prompt-len", "8", "--gen-len", "4"],
         env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=560)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "tok/s" in out.stdout
+
+
+def test_serve_shim_deprecated():
+    """repro.launch.serve stays importable for one release but warns."""
+    out = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c",
+         "import repro.launch.serve"],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=120)
+    assert out.returncode != 0
+    assert "repro.launch.decode" in out.stderr

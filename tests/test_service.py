@@ -1,0 +1,342 @@
+"""Streaming service tests: replay determinism, the persistent lane pool,
+admission control / backpressure soak, timely dissemination.
+
+The expensive contracts (oracle equality, pool persistence) run on the
+"ours" strategy with the segmented GI executor; the queue-mechanics soaks
+run strategy="unweighted" (no GI) because admission and triggers are
+strategy-independent — that keeps the 2x-overload replays cheap enough to
+run per admission policy, twice each for the digest check.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.gradient_inversion as gi_mod
+from repro.service import (AdmissionQueue, ServiceConfig, StreamArrival,
+                           StreamingService, build_service,
+                           log_from_scenario, read_upload_log, synthetic_log)
+from repro.sim.devices import LatencyDist
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+def _params_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# --------------------------------------------------------------------------- #
+# Upload logs
+# --------------------------------------------------------------------------- #
+
+
+def test_upload_log_roundtrip(tmp_path):
+    log = synthetic_log(n_clients=6, horizon=4.0, seed=3, slow_ids=(0,))
+    assert len(log) > 0
+    path = str(tmp_path / "uploads.jsonl")
+    log.write_jsonl(path)
+    back = read_upload_log(path)
+    assert back.digest() == log.digest()
+    assert back.n_clients == log.n_clients
+    assert len(back) == len(log)
+
+
+def test_synthetic_log_deterministic_and_ordered():
+    a = synthetic_log(n_clients=5, horizon=3.0, seed=7, slow_ids=(1, 2))
+    b = synthetic_log(n_clients=5, horizon=3.0, seed=7, slow_ids=(1, 2))
+    assert a.digest() == b.digest()
+    ts = [j.dispatch_t for j in a]
+    assert ts == sorted(ts)
+    assert all(j.arrival_t <= 3.0 for j in a)
+    # a different seed is a different stream
+    assert synthetic_log(n_clients=5, horizon=3.0, seed=8).digest() \
+        != a.digest()
+
+
+def test_log_from_scenario_engine_agnostic():
+    """heap and vec engine traces are pinned identical, so the recorded
+    upload log must be too."""
+    vec = log_from_scenario("fedbuff_k4", seed=0, horizon=4.0, engine="vec")
+    heap = log_from_scenario("fedbuff_k4", seed=0, horizon=4.0, engine="heap")
+    assert len(vec) > 0
+    assert vec.digest() == heap.digest()
+
+
+# --------------------------------------------------------------------------- #
+# Admission queue
+# --------------------------------------------------------------------------- #
+
+
+def _arr(client, base=0, t=0.0, job=0):
+    return StreamArrival(client, base, t, t, job)
+
+
+def test_admission_reject_full_queue():
+    q = AdmissionQueue(2, "reject")
+    assert q.offer(_arr(0)) == "admitted"
+    assert q.offer(_arr(1)) == "admitted"
+    assert q.offer(_arr(2)) == "rejected"
+    assert len(q) == 2 and q.counters["rejected"] == 1
+
+
+def test_admission_drop_oldest_evicts():
+    q = AdmissionQueue(2, "drop_oldest")
+    q.offer(_arr(0))
+    q.offer(_arr(1))
+    assert q.offer(_arr(2)) == "admitted"
+    assert [a.client for a in q.pop_cohort()] == [1, 2]
+    assert q.counters["dropped_oldest"] == 1
+
+
+def test_admission_coalesce_replaces_in_place():
+    q = AdmissionQueue(3, "coalesce")
+    q.offer(_arr(0, base=0))
+    q.offer(_arr(1, base=0))
+    assert q.offer(_arr(0, base=5)) == "coalesced"
+    assert len(q) == 2
+    cohort = q.pop_cohort()
+    # client 0 kept its queue position but carries the fresher base
+    assert [(a.client, a.base_version) for a in cohort] == [(0, 5), (1, 0)]
+    # with no duplicate to replace, a full coalesce queue rejects
+    q2 = AdmissionQueue(1, "coalesce")
+    q2.offer(_arr(0))
+    assert q2.offer(_arr(1)) == "rejected"
+
+
+def test_admission_pop_cohort_limit():
+    q = AdmissionQueue(8, "reject")
+    for c in range(5):
+        q.offer(_arr(c))
+    assert [a.client for a in q.pop_cohort(2)] == [0, 1]
+    assert len(q) == 3
+    assert q.counters["popped"] == 2
+
+
+# --------------------------------------------------------------------------- #
+# Replay determinism: loop-mode Server as the bit-for-bit oracle
+# --------------------------------------------------------------------------- #
+
+
+def test_replay_matches_loop_oracle():
+    """Replaying one upload log through the fused-step service and through
+    the loop-mode oracle yields identical digests AND bitwise-identical
+    global model trajectories."""
+    log = synthetic_log(n_clients=8, horizon=3.0, seed=1, slow_ids=(0, 1))
+    cfg = ServiceConfig(trigger="fedbuff", k=3, max_cohort=4)
+    fused = build_service(seed=0, gi_iters=4, cfg=cfg)
+    loop = build_service(seed=0, gi_iters=4, fused_step=False, cfg=cfg)
+    sf = fused.run_log(log)
+    sl = loop.run_log(log)
+    assert sf["digest"] == sl["digest"]
+    assert sf["version"] == sl["version"] > 0
+    assert sf["aggregations"] == sl["aggregations"]
+    assert _params_equal(fused.server.global_params,
+                         loop.server.global_params)
+
+
+def test_two_runs_digest_identical():
+    log = synthetic_log(n_clients=8, horizon=3.0, seed=2, slow_ids=(0,))
+    cfg = ServiceConfig(trigger="async", queue_capacity=16,
+                        admission="coalesce", max_cohort=2)
+    runs = []
+    for _ in range(2):
+        svc = build_service(seed=0, strategy="unweighted", cfg=cfg)
+        runs.append(svc.run_log(log))
+    assert runs[0]["digest"] == runs[1]["digest"]
+    for k in ("version", "offered", "admitted", "rejected", "coalesced",
+              "superseded", "aggregations", "queue_depth_max"):
+        assert runs[0][k] == runs[1][k], k
+
+
+# --------------------------------------------------------------------------- #
+# Persistent lane pool
+# --------------------------------------------------------------------------- #
+
+
+def test_lane_pool_never_reconstructed(monkeypatch):
+    """The segmented executor's lane pool is built exactly once per
+    GradientInverter and survives every aggregation trigger — a service
+    run constructs zero new pools."""
+    created = []
+    orig = gi_mod.LanePool.__init__
+
+    def spy(self, inverter):
+        created.append(self)
+        orig(self, inverter)
+
+    monkeypatch.setattr(gi_mod.LanePool, "__init__", spy)
+    log = synthetic_log(n_clients=8, horizon=3.0, seed=1, slow_ids=(0, 1))
+    svc = build_service(seed=0, gi_iters=4, segment_iters=2, max_lanes=4,
+                        cfg=ServiceConfig(trigger="fedbuff", k=3,
+                                          max_cohort=4))
+    assert len(created) == 1          # built by GradientInverter.__init__
+    pool = svc.server.inverter.pool
+    assert pool is created[0]
+    svc.run_log(log)
+    assert len(created) == 1          # never reconstructed between triggers
+    assert svc.server.inverter.pool is pool
+    # it actually drained GI cohorts, accumulating lifetime stats
+    assert pool.stats["cohorts"] >= 2
+    assert pool.stats["segments"] >= pool.stats["cohorts"]
+    assert pool.stats["useful_lane_iters"] > 0
+    assert pool.idle()
+
+
+def test_lane_pool_guards_concurrent_entry():
+    svc = build_service(seed=0, strategy="unweighted")
+    pool = svc.server.inverter.pool
+    pool.pending.append(0)
+    with pytest.raises(RuntimeError):
+        pool.run_cohort(None, None, None, None, None, 1, 1, 0)
+    pool.pending.clear()
+
+
+# --------------------------------------------------------------------------- #
+# Backpressure soak: 2x the service's drain capacity
+# --------------------------------------------------------------------------- #
+
+
+def _overload_log():
+    """16 clients on a fixed 0.4s cadence against a deadline trigger that
+    drains at most 8 uploads per 0.5s tick: offered rate ~= 2x capacity."""
+    return synthetic_log(n_clients=16, horizon=6.0, seed=5,
+                         fast=LatencyDist("fixed", 0.4))
+
+
+@pytest.mark.parametrize("policy", ["reject", "drop_oldest", "coalesce"])
+def test_backpressure_soak(policy):
+    log = _overload_log()
+    cfg = ServiceConfig(trigger="deadline", round_len=0.5, queue_capacity=6,
+                        admission=policy, max_cohort=8)
+    summaries = []
+    for _ in range(2):
+        svc = build_service(seed=0, strategy="unweighted",
+                            n_clients=log.n_clients, cfg=cfg)
+        s = svc.run_log(log)
+        # bounded queue: depth never exceeded capacity
+        assert s["queue_depth_max"] <= cfg.queue_capacity
+        # exact admission accounting: every offer lands in exactly one bin
+        assert s["offered"] == s["admitted"] + s["coalesced"] + s["rejected"]
+        # queued-entry conservation
+        assert s["admitted"] == (s["popped"] + s["dropped_oldest"]
+                                 + s["queue_depth"])
+        # every drained entry either aggregated or was superseded in-cohort
+        assert s["popped"] == len(svc.realized_taus) + s["superseded"]
+        assert s["offered"] == len(log)
+        # overload actually engaged the policy
+        if policy == "reject":
+            assert s["rejected"] > 0 and s["coalesced"] == 0
+        elif policy == "drop_oldest":
+            assert s["dropped_oldest"] > 0 and s["rejected"] == 0
+        else:
+            assert s["coalesced"] > 0
+            # coalesce dedups at admission: a cohort never holds duplicates
+            assert s["superseded"] == 0
+        summaries.append(s)
+    # digest-identical replay across two fresh runs
+    assert summaries[0]["digest"] == summaries[1]["digest"]
+    for k in ("offered", "admitted", "rejected", "coalesced",
+              "dropped_oldest", "superseded", "popped", "aggregations",
+              "version", "queue_depth_max"):
+        assert summaries[0][k] == summaries[1][k], k
+
+
+def test_flush_drains_queue():
+    log = _overload_log()
+    cfg = ServiceConfig(trigger="deadline", round_len=0.5, queue_capacity=6,
+                        admission="reject", max_cohort=8)
+    svc = build_service(seed=0, strategy="unweighted",
+                        n_clients=log.n_clients, cfg=cfg)
+    svc.run_log(log)
+    svc.flush()
+    s = svc.summary()
+    assert s["queue_depth"] == 0
+    assert s["admitted"] == s["popped"]
+
+
+# --------------------------------------------------------------------------- #
+# Timely dissemination (arxiv 2507.06031)
+# --------------------------------------------------------------------------- #
+
+
+def test_dissemination_reduces_realized_staleness():
+    """Pushing the fresh global to in-flight slow clients re-bases their
+    eventual uploads, so mean realized staleness must drop."""
+    log = synthetic_log(n_clients=10, horizon=10.0, seed=4,
+                        slow_ids=(0, 1, 2),
+                        slow=LatencyDist("fixed", 4.0),
+                        fast=LatencyDist("fixed", 0.5))
+    base_cfg = dict(trigger="fedbuff", k=3, max_cohort=4)
+    off = build_service(seed=0, strategy="unweighted", n_clients=10,
+                        cfg=ServiceConfig(**base_cfg, disseminate=False))
+    on = build_service(seed=0, strategy="unweighted", n_clients=10,
+                       cfg=ServiceConfig(**base_cfg, disseminate=True,
+                                         disseminate_max_progress=0.5))
+    s_off = off.run_log(log)
+    s_on = on.run_log(log)
+    assert s_on["disseminated"] > 0
+    assert s_off["disseminated"] == 0
+    assert s_on["realized_tau_mean"] < s_off["realized_tau_mean"]
+    # dissemination only rebases in-flight jobs; the arrival process (and
+    # therefore the offered count) is unchanged
+    assert s_on["offered"] == s_off["offered"]
+
+
+# --------------------------------------------------------------------------- #
+# Service state persists across logs (the never-stops contract)
+# --------------------------------------------------------------------------- #
+
+
+def test_versions_continue_across_logs():
+    log = synthetic_log(n_clients=6, horizon=2.0, seed=6)
+    svc = build_service(seed=0, strategy="unweighted",
+                        cfg=ServiceConfig(trigger="async"))
+    s1 = svc.run_log(log)
+    v1, clock1 = s1["version"], s1["vclock"]
+    assert v1 > 0
+    s2 = svc.run_log(log)
+    assert s2["version"] > v1
+    assert s2["vclock"] > clock1
+    assert s2["offered"] == 2 * len(log)
+    assert len(svc.server.history) == s2["version"] + 1
+
+
+# --------------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------------- #
+
+
+def test_service_cli_smoke(tmp_path):
+    log_path = str(tmp_path / "uploads.jsonl")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.service", "--horizon", "2",
+         "--n-clients", "6", "--strategy", "unweighted",
+         "--admission", "coalesce", "--max-cohort", "4",
+         "--log-out", log_path],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.loads(out.stdout)
+    for key in ("uploads_per_sec", "trigger_wall_p99_ms", "digest",
+                "queue_depth_max", "offered", "pool_stats"):
+        assert key in rec, key
+    assert rec["offered"] > 0
+    # the log written is replayable: same log + config => same digest
+    out2 = subprocess.run(
+        [sys.executable, "-m", "repro.service", "--log-in", log_path,
+         "--strategy", "unweighted", "--admission", "coalesce",
+         "--max-cohort", "4"],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=560)
+    assert out2.returncode == 0, out2.stdout + out2.stderr
+    rec2 = json.loads(out2.stdout)
+    assert rec2["digest"] == rec["digest"]
+    assert rec2["log_digest"] == rec["log_digest"]
