@@ -51,7 +51,7 @@ import sys
 from typing import Any, Dict, List, Optional, Tuple
 
 GATED_PREFIXES = ("sim/engine_", "sim_scale/", "server/", "gi/", "step/",
-                  "serve/")
+                  "serve/", "llm/")
 
 # calibration canaries (benchmarks/run.py::calibrate): fixed reference
 # workloads whose baseline/fresh ratio measures machine-wide speed, which

@@ -36,6 +36,14 @@ class LocalProgram:
     momentum: float = 0.5
     optimizer: str = "sgdm"         # sgd | sgdm | adam | fedprox
     fedprox_mu: float = 0.01
+    # remat each scanned optimizer step (jax.checkpoint): anything that
+    # differentiates *through* LocalUpdate — GI's while_loop body above all
+    # — recomputes the step's forward during the backward sweep instead of
+    # holding `steps` sets of model activations live at once. Value-neutral
+    # (same ops, same order), so every bitwise equivalence contract holds
+    # with it on or off; composes with ModelConfig.remat, which remats
+    # *inside* one forward (the layer scan).
+    remat: bool = False
 
     def make(self, global_params=None) -> Optimizer:
         if self.optimizer == "sgd":
@@ -90,6 +98,8 @@ def make_local_update(apply_fn: Callable, program: LocalProgram):
             updates, s = opt.update(grads, s, p)
             return (apply_updates(p, updates), s), loss
 
+        if program.remat:
+            step = jax.checkpoint(step)
         (p, _), losses = jax.lax.scan(step, (params, opt_state), None,
                                       length=program.steps)
         return p, losses

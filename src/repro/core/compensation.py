@@ -102,10 +102,22 @@ def w_pred(update_stale: Any, history: List[Any], w_global_stale: Any,
 def _first_order_stacked(updates_stacked: Any, w_target: Any,
                          w_base_stacked: Any, lam: float) -> Any:
     """Shared math for the stacked first-order forms (no telemetry —
-    public wrappers emit their own per-strategy metric row)."""
+    public wrappers emit their own per-strategy metric row).
+
+    Compensation math is pinned to fp32: bf16-compute models hand bf16
+    deltas through here, but the g (.) g (.) dw Hessian surrogate squares
+    already-small update entries — in bf16 (8 mantissa bits) the correction
+    underflows to garbage. Outputs are therefore always fp32 leaves
+    (``aggregation.apply_update`` casts back to the param dtype at the very
+    end); for fp32 inputs the casts are no-ops and the result is
+    bit-identical to the historic form."""
     dw = tree_sub(w_target, w_base_stacked)
-    return jax.tree_util.tree_map(
-        lambda g, d: g + lam * g * g * d, updates_stacked, dw)
+
+    def comp(g, d):
+        gf = g.astype(jnp.float32)
+        return gf + lam * gf * gf * d.astype(jnp.float32)
+
+    return jax.tree_util.tree_map(comp, updates_stacked, dw)
 
 
 def _cohort_size(tree: Any) -> int:
@@ -138,12 +150,16 @@ def predict_future_global_batch(history, taus: Sequence[int]) -> Any:
     """
     assert len(history) >= 1
     if len(history) == 1:
-        return history[-1]
+        return jax.tree_util.tree_map(
+            lambda w: w.astype(jnp.float32), history[-1])
     w_now, w_prev = history[-1], history[-2]
     step = tree_sub(w_now, w_prev)
     tv = jnp.asarray(np.asarray(taus, np.float32))
+    # fp32 like the rest of the compensation math: tau * step amplifies the
+    # inter-round drift by the staleness, so bf16 extrapolation compounds
     return jax.tree_util.tree_map(
-        lambda w, s: w + tv.reshape((-1,) + (1,) * s.ndim) * s.astype(w.dtype),
+        lambda w, s: w.astype(jnp.float32)
+        + tv.reshape((-1,) + (1,) * s.ndim) * s.astype(jnp.float32),
         w_now, step)
 
 

@@ -70,8 +70,9 @@ from repro.core.disparity import (l1_disparity, masked_cosine_distance,
                                   tree_pad_leading, tree_sub,
                                   tree_take_leading)
 from repro.launch.mesh import mesh_shard_count, shard_map_compat
-from repro.launch.sharding import (cohort_spec, replicated_spec,
-                                   segment_bucket, shard_bucket)
+from repro.launch.sharding import (cohort_spec, constrain, model_axis_size,
+                                   replicated_spec, segment_bucket,
+                                   shard_bucket, stack_specs, to_named)
 from repro.obs import tracer
 from repro.optim import adam, apply_updates
 
@@ -95,9 +96,17 @@ class GIConfig:
     # cap on concurrently-resident GI lanes (0 = the whole cohort); extra
     # clients wait in the executor's pending queue and stream into lanes as
     # earlier clients finish — how the server hands the executor the union
-    # of all deliverable stale clients without scaling device memory with
+    # of all deliverable stale lanes without scaling device memory with
     # the cohort.
     max_lanes: int = 0
+    # remat the LocalUpdate steps inside the GI while_loop body
+    # (jax.checkpoint on the scanned optimizer step): the body's
+    # value_and_grad recomputes each local step's forward instead of
+    # holding `program.steps` sets of model activations per lane — the
+    # memory lever that makes transformer-scale GI fit. Value-neutral, so
+    # the batched==sequential and segmented==one-shot bitwise contracts
+    # are unaffected (all engines share the same rematted local_update).
+    remat: bool = False
 
 
 # kept under their historic names for the module's internal call sites
@@ -286,16 +295,30 @@ class GradientInverter:
 
     def __init__(self, apply_fn: Callable, input_shape: Tuple[int, ...],
                  n_classes: int, program: LocalProgram, cfg: GIConfig,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 param_spec: Optional[Any] = None):
         self.apply_fn = apply_fn
         self.input_shape = tuple(input_shape)
         self.n_classes = n_classes
-        self.program = program
         self.cfg = cfg
         # (pod, data) cohort mesh; >1 shard routes the batched engine
-        # through shard_map (a 1-shard mesh is bit-for-bit the plain engine)
+        # through shard_map (a 1-shard mesh is bit-for-bit the plain engine).
+        # ``param_spec`` (a PartitionSpec tree for ONE unstacked weight
+        # pytree, model-axis placements only — fl_param_specs) activates the
+        # GSPMD route on meshes with a model axis: the batched engines build
+        # as jit + NamedSharding so the compiler partitions weight dims on
+        # `model` while the cohort axis stays on (pod, data). shard_map
+        # cannot express this (its lane bodies have no collectives).
         self.mesh = mesh
         self.n_shards = mesh_shard_count(mesh)
+        self.param_spec = (param_spec
+                           if model_axis_size(mesh) > 1 else None)
+        if cfg.remat and not program.remat:
+            # GI-side remat without forcing it on the fresh/stale cohort
+            # updates: rebuild the inner LocalUpdate with step-level
+            # jax.checkpoint (value-neutral; see GIConfig.remat)
+            program = dataclasses.replace(program, remat=True)
+        self.program = program
         self.local_update = make_local_update(apply_fn, program)
         self._step = jax.jit(self._make_step())
         # single-compile engines (cached jits; satellite: no per-call re-jit)
@@ -349,8 +372,24 @@ class GradientInverter:
             else:
                 body = lambda wg, tgt, d0, ni: vm(wg, tgt, None, d0, ni)  # noqa: E731
                 n_in = 4
-            fn = jax.jit(shard_map_compat(
-                body, mesh, in_specs=(ax,) * n_in, out_specs=ax))
+            if self.param_spec is not None:
+                # GSPMD: the two stacked weight trees pin to (cohort on
+                # (pod, data), weight dims on model) inside the body so the
+                # while_loop math partitions over `model`; D_rec / budgets /
+                # masks and every output keep cohort-only layouts at the
+                # boundary (see sharding.constrain)
+                wst = stack_specs(self.param_spec, mesh)
+                inner = body
+
+                def body(wg, tgt, *rest):
+                    return inner(constrain(wg, wst, mesh),
+                                 constrain(tgt, wst, mesh),
+                                 *(constrain(r, ax, mesh) for r in rest))
+
+                fn = jax.jit(body, out_shardings=to_named(ax, mesh))
+            else:
+                fn = jax.jit(shard_map_compat(
+                    body, mesh, in_specs=(ax,) * n_in, out_specs=ax))
             self._invert_sharded_cache[key] = fn
         return fn
 
@@ -499,8 +538,23 @@ class GradientInverter:
                 in_axes=(0,) * n_in)
         if self.n_shards > 1:
             ax = cohort_spec(self.mesh)
-            fn = jax.jit(shard_map_compat(
-                vm, self.mesh, in_specs=(ax,) * n_in, out_specs=ax))
+            if self.param_spec is not None:
+                wst = stack_specs(self.param_spec, self.mesh)
+                mesh = self.mesh
+
+                # (w, t, [m], n, i, drec, opt, losses, last): the two
+                # leading stacked weight trees pin to model-axis placements
+                # inside the body; the carried lane state stays cohort-only
+                # at the boundary (the host compacts it between segments)
+                def body(w, t, *rest):
+                    return vm(constrain(w, wst, mesh),
+                              constrain(t, wst, mesh),
+                              *(constrain(r, ax, mesh) for r in rest))
+
+                fn = jax.jit(body, out_shardings=to_named(ax, mesh))
+            else:
+                fn = jax.jit(shard_map_compat(
+                    vm, self.mesh, in_specs=(ax,) * n_in, out_specs=ax))
         else:
             # donation is a no-op (and warns) on CPU hosts
             donate = (() if jax.default_backend() == "cpu"
@@ -795,12 +849,23 @@ class GradientInverter:
                 return _sp.fence(self._estimate_many(w_global_now, x, y))
             if self._estimate_sharded is None:
                 ax = cohort_spec(self.mesh)
-                self._estimate_sharded = jax.jit(shard_map_compat(
-                    jax.vmap(lambda w, xx, yy:
-                             self.local_update(w, xx, yy)[0],
-                             in_axes=(None, 0, 0)),
-                    self.mesh,
-                    in_specs=(replicated_spec(), ax, ax), out_specs=ax))
+                vm = jax.vmap(lambda w, xx, yy:
+                              self.local_update(w, xx, yy)[0],
+                              in_axes=(None, 0, 0))
+                if self.param_spec is not None:
+                    wspec, mesh = self.param_spec, self.mesh
+
+                    def body(w, xx, yy):
+                        return vm(constrain(w, wspec, mesh),
+                                  constrain(xx, ax, mesh),
+                                  constrain(yy, ax, mesh))
+
+                    self._estimate_sharded = jax.jit(
+                        body, out_shardings=to_named(ax, mesh))
+                else:
+                    self._estimate_sharded = jax.jit(shard_map_compat(
+                        vm, self.mesh,
+                        in_specs=(replicated_spec(), ax, ax), out_specs=ax))
             B = x.shape[0]
             Bp = shard_bucket(B, self.n_shards)
             w_hat = self._estimate_sharded(

@@ -59,8 +59,10 @@ from repro.core.uniqueness import is_unique_batch
 from repro.core.versions import VersionStore
 from repro.data.staleness import StalenessSchedule
 from repro.launch.mesh import mesh_shard_count, shard_map_compat
-from repro.launch.sharding import (cohort_spec, multi_version_specs,
-                                   replicated_spec, shard_bucket)
+from repro.launch.sharding import (cohort_spec, constrain, fl_param_specs,
+                                   model_axis_size, multi_version_specs,
+                                   replicated_spec, shard_bucket,
+                                   stack_specs, to_named)
 from repro.obs import tracer
 
 STRATEGIES = ("unweighted", "weighted", "first_order", "w_pred",
@@ -94,6 +96,10 @@ class FLConfig:
     server_lr: float = 1.0
     eval_every: int = 1
     seed: int = 0
+    # weight-sharding rule set (repro.launch.sharding.param_specs modes)
+    # used when the mesh carries a model axis; "tp" shards attention heads /
+    # FFN hidden / vocab on `model`. Ignored on (pod, data)-only meshes.
+    mesh_mode: str = "tp"
 
 
 class Server:
@@ -122,6 +128,25 @@ class Server:
         self._n_shards = mesh_shard_count(mesh)
         self._cohort_update_sharded = None         # built lazily on first use
         self._cohort_update_multi_sharded = None
+        # optional model axis (make_server_mesh(..., model=k)): weights
+        # shard per fl_param_specs and every cohort engine routes through
+        # GSPMD (jit + NamedSharding) instead of shard_map — the shard_map
+        # lane bodies carry no collectives, so model-dim partitioning has
+        # to come from the compiler. Model-sharded runs match the 1-mesh
+        # engine at tolerance (docs/real_models.md), like the rest of the
+        # multi-shard contract.
+        self._wspec = None
+        self._wspec_stacked = None
+        if model_axis_size(mesh) > 1:
+            if getattr(model, "cfg", None) is None:
+                raise ValueError(
+                    "mesh has a model axis but the model carries no "
+                    "ModelConfig — wrap a transformer with "
+                    "repro.models.fl_bridge.lm_fl_model, or build the mesh "
+                    "with make_server_mesh(model=1) (paper-scale models "
+                    "replicate)")
+            self._wspec = fl_param_specs(model.cfg, mesh, cfg.mesh_mode)
+            self._wspec_stacked = stack_specs(self._wspec, mesh)
 
         self.key = jax.random.PRNGKey(cfg.seed)
         self.global_params = model.init(jax.random.PRNGKey(cfg.seed + 1))
@@ -160,7 +185,7 @@ class Server:
         # "ours" machinery
         self.inverter = GradientInverter(
             model.apply, model.input_shape, model.n_classes, program, cfg.gi,
-            mesh=mesh)
+            mesh=mesh, param_spec=self._wspec)
         self.warm = WarmStartCache()
         self.monitor = SwitchMonitor()
         # due_round -> [(scheduled_round, client, w_hat, w_stale), ...]
@@ -227,11 +252,25 @@ class Server:
         if self._cohort_update_sharded is None:
             ax = cohort_spec(self.mesh)
             lu = self._lu_fn
-            self._cohort_update_sharded = jax.jit(shard_map_compat(
-                jax.vmap(lambda p, x, y, m: lu(p, x, y, m)[0],
-                         in_axes=(None, 0, 0, 0)),
-                self.mesh,
-                in_specs=(replicated_spec(), ax, ax, ax), out_specs=ax))
+            vm = jax.vmap(lambda p, x, y, m: lu(p, x, y, m)[0],
+                          in_axes=(None, 0, 0, 0))
+            if self._wspec is not None:
+                # every operand is pinned inside the body (in_shardings
+                # would reject committed replicated args); outputs leave in
+                # cohort layout so callers' eager tree ops never touch a
+                # model-sharded array
+                wspec, mesh = self._wspec, self.mesh
+
+                def body(p, x, y, m):
+                    return vm(constrain(p, wspec, mesh),
+                              *(constrain(v, ax, mesh) for v in (x, y, m)))
+
+                self._cohort_update_sharded = jax.jit(
+                    body, out_shardings=to_named(ax, mesh))
+            else:
+                self._cohort_update_sharded = jax.jit(shard_map_compat(
+                    vm, self.mesh,
+                    in_specs=(replicated_spec(), ax, ax, ax), out_specs=ax))
         B = xs.shape[0]
         pad = shard_bucket(B, self._n_shards) - B
         ws = self._cohort_update_sharded(
@@ -247,11 +286,23 @@ class Server:
         if self._n_shards <= 1:
             return self._cohort_update_multi(w_base_stack, xs, ys, ms)
         if self._cohort_update_multi_sharded is None:
-            self._cohort_update_multi_sharded = jax.jit(shard_map_compat(
-                self._cohort_update_multi_fn,
-                self.mesh,
-                in_specs=multi_version_specs(self.mesh),
-                out_specs=cohort_spec(self.mesh)))
+            if self._wspec is not None:
+                ax = cohort_spec(self.mesh)
+                wst, mesh = self._wspec_stacked, self.mesh
+                fn = self._cohort_update_multi_fn
+
+                def body(p, x, y, m):
+                    return fn(constrain(p, wst, mesh),
+                              *(constrain(v, ax, mesh) for v in (x, y, m)))
+
+                self._cohort_update_multi_sharded = jax.jit(
+                    body, out_shardings=to_named(ax, mesh))
+            else:
+                self._cohort_update_multi_sharded = jax.jit(shard_map_compat(
+                    self._cohort_update_multi_fn,
+                    self.mesh,
+                    in_specs=multi_version_specs(self.mesh),
+                    out_specs=cohort_spec(self.mesh)))
         B = xs.shape[0]
         pad = shard_bucket(B, self._n_shards) - B
         ws = self._cohort_update_multi_sharded(

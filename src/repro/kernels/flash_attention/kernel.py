@@ -24,7 +24,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
                   *, bq: int, bk: int, sq: int, skv: int,
                   causal: bool, window: Optional[int], scale: float):
     qi = pl.program_id(2)
@@ -85,6 +85,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
     def _finish():
         l = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        # log-sum-exp per query row: the bwd kernels rebuild p = exp(s - lse)
+        # from it instead of re-running the online softmax
+        lse_ref[0, 0] = m_scr[...] + jnp.log(l)
 
 
 def flash_attention_pallas(
@@ -92,11 +95,14 @@ def flash_attention_pallas(
     causal: bool = True, window: Optional[int] = None,
     bq: int = 128, bk: int = 128, interpret: bool = False,
     sq_valid: Optional[int] = None, skv_valid: Optional[int] = None,
-) -> jax.Array:
+    return_lse: bool = False,
+):
     """q (B, Sq, H, D); k/v (B, Skv, KV, D) -> (B, Sq, H, D).
 
     ``sq_valid``/``skv_valid``: logical lengths when inputs are padded to
     block multiples (masking and right-alignment use the logical lengths).
+    ``return_lse=True`` also returns the per-row log-sum-exp (B, H, Sq)
+    fp32 — the residual the backward kernels consume.
     """
     B, Sq, H, D = q.shape
     Skv, KV = k.shape[1], k.shape[2]
@@ -118,7 +124,7 @@ def flash_attention_pallas(
         _flash_kernel, bq=bq, bk=bk, sq=sq_valid, skv=skv_valid,
         causal=causal, window=window, scale=scale)
 
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
         in_specs=[
@@ -126,8 +132,14 @@ def flash_attention_pallas(
             pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, _rep=rep: (b, h // _rep, ki, 0)),
             pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, _rep=rep: (b, h // _rep, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, nq * bq), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
@@ -135,4 +147,196 @@ def flash_attention_pallas(
         ],
         interpret=interpret,
     )(qt, kt, vt)
-    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+    out = out[:, :, :Sq].transpose(0, 2, 1, 3)
+    if return_lse:
+        return out, lse[:, :, :Sq]
+    return out
+
+
+def _block_mask(qi, ki, bq, bk, sq, skv, causal, window):
+    """(bq, bk) validity mask + the structural liveness predicate for the
+    (qi, ki) tile — shared by the fwd and both bwd kernels so all three
+    agree exactly on which scores exist."""
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (skv - sq)                                  # right-aligned positions
+    kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kv_pos < skv
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    live = None
+    if causal or window is not None:
+        lo = qi * bq + (skv - sq)
+        hi = (qi + 1) * bq - 1 + (skv - sq)
+        live = ki * bk <= hi
+        if window is not None:
+            live &= (ki + 1) * bk - 1 > lo - window
+    return mask, live
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, dq_scr,
+                         *, bq: int, bk: int, sq: int, skv: int,
+                         causal: bool, window: Optional[int], scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    mask, live = _block_mask(qi, ki, bq, bk, sq, skv, causal, window)
+
+    def compute():
+        qs = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)         # (bq, D)
+        lse = lse_ref[0, 0]                           # (bq,)
+        delta = delta_ref[0, 0]                       # (bq,)
+        s = jax.lax.dot_general(qs, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    if live is not None:
+        @pl.when(live)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, dk_scr, dv_scr,
+                          *, bq: int, bk: int, sq: int, skv: int,
+                          causal: bool, window: Optional[int], scale: float):
+    # grid (B, H, nk, nq): the q-block axis is innermost so the dk/dv
+    # scratch accumulators persist across q steps of one (b, h, ki) tile
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    mask, live = _block_mask(qi, ki, bq, bk, sq, skv, causal, window)
+
+    def compute():
+        qs = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)         # (bq, D)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(qs, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)  # (bq, bk)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (bk, D)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        dk_scr[...] += jax.lax.dot_general(
+            ds, qs, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (bk, D)
+
+    if live is not None:
+        @pl.when(live)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(qi == nq - 1)
+    def _finish():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, do: jax.Array,
+    lse: jax.Array, delta: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None,
+    bq: int = 128, bk: int = 128, interpret: bool = False,
+    sq_valid: Optional[int] = None, skv_valid: Optional[int] = None,
+):
+    """Backward pass: q/do (B, Sq, H, D); k/v (B, Skv, KV, D);
+    lse/delta (B, H, Sq) fp32 (delta = rowsum(dO * O)).
+
+    Returns ``(dq, dk_h, dv_h)`` with dq (B, Sq, H, D) and dk_h/dv_h
+    **per query head** (B, Skv, H, D) — the caller sums each group of
+    ``H // KV`` query heads back onto its kv head (GQA), which keeps both
+    kernels free of cross-program accumulation.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    sq_valid = sq_valid or Sq
+    skv_valid = skv_valid or Skv
+    rep = H // KV
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, max(Skv, 8))
+    nq = pl.cdiv(Sq, bq)
+    nk = pl.cdiv(Skv, bk)
+    scale = 1.0 / math.sqrt(D)
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    dot = do.transpose(0, 2, 1, 3)
+    lse = lse.astype(jnp.float32)
+    delta = delta.astype(jnp.float32)
+
+    common = dict(bq=bq, bk=bk, sq=sq_valid, skv=skv_valid,
+                  causal=causal, window=window, scale=scale)
+    q_spec = pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, bk, D), lambda b, h, qi, ki, _rep=rep: (b, h // _rep, ki, 0))
+    row_spec = pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi))
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, **common),
+        grid=(B, H, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, dot, lse, delta)
+
+    # dkv grid swaps the two block axes (q innermost); remap the specs
+    q_spec2 = pl.BlockSpec((1, 1, bq, D), lambda b, h, ki, qi: (b, h, qi, 0))
+    kv_spec2 = pl.BlockSpec(
+        (1, 1, bk, D), lambda b, h, ki, qi, _rep=rep: (b, h // _rep, ki, 0))
+    row_spec2 = pl.BlockSpec((1, 1, bq), lambda b, h, ki, qi: (b, h, qi))
+    out_kv2 = pl.BlockSpec((1, 1, bk, D), lambda b, h, ki, qi: (b, h, ki, 0))
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, **common),
+        grid=(B, H, nk, nq),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2],
+        out_specs=[out_kv2, out_kv2],
+        out_shape=[jax.ShapeDtypeStruct((B, H, nk * bk, D), k.dtype),
+                   jax.ShapeDtypeStruct((B, H, nk * bk, D), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, D), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, dot, lse, delta)
+
+    dq = dq[:, :, :Sq].transpose(0, 2, 1, 3)
+    dk_h = dk_h[:, :, :Skv].transpose(0, 2, 1, 3)
+    dv_h = dv_h[:, :, :Skv].transpose(0, 2, 1, 3)
+    return dq, dk_h, dv_h

@@ -1,8 +1,16 @@
-"""Jit'd wrapper for the flash attention kernel.
+"""Jit'd wrapper for the flash attention kernel (fwd + bwd).
 
 On CPU (this container) the kernel runs in ``interpret=True`` mode for
 correctness validation; on TPU the same call compiles natively. Inputs are
 padded to block multiples before the kernel and cropped after.
+
+``flash_attention`` is differentiable: a ``jax.custom_vjp`` routes the
+backward pass through the Pallas dq / dkv kernels
+(``flash_attention_bwd_pallas``), recomputing attention probabilities from
+the forward pass's saved log-sum-exp instead of materializing the
+(Sq, Skv) score matrix — this is what lets the transformer LocalUpdate
+(and gradient inversion differentiating through it) train with the kernel
+on the hot path.
 """
 
 from __future__ import annotations
@@ -13,11 +21,56 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.kernel import (flash_attention_bwd_pallas,
+                                                  flash_attention_pallas)
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+# cfg = (causal, window, bq, bk, interpret, sq_valid, skv_valid) — a single
+# hashable static tuple so the custom_vjp has one nondiff arg
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_core(cfg, q, k, v):
+    causal, window, bq, bk, interpret, sq, skv = cfg
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=interpret,
+                                  sq_valid=sq, skv_valid=skv)
+
+
+def _flash_core_fwd(cfg, q, k, v):
+    causal, window, bq, bk, interpret, sq, skv = cfg
+    out, lse = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      bq=bq, bk=bk, interpret=interpret,
+                                      sq_valid=sq, skv_valid=skv,
+                                      return_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(cfg, res, do):
+    causal, window, bq, bk, interpret, sq, skv = cfg
+    q, k, v, out, lse = res
+    KV = k.shape[2]
+    rep = q.shape[2] // KV
+    # delta = rowsum(dO * O) per query row — the softmax-jacobian correction
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1).transpose(0, 2, 1)          # (B, H, Sq)
+    dq, dk_h, dv_h = flash_attention_bwd_pallas(
+        q, k, v, do, lse, delta, causal=causal, window=window,
+        bq=bq, bk=bk, interpret=interpret, sq_valid=sq, skv_valid=skv)
+    if rep > 1:
+        # GQA: fold each group of rep query heads onto its kv head
+        B, Skv = dk_h.shape[0], dk_h.shape[1]
+        D = dk_h.shape[-1]
+        dk = dk_h.reshape(B, Skv, KV, rep, D).sum(3)
+        dv = dv_h.reshape(B, Skv, KV, rep, D).sum(3)
+    else:
+        dk, dv = dk_h, dv_h
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
@@ -40,7 +93,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                 bq=bq_, bk=bk_, interpret=interpret,
-                                 sq_valid=Sq, skv_valid=Skv)
+    cfg = (causal, window, bq_, bk_, interpret, Sq, Skv)
+    out = _flash_core(cfg, q, k, v)
     return out[:, :Sq]

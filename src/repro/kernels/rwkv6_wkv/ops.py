@@ -1,4 +1,12 @@
-"""Jit'd wrapper for the WKV6 kernel (interpret=True on CPU)."""
+"""Jit'd wrapper for the WKV6 kernel (interpret=True on CPU).
+
+``wkv6`` is differentiable: the forward pass runs the Pallas kernel, and a
+``jax.custom_vjp`` backward recomputes the recurrence through the exact
+pure-jnp oracle (``wkv6_reference``) with ``jax.vjp`` — a remat-style
+trade (the recurrence is cheap to replay relative to storing every
+per-step state S_t) that keeps gradients bit-comparable to
+differentiating the oracle directly.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +16,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.rwkv6_wkv.kernel import wkv6_pallas
+from repro.kernels.rwkv6_wkv.ref import wkv6_reference
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _wkv6_core(cfg, r, k, v, w, u):
+    chunk, interpret = cfg
+    return wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+def _wkv6_core_fwd(cfg, r, k, v, w, u):
+    chunk, interpret = cfg
+    out = wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return out, (r, k, v, w, u)
+
+
+def _wkv6_core_bwd(cfg, res, dout):
+    r, k, v, w, u = res
+    _, vjp = jax.vjp(wkv6_reference, r, k, v, w, u)
+    return vjp(dout)
+
+
+_wkv6_core.defvjp(_wkv6_core_fwd, _wkv6_core_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -23,5 +53,5 @@ def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
         r, k, v = zeros(r), zeros(k), zeros(v)
         w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
-    out = wkv6_pallas(r, k, v, w, u, chunk=c, interpret=interpret)
+    out = _wkv6_core((c, interpret), r, k, v, w, u)
     return out[:, :T]

@@ -61,22 +61,33 @@ def make_host_mesh() -> jax.sharding.Mesh:
 SERVER_MESH_AXES = ("pod", "data")
 
 
-def make_server_mesh(n_devices: Optional[int] = None, pods: int = 1
-                     ) -> jax.sharding.Mesh:
-    """(pod, data) mesh over the first ``n_devices`` available devices.
+def make_server_mesh(n_devices: Optional[int] = None, pods: int = 1,
+                     model: int = 1) -> jax.sharding.Mesh:
+    """(pod, data[, model]) mesh over the first ``n_devices`` devices.
 
-    The server shards stale cohorts along ``(pod, data)`` jointly (there is
-    no model axis: the paper's GI models are tiny and replicate). Built with
-    ``jax.sharding.Mesh`` directly (not ``jax.make_mesh``) so a 1-device
-    mesh can be made on a multi-device host — that 1-device mesh is the
-    tier-1 bit-for-bit oracle.
+    The server shards stale cohorts along ``(pod, data)`` jointly. The
+    paper's GI models are tiny and replicate (``model=1``, the default:
+    no model axis at all, shape unchanged from the historic mesh).
+    ``model>1`` appends a third ``model`` axis for transformer-backed
+    servers (``repro.models.fl_bridge``): weights shard along it per
+    ``repro.launch.sharding.param_specs`` while the cohort axis keeps
+    using ``(pod, data)`` — ``mesh_shard_count`` ignores the model axis,
+    so cohort bucket math is untouched. Built with ``jax.sharding.Mesh``
+    directly (not ``jax.make_mesh``) so a 1-device mesh can be made on a
+    multi-device host — that 1-device mesh is the tier-1 bit-for-bit
+    oracle.
     """
     devs = jax.devices()
     n = len(devs) if n_devices is None else int(n_devices)
     if not 1 <= n <= len(devs):
         raise ValueError(f"n_devices={n} not in [1, {len(devs)}]")
-    if n % pods:
-        raise ValueError(f"pods={pods} does not divide n_devices={n}")
+    if n % (pods * model):
+        raise ValueError(
+            f"pods={pods} x model={model} does not divide n_devices={n}")
+    if model > 1:
+        return jax.sharding.Mesh(
+            np.asarray(devs[:n]).reshape(pods, n // (pods * model), model),
+            SERVER_MESH_AXES + ("model",))
     return jax.sharding.Mesh(
         np.asarray(devs[:n]).reshape(pods, n // pods), SERVER_MESH_AXES)
 

@@ -92,6 +92,60 @@ def cohort_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, cohort_spec(mesh))
 
 
+def model_axis_size(mesh: Optional[Mesh]) -> int:
+    """Size of the server mesh's optional ``model`` axis (1 when absent).
+
+    ``make_server_mesh(..., model=k)`` appends the axis for transformer-
+    backed servers; everything cohort-related (``mesh_shard_count``,
+    ``shard_bucket``) deliberately ignores it."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get("model", 1))
+
+
+def fl_param_specs(cfg: ModelConfig, mesh: Mesh, mode: str = "tp",
+                   params_shape: Optional[Params] = None) -> Params:
+    """``param_specs`` restricted to the ``model`` axis for the FL server.
+
+    The server's cohort (client/batch) axis owns ``(pod, data)``, so weight
+    dims may only shard on ``model`` — a stacked per-lane weight tree that
+    also used ``data`` would name the axis twice in one PartitionSpec.
+    ``fsdp_tp``-style rules therefore degrade gracefully: any ``data``/
+    ``pod`` entry a rule produced is replaced by replication, keeping the
+    ``model``-axis placements (heads / FFN hidden / vocab) intact.
+    """
+    specs = param_specs(cfg, mesh, mode, params_shape)
+
+    def keep_model(s: P) -> P:
+        return P(*(a if a == "model" else None for a in tuple(s)))
+
+    return jax.tree_util.tree_map(
+        keep_model, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_specs(spec_tree: Any, mesh: Mesh) -> Any:
+    """Specs for per-lane stacked weight pytrees ``(B, ...)``: the leading
+    cohort axis shards over ``(pod, data)`` (exactly ``cohort_spec``) and
+    the weight dims keep their per-leaf placements — the multi-version
+    cohort / batched-GI operand layout on a model-axis mesh."""
+    ax = data_axes(mesh)
+    return jax.tree_util.tree_map(
+        lambda s: P(ax, *tuple(s)), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(tree: Any, spec_tree: Any, mesh: Mesh) -> Any:
+    """``with_sharding_constraint`` over a pytree of PartitionSpecs.
+
+    The model-axis engines keep cohort-only layouts at every jit boundary
+    (outputs a caller's eager tree ops touch must never be model-sharded —
+    each eager op on a model-sharded array is its own tiny collective
+    program) and pin the weight trees to their ``model``-axis placements
+    *inside* the jitted body: GSPMD then partitions the heavy LocalUpdate /
+    GI math across the model axis and re-gathers at the boundary."""
+    return jax.lax.with_sharding_constraint(tree, to_named(spec_tree, mesh))
+
+
 def shard_bucket(batch: int, n_shards: int) -> int:
     """Padded cohort size: per-shard pow2 buckets x ``n_shards``.
 

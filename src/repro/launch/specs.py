@@ -83,6 +83,27 @@ def gi_cohort_specs(params_shape: Any, input_shape: Tuple[int, ...],
     return out
 
 
+def gi_cohort_shardings(mesh: jax.sharding.Mesh, param_spec: Any = None,
+                        masked: bool = False) -> Dict[str, Any]:
+    """NamedShardings matching ``gi_cohort_specs``' entries on a server mesh.
+
+    Everything shards on the cohort axis; with ``param_spec`` (a
+    ``fl_param_specs`` tree for one unstacked weight pytree — the
+    model-axis mesh case) the stacked ``w_base``/``w_stale`` trees
+    additionally shard their weight dims on ``model``. Paired with
+    ``gi_cohort_specs`` this lowers the sharded GI hot path without real
+    weights (dry-run / mesh tests)."""
+    from repro.launch.sharding import cohort_sharding, stack_specs, to_named
+    ax = cohort_sharding(mesh)
+    w = (to_named(stack_specs(param_spec, mesh), mesh)
+         if param_spec is not None else ax)
+    out: Dict[str, Any] = {"w_base": w, "w_stale": w, "keys": ax,
+                           "drec_x": ax, "drec_y": ax}
+    if masked:
+        out["masks"] = ax
+    return out
+
+
 def concrete_train_batch(cfg: ModelConfig, B: int, S: int, key) -> Dict[str, Any]:
     """Small concrete batch of the same structure (smoke tests / examples)."""
     ks = jax.random.split(key, 3)

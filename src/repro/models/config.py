@@ -85,6 +85,15 @@ class ModelConfig:
     # remat the chunked-attention inner scan (flash-style backward recompute;
     # without it one layer's saved per-chunk probs = the full S x S matrix)
     remat_attn_chunks: bool = True
+    # train/prefill attention implementation: "chunked" (pure-jnp online
+    # softmax, the exact fallback used on CPU) or "flash" (Pallas fwd+bwd
+    # kernel, repro.kernels.flash_attention). "flash" silently falls back
+    # to "chunked" off-accelerator so configs are portable.
+    attn_impl: str = "chunked"
+    # WKV recurrence implementation for rwkv6 blocks: "scan" (pure-jnp
+    # lax.scan oracle) or "pallas" (chunked Pallas kernel + recompute vjp);
+    # same CPU fallback rule as attn_impl.
+    wkv_impl: str = "scan"
     # mesh axes the activation batch dim is sharded over (set by the launcher;
     # constrains the residual stream so GSPMD never silently replicates batch)
     act_batch_axes: Optional[Tuple[str, ...]] = None

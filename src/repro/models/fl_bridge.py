@@ -1,0 +1,89 @@
+"""SmallModel bridge: the FL server + GI stack on real transformer models.
+
+``Server``/``GradientInverter`` speak the ``SmallModel`` contract —
+``init(key) -> params``, ``apply(params, x) -> logits``, a continuous
+``input_shape``, and ``n_classes`` — which gradient inversion exploits by
+optimizing a *continuous* input. For language models the continuous
+surrogate is the embedding space (the same relaxation
+``examples/fl_llm_embedding_gi.py`` demonstrates): each reconstructed
+example is a soft (seq_len, d_model) embedding sequence, labels are soft
+distributions over the vocabulary, and the task is next-token prediction
+at the last position.
+
+``lm_fl_model`` wraps any ``ModelConfig`` family the transformer zoo
+supports (dense/GQA attention, RWKV6, whisper-style encoder-decoder) in
+that contract:
+
+* inputs ``x`` are (batch, seq_len, d_model) fp32 soft embeddings; the
+  forward casts them to ``cfg.param_dtype`` — set ``dtype="bfloat16"``
+  for bf16-compute GI while the recon variables stay fp32;
+* encoder-decoder configs close over a fixed deterministic bank of
+  encoder frames (the stubbed audio frontend), so GI differentiates
+  through the encoder cross-attention too;
+* logits are the last-position next-token distribution, fp32 — exactly
+  the (n, n_classes) shape ``soft_ce_loss`` and ``Server._eval_fn``
+  already consume.
+
+Remat/bf16/kernel knobs ride on the ``ModelConfig`` (``remat``,
+``remat_attn_chunks``, ``dtype``, ``attn_impl``, ``wkv_impl``), so the GI
+while_loop body and the multi-version cohort LocalUpdate inherit them with
+no server-side changes. See docs/real_models.md.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.small import SmallModel
+
+
+def make_frames(cfg: ModelConfig, seed: int = 0) -> jax.Array:
+    """Deterministic (1, n_ctx, d_model) encoder-frame bank (audio stub)."""
+    assert cfg.encoder is not None
+    return 0.02 * jax.random.normal(
+        jax.random.PRNGKey(seed), (1, cfg.encoder.n_ctx, cfg.d_model),
+        jnp.float32)
+
+
+def lm_fl_model(cfg: ModelConfig, *, seq_len: int,
+                name: Optional[str] = None,
+                frames_seed: int = 0) -> SmallModel:
+    """Wrap ``cfg``'s transformer as a ``SmallModel`` for the FL server.
+
+    ``input_shape`` is (seq_len, d_model) — continuous soft embeddings —
+    and ``n_classes`` is the vocabulary, so ``GradientInverter.init_drec``
+    produces embedding-space recon variables and soft vocab labels with no
+    special-casing.
+    """
+    frames = make_frames(cfg, frames_seed) if cfg.is_encdec else None
+
+    def init(key):
+        return T.init_params(key, cfg)
+
+    def apply(params, x):
+        batch = {"input_embeds": x}
+        if frames is not None:
+            batch["frames"] = jnp.broadcast_to(
+                frames, (x.shape[0],) + frames.shape[1:]).astype(
+                    cfg.param_dtype)
+        logits, _aux = T.forward(params, cfg, batch)
+        return logits[:, -1, :].astype(jnp.float32)
+
+    return SmallModel(name or f"fl_{cfg.name}", init, apply,
+                      (seq_len, cfg.d_model), cfg.vocab_size, cfg=cfg)
+
+
+def embed_dataset(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Token sequences (n, S) -> fp32 embedding-space inputs (n, S, d).
+
+    The bridge's clients hold embedded data: FL clients train on their own
+    (token) corpus, but the server-side recon variable lives in embedding
+    space, so client datasets are embedded once up front with the *initial*
+    embedding table (a fixed, known quantity server-side).
+    """
+    return T.embed_tokens(params, cfg, tokens).astype(jnp.float32)

@@ -279,6 +279,29 @@ def direct_decode_attention(
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def train_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig,
+    *, causal: bool = True, window: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence attention for train/prefill, routed by ``cfg.attn_impl``:
+
+    * ``"chunked"`` — the pure-jnp online-softmax scan above (also the exact
+      CPU fallback, so configs carrying ``"flash"`` stay portable);
+    * ``"flash"``   — the Pallas fwd+bwd kernel
+      (``repro.kernels.flash_attention``); differentiable via its
+      custom_vjp, so the transformer LocalUpdate and GI differentiating
+      through it both hit the kernel.
+    """
+    if cfg.attn_impl not in ("chunked", "flash"):
+        raise ValueError(f"unknown attn_impl {cfg.attn_impl!r}")
+    if cfg.attn_impl == "flash" and jax.default_backend() != "cpu":
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             chunk=cfg.attn_chunk, unroll=cfg.probe_unroll,
+                             remat_chunks=cfg.remat_attn_chunks)
+
+
 def attention_fwd(
     p: Params,
     cfg: ModelConfig,
@@ -306,9 +329,7 @@ def attention_fwd(
         q = q.reshape(B, Sq, cfg.n_heads, cfg.head_dim)
         if cfg.qk_norm:
             q = rms_head_norm(p["q_norm"], q)
-        out = chunked_attention(q, k, v, causal=False, window=None,
-                                chunk=cfg.attn_chunk, unroll=cfg.probe_unroll,
-                                remat_chunks=cfg.remat_attn_chunks)
+        out = train_attention(q, k, v, cfg, causal=False, window=None)
         new_cache = cache
     else:
         q, k, v = _project_qkv(p, cfg, x, x)
@@ -335,9 +356,7 @@ def attention_fwd(
                 )
         else:
             new_cache = None
-            out = chunked_attention(q, k, v, causal=causal, window=window,
-                                    chunk=cfg.attn_chunk, unroll=cfg.probe_unroll,
-                                    remat_chunks=cfg.remat_attn_chunks)
+            out = train_attention(q, k, v, cfg, causal=causal, window=window)
     out = out.reshape(B, Sq, cfg.n_heads * cfg.head_dim)
     return out @ p["wo"], new_cache
 
@@ -741,7 +760,24 @@ def rwkv6_time_mix(
                          S + p["u"].astype(jnp.float32)[None, :, :, None] * a)
         S_new = wh[:, 0, :, :, None].astype(jnp.float32) * S + a
         out = out[:, None]  # (B,1,H,N)
+    elif cfg.wkv_impl == "pallas" and jax.default_backend() != "cpu":
+        # Pallas chunked kernel (repro.kernels.rwkv6_wkv) for the sequence
+        # outputs; its recompute-vjp makes this path differentiable. The
+        # kernel does not carry the final state out, but S_T has a closed
+        # form — sum_t (prod_{s>t} w_s) k_t v_t^T — so prefill-for-decode
+        # still hands decode a correct state.
+        from repro.kernels.rwkv6_wkv import wkv6
+        out = wkv6(rh, kh, vh, wh, p["u"]).astype(jnp.float32)
+        wf = jnp.flip(wh.astype(jnp.float32), axis=1)
+        cp = jnp.cumprod(wf, axis=1)
+        decay = jnp.flip(jnp.concatenate(
+            [jnp.ones_like(cp[:, :1]), cp[:, :-1]], axis=1), axis=1)
+        S_new = jnp.einsum("bthn,bthm->bhnm",
+                           kh.astype(jnp.float32) * decay,
+                           vh.astype(jnp.float32))
     else:
+        if cfg.wkv_impl not in ("scan", "pallas"):
+            raise ValueError(f"unknown wkv_impl {cfg.wkv_impl!r}")
         out, S_new = wkv6_scan(rh, kh, vh, wh, p["u"])
 
     out = out.reshape(B, T, d)

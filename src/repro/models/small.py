@@ -24,6 +24,11 @@ class SmallModel(NamedTuple):
     apply: Callable[[Any, jax.Array], jax.Array]
     input_shape: Tuple[int, ...]
     n_classes: int
+    # optional ModelConfig for transformer-backed models
+    # (repro.models.fl_bridge): carries the weight-sharding rules the
+    # server needs when the mesh has a model axis. None for the paper-scale
+    # models — they never model-shard.
+    cfg: Any = None
 
 
 def _dense(key, fan_in, shape):

@@ -49,13 +49,3 @@ def test_decode_launcher():
         env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=560)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "tok/s" in out.stdout
-
-
-def test_serve_shim_deprecated():
-    """repro.launch.serve stays importable for one release but warns."""
-    out = subprocess.run(
-        [sys.executable, "-W", "error::DeprecationWarning", "-c",
-         "import repro.launch.serve"],
-        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=120)
-    assert out.returncode != 0
-    assert "repro.launch.decode" in out.stderr

@@ -1,0 +1,147 @@
+"""Mixed-precision contracts for the real-model hot path.
+
+Two invariants the LLM-scale round relies on (docs/real_models.md):
+
+* bf16-compute GI: running the batched inverter on a bf16 transformer
+  evaluates the same Eq.-6 objective as fp32 within a pinned tolerance
+  (bf16 keeps fp32's exponent range, so the disparity — a mean of small
+  |diffs| — agrees to ~1%), and still optimizes it. The *trajectories*
+  diverge quickly (the objective is nonconvex and bf16 rounds every
+  gradient), so the pinned comparison is the deterministic iter-0
+  objective at identical init, not the final iterate.
+* compensation math is pinned to fp32: ``first_order_batch`` /
+  ``w_pred_batch`` / ``predict_future_global_batch`` return exactly
+  fp32 leaves even when the model (and hence the update trees) is bf16 —
+  the g (.) g (.) dw surrogate squares already-small entries and would
+  underflow in bf16's 8 mantissa bits.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import compensation
+from repro.core.client import LocalProgram, make_cohort_update
+from repro.core.gradient_inversion import GIConfig, GradientInverter
+from repro.models.fl_bridge import embed_dataset, lm_fl_model
+
+S, B = 4, 2
+PROGRAM = LocalProgram(steps=1, lr=0.2, momentum=0.0)
+
+
+def _tiny_cfg(dtype: str):
+    return get_config("qwen1_5_0_5b", reduced=True).with_(
+        n_layers=1, d_model=64, n_heads=2, n_kv_heads=2, d_head=32,
+        d_ff=128, vocab_size=128, dtype=dtype)
+
+
+def _run_gi(dtype: str):
+    cfg = _tiny_cfg(dtype)
+    model = lm_fl_model(cfg, seq_len=S)
+    w0 = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size // 4, size=(B, 1, S)))
+    x = jax.vmap(lambda t: embed_dataset(w0, cfg, t))(toks)
+    y = jnp.asarray(rng.integers(0, 20, size=(B, 1)), jnp.int32)
+    m = jnp.ones((B, 1), jnp.float32)
+    w_stale = jax.jit(make_cohort_update(model.apply, PROGRAM))(w0, x, y, m)
+    inv = GradientInverter(model.apply, model.input_shape, cfg.vocab_size,
+                           PROGRAM,
+                           GIConfig(n_rec=1, iters=25, lr=0.1,
+                                    init_scale=0.02))
+    w0s = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (B,) + l.shape), w0)
+    drec, info = inv.invert_batch(
+        w0s, w_stale, jax.random.split(jax.random.PRNGKey(7), B))
+    return drec, np.asarray(info["losses"], np.float64)
+
+
+@pytest.fixture(scope="module")
+def gi_runs():
+    return _run_gi("float32"), _run_gi("bfloat16")
+
+
+def test_bf16_gi_objective_matches_fp32(gi_runs):
+    """Identical init -> the iter-0 Eq.-6 objective agrees within 5%."""
+    (_, l32), (_, l16) = gi_runs
+    rel = np.abs(l16[:, 0] - l32[:, 0]) / l32[:, 0]
+    assert np.all(rel < 0.05), rel
+
+
+def test_bf16_gi_optimizes(gi_runs):
+    """Both precisions reduce their own disparity loss lane-by-lane."""
+    for _, losses in gi_runs:
+        assert np.all(losses[:, -1] < losses[:, 0]), losses[:, [0, -1]]
+
+
+def test_bf16_gi_recovers_finite_embeddings(gi_runs):
+    (_, _), (drec16, _) = gi_runs
+    for leaf in jax.tree_util.tree_leaves(drec16):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+# --------------------------------------------------------------------------- #
+# compensation.*_batch fp32 pinning
+# --------------------------------------------------------------------------- #
+
+
+def _bf16_tree(key, n=None):
+    ks = jax.random.split(key, 2)
+    shape = lambda s: s if n is None else (n,) + s
+    return {"a": (jax.random.normal(ks[0], shape((3, 4))) * 1e-3
+                  ).astype(jnp.bfloat16),
+            "b": (jax.random.normal(ks[1], shape((5,))) * 1e-3
+                  ).astype(jnp.bfloat16)}
+
+
+def _all_fp32(tree):
+    return all(l.dtype == jnp.float32
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def test_first_order_batch_outputs_fp32():
+    k = jax.random.PRNGKey(0)
+    out = compensation.first_order_batch(
+        _bf16_tree(k, n=3), _bf16_tree(jax.random.PRNGKey(1), n=3),
+        _bf16_tree(jax.random.PRNGKey(2), n=3))
+    assert _all_fp32(out)
+
+
+def test_w_pred_batch_outputs_fp32():
+    hist = [_bf16_tree(jax.random.PRNGKey(i)) for i in (3, 4)]
+    out = compensation.w_pred_batch(
+        _bf16_tree(jax.random.PRNGKey(5), n=2), hist,
+        _bf16_tree(jax.random.PRNGKey(6), n=2), taus=[1, 3])
+    assert _all_fp32(out)
+
+
+def test_predict_future_global_batch_outputs_fp32():
+    one = compensation.predict_future_global_batch(
+        [_bf16_tree(jax.random.PRNGKey(7))], taus=[2])
+    two = compensation.predict_future_global_batch(
+        [_bf16_tree(jax.random.PRNGKey(8)),
+         _bf16_tree(jax.random.PRNGKey(9))], taus=[2, 4])
+    assert _all_fp32(one) and _all_fp32(two)
+
+
+def test_first_order_batch_fp32_bitwise_vs_scalar():
+    """For fp32 inputs the pinned casts are no-ops: each lane of the
+    stacked form is bit-identical to the historic per-client path."""
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.float32), t)
+    ups = f32(_bf16_tree(jax.random.PRNGKey(10), n=3))
+    now = f32(_bf16_tree(jax.random.PRNGKey(11)))
+    base = f32(_bf16_tree(jax.random.PRNGKey(12), n=3))
+    batch = compensation.first_order_batch(
+        ups, jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (3,) + l.shape), now), base)
+    for i in range(3):
+        one = compensation.first_order(
+            jax.tree_util.tree_map(lambda l: l[i], ups), now,
+            jax.tree_util.tree_map(lambda l: l[i], base))
+        got = jax.tree_util.tree_map(lambda l: l[i], batch)
+        for a, b in zip(jax.tree_util.tree_leaves(one),
+                        jax.tree_util.tree_leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
