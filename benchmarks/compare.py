@@ -15,9 +15,14 @@ Gated rows (everything else is informational):
 * ``step/*``        — the fused aggregation round (multi-version cohort
   LocalUpdate + stacked FedAvg pipeline) vs the loop path at scattered base
   rounds, and VersionStore append/gather; FAILS on ``us_per_call``;
+* ``quant/*``       — the quantized upload wire format: dequant-fused vs
+  dequant-then-fp32 disparity value+grad on an int8 cohort payload (FAILS
+  on ``us_per_call``) and host quantizer+EF throughput (FAILS on
+  ``events_per_sec``);
 * ``serve/*``       — the streaming service in steady state: sustained
-  uploads/sec (FAILS like ``sim/engine_*`` on ``events_per_sec``) and p99
-  trigger-to-aggregate latency (FAILS on ``us_per_call``).
+  uploads/sec and int8 payload bytes/sec (both FAIL like ``sim/engine_*``
+  on ``events_per_sec``) and p99 trigger-to-aggregate latency (FAILS on
+  ``us_per_call``).
 
 ``--max-slowdown-factor`` defaults to 1.25 (the >25% gate). Slowdowns are
 **canary-normalized**: both JSONs carry ``calibration/*`` rows (fixed
@@ -51,7 +56,7 @@ import sys
 from typing import Any, Dict, List, Optional, Tuple
 
 GATED_PREFIXES = ("sim/engine_", "sim_scale/", "server/", "gi/", "step/",
-                  "serve/", "llm/")
+                  "quant/", "serve/", "llm/")
 
 # calibration canaries (benchmarks/run.py::calibrate): fixed reference
 # workloads whose baseline/fresh ratio measures machine-wide speed, which

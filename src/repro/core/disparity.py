@@ -22,8 +22,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantize import QuantizedTree
 from repro.kernels.fused_disparity import (masked_cosine_terms,
-                                           masked_l1_terms)
+                                           masked_cosine_terms_dq,
+                                           masked_l1_terms,
+                                           masked_l1_terms_dq)
 
 
 def tree_to_vector(tree: Any) -> jax.Array:
@@ -125,8 +128,14 @@ def l1_disparity(update_a: Any, update_b: Any, mask: Optional[jax.Array] = None
     boolean vector from ``repro.core.sparsify.topk_mask`` — this is the
     paper's sparsified GI objective (§3.3). Computed via the fused
     concat-free reduction terms (``repro.kernels.fused_disparity``).
+    ``update_b`` may be a quantized wire payload
+    (``core.quantize.QuantizedTree``) — the dequant-fused terms consume it
+    directly, so the fp32 target is never materialized.
     """
-    s, c = masked_l1_terms(update_a, update_b, mask)
+    if isinstance(update_b, QuantizedTree):
+        s, c = masked_l1_terms_dq(update_a, update_b, mask)
+    else:
+        s, c = masked_l1_terms(update_a, update_b, mask)
     if mask is None:
         return s / c                      # c = static coordinate total
     return s / jnp.maximum(c, 1.0)
@@ -139,9 +148,13 @@ def masked_cosine_distance(a: Any, b: Any,
     The one masked-cosine implementation: ``cosine_distance`` (Eq. 7) is the
     ``mask=None`` form and the sparsified GI cosine objective (§3.3) passes
     the top-K mask — both share these fused terms instead of re-deriving
-    their own mask handling.
+    their own mask handling. ``b`` may be a ``QuantizedTree`` payload (see
+    ``l1_disparity``).
     """
-    dot, na2, nb2 = masked_cosine_terms(a, b, mask)
+    if isinstance(b, QuantizedTree):
+        dot, na2, nb2 = masked_cosine_terms_dq(a, b, mask)
+    else:
+        dot, na2, nb2 = masked_cosine_terms(a, b, mask)
     return 1.0 - dot / jnp.maximum(jnp.sqrt(na2) * jnp.sqrt(nb2), 1e-12)
 
 

@@ -671,12 +671,20 @@ class GradientInverter:
         iters: Optional[Any] = None,
         segment_iters: Optional[int] = None,
         max_lanes: Optional[int] = None,
+        target_q: Optional[Any] = None,
     ) -> Tuple[Tuple[jax.Array, jax.Array], Dict[str, Any]]:
         """Batched inversion of B stale clients in ONE jitted call.
 
         Args:
           w_global_stale / w_stale: pytrees stacked on a leading (B,) axis —
             each client may come from a *different* base round.
+          target_q: optional stacked ``core.quantize.QuantizedTree`` wire
+            payload. When given it *replaces* ``w_stale - w_global_stale``
+            as the disparity target and the loss consumes it through the
+            dequant-fused terms — the fp32 target stack never exists. (The
+            GSPMD model-axis engine dequantizes it up front instead: its
+            boundary constraints are weight-tree sharding specs, which a
+            payload tree cannot carry.)
           keys: (B, 2) PRNG keys for cold-start D_rec initialization.
           masks: optional (B, n_params) boolean sparsification masks.
           inits: optional stacked warm-start D_rec ``(x (B, n_rec, ...),
@@ -708,7 +716,13 @@ class GradientInverter:
         ``segments`` / ``buckets``.
         """
         B = jax.tree_util.tree_leaves(w_stale)[0].shape[0]
-        target = tree_sub(w_stale, w_global_stale)
+        if target_q is not None:
+            # model-axis GSPMD engines constrain the target with weight-tree
+            # specs — dequantize up front there, consume fused everywhere else
+            target = (target_q.to_tree() if self.param_spec is not None
+                      else target_q)
+        else:
+            target = tree_sub(w_stale, w_global_stale)
 
         max_iters = int(self.cfg.iters)
         if iters is None:

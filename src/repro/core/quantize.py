@@ -1,0 +1,390 @@
+"""Quantized upload wire format with on-device error feedback (§ wire).
+
+Clients upload model *deltas*. At paper scale (PR 9's 0.5B-param bench)
+the fp32 wire format and the stacked fp32 cohort trees it turns into are
+the dominant byte cost of the whole stale path — ROADMAP item 3. This
+module makes compression a first-class axis of that path:
+
+* :class:`QuantConfig` — the knob set: ``bits`` (32 = exact identity,
+  8/4 = int wire formats), ``tile`` (coordinates per scale), stochastic
+  vs nearest rounding, error feedback on/off. ``bits=32`` short-circuits
+  every call site, so the default configuration is *bit-for-bit* the
+  pre-quantization repo (trajectory and digest tests pin this).
+* :func:`quantize_delta_stack` — host-side quantization of a stacked
+  cohort delta tree, exactly what the (simulated) clients would put on
+  the wire: per-leaf, per-``tile`` max-abs scales, stochastic rounding
+  driven by the same counter-based Philox construction as
+  ``sim.rand.job_uniforms`` (one stream per (client, round) upload —
+  deterministic and replayable no matter how the server batches
+  cohorts), and per-client **error-feedback accumulators**
+  (:class:`ErrorFeedback`): the residual ``delta - deq(quant(delta))``
+  is carried on-device and added to the next round's delta, so the
+  *running sum* of dequantized uploads tracks the true sum to within
+  one quantization step regardless of bitwidth.
+* :class:`QuantizedTree` — the registered-pytree payload (int8 leaves +
+  f32 per-tile scales) the server consumes *without* dequantizing:
+  ``kernels.fused_disparity`` has dequant-fused reduction terms, so the
+  GI while_loop's disparity never materializes an fp32 cohort tree.
+* ``quantize_leaf_jnp`` / ``dequant_flat`` — jit-friendly device-side
+  forms (deterministic nearest rounding) used by the ``VersionStore``'s
+  quantized ring rows and by the dequant-fused jnp fallbacks.
+
+int4 payloads are held as int8 on device (one nibble per byte — the HBM
+win over fp32 is already 4x) but counted *packed* on the wire
+(``bits/8`` bytes per coordinate), which is what the service's
+bytes-on-wire accounting reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QuantConfig", "QuantizedTree", "ErrorFeedback",
+           "quantize_delta_stack", "quantize_flat", "dequantize_flat_np",
+           "quantize_leaf_jnp", "dequant_flat", "quant_uniforms",
+           "upload_stream", "leaf_payload_bytes", "tree_payload_bytes"]
+
+# counter bits reserved per upload stream: each stream owns 2^64 Philox
+# counter blocks, the same construction as sim.rand (counter-based, so a
+# stream's values never depend on what other streams drew)
+_STREAM_SHIFT = 64
+
+_VALID_BITS = (4, 8, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Wire-format knobs. ``bits=32`` (the default) is an exact identity:
+    every call site guards on ``enabled`` and the fp32 path is untouched."""
+    bits: int = 32          # 32 = no quantization | 8 | 4
+    # coordinates per scale. 128 (the default) makes per-tile scales map
+    # 1:1 onto the Pallas kernels' 128-lane rows — other tiles are legal
+    # but take the jnp fallback in the dequant-fused terms.
+    tile: int = 128
+    stochastic: bool = True     # Philox stochastic rounding (unbiased)
+    error_feedback: bool = True  # carry the per-client residual forward
+    seed: int = 0               # Philox key for the rounding streams
+    # quantize the VersionStore's device ring rows too (~4x smaller
+    # resident history at int8; deterministic nearest rounding). 32 keeps
+    # the store exact — the default, since history rows feed base-param
+    # gathers.
+    store_bits: int = 32
+
+    def __post_init__(self):
+        if self.bits not in _VALID_BITS:
+            raise ValueError(f"bits must be one of {_VALID_BITS}, "
+                             f"got {self.bits}")
+        if self.store_bits not in _VALID_BITS:
+            raise ValueError(f"store_bits must be one of {_VALID_BITS}, "
+                             f"got {self.store_bits}")
+        if self.tile < 1:
+            raise ValueError(f"tile must be >= 1, got {self.tile}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.bits < 32
+
+    @property
+    def qmax(self) -> int:
+        """Largest magnitude the payload may carry (symmetric range)."""
+        return (1 << (self.bits - 1)) - 1
+
+
+def _n_tiles(n: int, tile: int) -> int:
+    return -(-int(n) // int(tile))
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (int(bits) - 1)) - 1
+
+
+def leaf_payload_bytes(n: int, cfg: QuantConfig) -> int:
+    """Wire bytes for one flat leaf of ``n`` coordinates: packed payload
+    (``bits/8`` per coordinate, nibbles packed at int4) plus one f32
+    scale per tile. fp32 leaves are just ``4n``."""
+    if not cfg.enabled:
+        return 4 * int(n)
+    return (int(n) * cfg.bits + 7) // 8 + 4 * _n_tiles(n, cfg.tile)
+
+
+def tree_payload_bytes(tree: Any, cfg: QuantConfig) -> int:
+    """Wire bytes for one upload of a (template) pytree."""
+    return sum(leaf_payload_bytes(int(np.prod(jnp.shape(l)) or 1), cfg)
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+# --------------------------------------------------------------------------- #
+# Philox rounding streams (the sim.rand construction, own counter layout)
+# --------------------------------------------------------------------------- #
+
+
+def upload_stream(client: int, version: int) -> int:
+    """Stream id of one upload: unique per (client, round-consumed).
+
+    Purely a function of the upload's identity — not of cohort batching,
+    wave slicing or aggregation order — so a replay quantizes every
+    upload bit-for-bit identically (the same property job ids give
+    ``sim.rand.job_uniforms``)."""
+    return (int(client) << 32) | (int(version) & 0xFFFFFFFF)
+
+
+def quant_uniforms(seed: int, stream: int, n: int) -> np.ndarray:
+    """``(n,)`` float64 uniforms for one upload's stochastic rounding.
+
+    Counter-based Philox keyed on ``seed`` with the counter pinned to the
+    stream id — no sequential state, so draws are independent of every
+    other upload and bitwise reproducible."""
+    bg = np.random.Philox(key=int(seed),
+                          counter=int(stream) << _STREAM_SHIFT)
+    return np.random.Generator(bg).random(int(n))
+
+
+# --------------------------------------------------------------------------- #
+# Host (client-side) quantizer — numpy, the wire semantics
+# --------------------------------------------------------------------------- #
+
+
+def quantize_flat(vec: np.ndarray, bits: int, tile: int,
+                  uniforms: Optional[np.ndarray] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Quantize one flat f32 vector: per-tile max-abs scales, stochastic
+    rounding when ``uniforms`` is given (``floor(x/s + u)`` — unbiased),
+    round-to-nearest-even otherwise. Returns ``(q int8 (n,), s f32 (t,))``;
+    all-zero tiles get scale 0 (and payload 0)."""
+    vec = np.asarray(vec, np.float32).reshape(-1)
+    n = vec.shape[0]
+    t = _n_tiles(n, tile)
+    pad = t * tile - n
+    xp = np.pad(vec, (0, pad)) if pad else vec
+    xt = xp.reshape(t, tile)
+    qmax = float(_qmax(bits))
+    s = (np.abs(xt).max(axis=1) / qmax).astype(np.float32)
+    safe = np.where(s > 0, s, 1.0).astype(np.float32)
+    y = np.where(s[:, None] > 0, xt / safe[:, None], 0.0)
+    if uniforms is None:
+        q = np.rint(y)
+    else:
+        u = np.asarray(uniforms, np.float64).reshape(-1)
+        u = np.pad(u, (0, pad)) if pad else u
+        q = np.floor(y.astype(np.float64) + u.reshape(t, tile))
+    q = np.clip(q, -qmax, qmax).astype(np.int8)
+    return q.reshape(-1)[:n], s
+
+
+def dequantize_flat_np(q: np.ndarray, s: np.ndarray, tile: int) -> np.ndarray:
+    """Host inverse of :func:`quantize_flat` (f32)."""
+    q = np.asarray(q, np.int8).reshape(-1)
+    n = q.shape[0]
+    t = s.shape[0]
+    pad = t * tile - n
+    qf = (np.pad(q, (0, pad)) if pad else q).astype(np.float32)
+    x = qf.reshape(t, tile) * np.asarray(s, np.float32)[:, None]
+    return x.reshape(-1)[:n]
+
+
+# --------------------------------------------------------------------------- #
+# Device (jnp) forms — jit-friendly, deterministic rounding
+# --------------------------------------------------------------------------- #
+
+
+def quantize_leaf_jnp(x: jax.Array, tile: int, bits: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """jnp twin of :func:`quantize_flat` with nearest rounding (used by the
+    VersionStore's quantized ring — no rounding stream on the read/write
+    hot path). ``x`` is a flat f32 vector."""
+    n = x.shape[-1]
+    t = _n_tiles(n, tile)
+    pad = t * tile - n
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    xt = xp.reshape(t, tile)
+    qmax = float(_qmax(bits))
+    s = (jnp.max(jnp.abs(xt), axis=-1) / qmax).astype(jnp.float32)
+    safe = jnp.where(s > 0, s, 1.0)
+    y = jnp.where(s[:, None] > 0, xt / safe[:, None], 0.0)
+    q = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    return q.reshape(-1)[:n], s
+
+
+def dequant_flat(q: jax.Array, s: jax.Array, tile: int) -> jax.Array:
+    """``q * s`` over tiles, elementwise jnp (fuses into whatever reduction
+    consumes it under jit — no fp32 buffer unless the consumer keeps one).
+    Handles arbitrary leading batch dims (``(..., n)`` with ``(..., t)``
+    scales)."""
+    n = q.shape[-1]
+    t = s.shape[-1]
+    pad = t * tile - n
+    qf = q.astype(jnp.float32)
+    if pad:
+        qf = jnp.pad(qf, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    x = qf.reshape(q.shape[:-1] + (t, tile)) * s[..., None]
+    x = x.reshape(q.shape[:-1] + (t * tile,))
+    return x[..., :n] if pad else x
+
+
+# --------------------------------------------------------------------------- #
+# The wire payload as a pytree
+# --------------------------------------------------------------------------- #
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedTree:
+    """A quantized pytree payload: per-leaf flat int8 arrays (``(n,)``, or
+    ``(B, n)`` stacked) plus per-tile f32 scales (``(t,)`` / ``(B, t)``).
+
+    Registered as a pytree whose children are the payload and scale
+    arrays, so it flows through ``vmap``, ``tree_index_select``,
+    ``tree_pad_leading`` and the GI lane machinery exactly like an fp32
+    target tree — the dequant-fused disparity terms consume it directly.
+    ``bits``/``tile`` and the original tree structure ride in the aux data
+    (static under tracing)."""
+
+    def __init__(self, q: Sequence[jax.Array], s: Sequence[jax.Array],
+                 bits: int, tile: int, treedef, shapes):
+        self.q = list(q)
+        self.s = list(s)
+        self.bits = bits
+        self.tile = tile
+        self.treedef = treedef
+        self.shapes = tuple(tuple(sh) for sh in shapes)
+
+    def tree_flatten(self):
+        return ((tuple(self.q), tuple(self.s)),
+                (self.bits, self.tile, self.treedef, self.shapes))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, s = children
+        return cls(q, s, *aux)
+
+    # -- consumption ---------------------------------------------------- #
+    def dequant_leaves(self) -> List[jax.Array]:
+        """Flat f32 leaves (elementwise; fuses into the consumer)."""
+        return [dequant_flat(q, s, self.tile)
+                for q, s in zip(self.q, self.s)]
+
+    def to_tree(self) -> Any:
+        """Materialize the fp32 pytree (leading batch dims preserved) —
+        the dequant-then-fp32 path the fused terms exist to avoid; used
+        by references, tests and the GSPMD model-axis fallback."""
+        leaves = [d.reshape(d.shape[:-1] + sh)
+                  for d, sh in zip(self.dequant_leaves(), self.shapes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    @property
+    def wire_bytes_per_row(self) -> int:
+        """Wire bytes of ONE upload (one batch row): packed payload +
+        scales, per leaf."""
+        cfg = QuantConfig(bits=self.bits, tile=self.tile)
+        return sum(leaf_payload_bytes(q.shape[-1], cfg) for q in self.q)
+
+
+# --------------------------------------------------------------------------- #
+# Error feedback
+# --------------------------------------------------------------------------- #
+
+
+class ErrorFeedback:
+    """Per-client quantization residual accumulators (host-resident, like
+    ``sparsify.WarmStartCache``): ``e' = (delta + e) - deq(quant(delta + e))``.
+
+    The residual is bounded by one quantization step per coordinate, so
+    the running mean of a client's dequantized uploads converges to the
+    mean of its true deltas at O(1/T) — the property the drain tests pin.
+    """
+
+    def __init__(self):
+        self._resid: Dict[int, np.ndarray] = {}
+
+    def __len__(self) -> int:
+        return len(self._resid)
+
+    def residual(self, client: int) -> Optional[np.ndarray]:
+        return self._resid.get(int(client))
+
+    def update(self, client: int, resid: np.ndarray) -> None:
+        self._resid[int(client)] = np.asarray(resid, np.float32)
+
+    def residual_norm(self, client: int) -> float:
+        r = self.residual(client)
+        return 0.0 if r is None else float(np.abs(r).max())
+
+    def reset(self) -> None:
+        self._resid.clear()
+
+
+# --------------------------------------------------------------------------- #
+# The upload path: stacked cohort deltas -> wire payload + what the
+# server reconstructs
+# --------------------------------------------------------------------------- #
+
+
+def quantize_delta_stack(delta_stack: Any, clients: Sequence[int],
+                         version: int, cfg: QuantConfig,
+                         ef: Optional[ErrorFeedback] = None
+                         ) -> Tuple[QuantizedTree, Any, int]:
+    """Quantize a stacked ``(B, ...)`` cohort delta tree as B uploads.
+
+    Row ``b`` is client ``clients[b]``'s upload consumed at round
+    ``version``: its error-feedback residual (when ``ef`` is given and
+    ``cfg.error_feedback``) is folded in, the (client, version) Philox
+    stream drives stochastic rounding, and the new residual is written
+    back. Returns ``(payload, dequantized delta tree, wire bytes)`` —
+    the dequantized tree is what the server's fp32 stages see; the
+    payload is what the GI target consumes dequant-fused.
+
+    Requires ``cfg.enabled`` — callers guard with ``bits < 32`` so the
+    identity path never converts to host.
+    """
+    if not cfg.enabled:
+        raise ValueError("quantize_delta_stack requires bits < 32 "
+                         "(bits=32 is the identity — guard at the caller)")
+    leaves, treedef = jax.tree_util.tree_flatten(delta_stack)
+    B = leaves[0].shape[0]
+    if len(clients) != B:
+        raise ValueError(f"{len(clients)} clients for a {B}-row stack")
+    shapes = [tuple(l.shape[1:]) for l in leaves]
+    host = [np.asarray(l, np.float32).reshape(B, -1) for l in leaves]
+    sizes = [h.shape[1] for h in host]
+    n_total = int(sum(sizes))
+    use_ef = cfg.error_feedback and ef is not None
+
+    q_out = [np.zeros((B, n), np.int8) for n in sizes]
+    s_out = [np.zeros((B, _n_tiles(n, cfg.tile)), np.float32)
+             for n in sizes]
+    deq_out = [np.zeros((B, n), np.float32) for n in sizes]
+
+    for b in range(B):
+        c = int(clients[b])
+        vec = np.concatenate([h[b] for h in host])
+        if use_ef:
+            r = ef.residual(c)
+            if r is not None:
+                vec = vec + r
+        u = (quant_uniforms(cfg.seed, upload_stream(c, version), n_total)
+             if cfg.stochastic else None)
+        deq_vec = np.empty((n_total,), np.float32)
+        off = 0
+        for li, n in enumerate(sizes):
+            useg = None if u is None else u[off:off + n]
+            q, s = quantize_flat(vec[off:off + n], cfg.bits, cfg.tile, useg)
+            q_out[li][b] = q
+            s_out[li][b] = s
+            d = dequantize_flat_np(q, s, cfg.tile)
+            deq_out[li][b] = d
+            deq_vec[off:off + n] = d
+            off += n
+        if use_ef:
+            ef.update(c, vec - deq_vec)
+
+    qt = QuantizedTree([jnp.asarray(q) for q in q_out],
+                       [jnp.asarray(s) for s in s_out],
+                       cfg.bits, cfg.tile, treedef, shapes)
+    deq_tree = jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(d.reshape((B,) + sh))
+                  for d, sh in zip(deq_out, shapes)])
+    return qt, deq_tree, B * qt.wire_bytes_per_row

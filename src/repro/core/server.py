@@ -53,6 +53,8 @@ from repro.core.disparity import (tree_concat_leading, tree_index_select,
                                   tree_pad_leading, tree_scale, tree_stack,
                                   tree_sub, tree_take_leading)
 from repro.core.gradient_inversion import GIConfig, GradientInverter
+from repro.core.quantize import (ErrorFeedback, QuantConfig,
+                                 quantize_delta_stack, tree_payload_bytes)
 from repro.core.sparsify import WarmStartCache, topk_mask_batch
 from repro.core.switching import SwitchMonitor
 from repro.core.uniqueness import is_unique_batch
@@ -96,6 +98,13 @@ class FLConfig:
     server_lr: float = 1.0
     eval_every: int = 1
     seed: int = 0
+    # upload wire format (core.quantize): bits=32 (default) is an exact
+    # identity — NO quantization code touches the round. bits=8/4 quantizes
+    # every client upload (fresh and stale deltas) with per-tile scales,
+    # stochastic Philox rounding and per-client error feedback; the GI
+    # target is consumed dequant-fused. quant.store_bits additionally
+    # quantizes the VersionStore's device ring rows.
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
     # weight-sharding rule set (repro.launch.sharding.param_specs modes)
     # used when the mesh carries a model axis; "tp" shards attention heads /
     # FFN hidden / vocab on `model`. Ignored on (pod, data)-only meshes.
@@ -155,7 +164,10 @@ class Server:
         # list API (len / indexing / iteration) for every consumer
         self.history = VersionStore(self.global_params,
                                     capacity=cfg.version_capacity,
-                                    spill=cfg.version_spill)
+                                    spill=cfg.version_spill,
+                                    quant=(cfg.quant if
+                                           cfg.quant.store_bits < 32
+                                           else None))
         self.history.append(self.global_params)    # version 0
 
         self.cx = client_x if variant_stream is None else variant_stream.xs
@@ -188,6 +200,14 @@ class Server:
             mesh=mesh, param_spec=self._wspec)
         self.warm = WarmStartCache()
         self.monitor = SwitchMonitor()
+        # upload wire format: per-client error-feedback residuals plus a
+        # running bytes-on-wire total (exact packed payload accounting at
+        # bits<32, 4 bytes/coord at the default fp32 — so the counter is
+        # comparable across bitwidths)
+        self._ef = ErrorFeedback()
+        self.wire_bytes = 0
+        self._upload_nbytes = tree_payload_bytes(self.global_params,
+                                                 cfg.quant)
         # due_round -> [(scheduled_round, client, w_hat, w_stale), ...]
         self._pending_checks: Dict[int, List[Tuple[int, int, Any, Any]]] = {}
         self.gi_log: List[Dict[str, Any]] = []
@@ -461,6 +481,14 @@ class Server:
                 xs, ys, ms = self._client_stack(fast)
                 w_fast = self._run_cohort(self.global_params, xs, ys, ms)
                 fast_stack = _sp.fence(tree_sub(w_fast, self.global_params))
+            if cfg.quant.enabled:
+                # fresh uploads cross the same wire: the server aggregates
+                # the dequantized deltas, the clients carry the residuals
+                _, fast_stack, nbytes = quantize_delta_stack(
+                    fast_stack, fast, t, cfg.quant, self._ef)
+                self.wire_bytes += nbytes
+            else:
+                self.wire_bytes += len(fast) * self._upload_nbytes
 
         gi_iters = 0
         stale_stack = None
@@ -490,6 +518,20 @@ class Server:
                                                            ys, ms)
                     delta_stack = _sp.fence(
                         tree_sub(w_stale_stack, w_base_stack))
+                qdelta = None
+                if cfg.quant.enabled:
+                    # stale uploads are quantized deltas too: downstream
+                    # fp32 stages (uniqueness, top-K, compensation, FedAvg)
+                    # see the dequantized reconstruction, while the GI
+                    # target consumes the payload itself dequant-fused
+                    qdelta, delta_stack, nbytes = quantize_delta_stack(
+                        delta_stack, ids, t, cfg.quant, self._ef)
+                    self.wire_bytes += nbytes
+                    w_stale_stack = jax.tree_util.tree_map(
+                        lambda b, d: b.astype(jnp.float32) + d,
+                        w_base_stack, delta_stack)
+                else:
+                    self.wire_bytes += S * self._upload_nbytes
                 if strat in ("unweighted", "asyn_tiers"):
                     stale_stack = delta_stack
                 elif strat == "weighted":
@@ -507,7 +549,7 @@ class Server:
                 elif strat == "ours":
                     stale_stack, iters = self._ours_update_fused(
                         t, ids, taus, w_stale_stack, w_base_stack,
-                        delta_stack, fast_stack)
+                        delta_stack, fast_stack, qdelta=qdelta)
                     gi_iters = int(iters.sum())
 
         parts = [p for p in (fast_stack, stale_stack) if p is not None]
@@ -534,7 +576,8 @@ class Server:
 
     def _ours_update_fused(self, t: int, ids: List[int], taus: np.ndarray,
                            w_stale_stack, w_base_stack, delta_stack,
-                           fast_stack) -> Tuple[Any, np.ndarray]:
+                           fast_stack, qdelta=None
+                           ) -> Tuple[Any, np.ndarray]:
         """The paper's pipeline over the stacked stale cohort, stacked in
         AND out: uniqueness, masks, warm starts, inversion and the unstale
         estimates all operate on leading-axis tensors; the recovered deltas
@@ -588,7 +631,9 @@ class Server:
                     inits, flags = (xs, ys), jnp.asarray(warm)
             drec, info = self.inverter.invert_batch(
                 w_base_g, w_stale_g, keys,
-                masks=masks, inits=inits, init_flags=flags)
+                masks=masks, inits=inits, init_flags=flags,
+                target_q=(None if qdelta is None
+                          else tree_index_select(qdelta, rows)))
             w_hat_stack = _sp.fence(self.inverter.estimate_unstale_batch(
                 self.global_params, drec))
         iters_used = np.asarray(info["iters_used"])
@@ -691,9 +736,42 @@ class Server:
                 tree_sub(jax.tree_util.tree_map(lambda a: a[j], w_fast),
                          self.global_params)
                 for j in range(len(fast))]
+            if cfg.quant.enabled:
+                # same wire as the fused round: quantize the fresh uploads
+                # (identical Philox streams + per-client residuals, so the
+                # two paths see the same quantized bytes)
+                _, fdeq, nbytes = quantize_delta_stack(
+                    tree_stack(fast_updates), fast, t, cfg.quant, self._ef)
+                self.wire_bytes += nbytes
+                fast_updates = [
+                    jax.tree_util.tree_map(lambda a: a[j], fdeq)
+                    for j in range(len(fast))]
+            else:
+                self.wire_bytes += len(fast) * self._upload_nbytes
             fast_counts = [float(self._counts[i]) for i in fast]
         else:
             fast_updates, fast_counts = [], []
+
+        if slow_deliveries and cfg.strategy != "unstale" \
+                and not cfg.quant.enabled:
+            self.wire_bytes += len(slow_deliveries) * self._upload_nbytes
+        if slow_deliveries and cfg.quant.enabled and cfg.strategy != "unstale":
+            # stale uploads: replace each delivered w_stale with the
+            # dequantized reconstruction base + deq(quant(delta)), so every
+            # downstream per-client stage sees what actually crossed the wire
+            ids_d = list(slow_deliveries.keys())
+            dstack = tree_stack([tree_sub(slow_deliveries[i][0],
+                                          slow_deliveries[i][1])
+                                 for i in ids_d])
+            _, ddeq, nbytes = quantize_delta_stack(
+                dstack, ids_d, t, cfg.quant, self._ef)
+            self.wire_bytes += nbytes
+            for j, i in enumerate(ids_d):
+                w_base = slow_deliveries[i][1]
+                w_q = jax.tree_util.tree_map(
+                    lambda b, d: b.astype(jnp.float32) + d[j],
+                    w_base, ddeq)
+                slow_deliveries[i] = (w_q, w_base, slow_deliveries[i][2])
 
         updates = list(fast_updates)
         weights = list(fast_counts)
@@ -915,6 +993,8 @@ class Server:
             gi["last"] = dict(self._last_gi)
         return {"strategy": self.cfg.strategy,
                 "versions": len(self.metrics),
+                "quant_bits": int(self.cfg.quant.bits),
+                "wire_bytes": int(self.wire_bytes),
                 "gi": gi}
 
     # ------------------------------------------------------------------ #

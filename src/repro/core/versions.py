@@ -29,33 +29,54 @@ Indexing mirrors the historic list API (``len``, ``store[v]``, negative
 indices, iteration) so every consumer — ``compute_deliveries``,
 ``w_pred``'s two-snapshot extrapolation, the pending E1/E2 checks, the sim
 bridge's version alignment assert — works unchanged.
+
+With ``quant`` set (``core.quantize.QuantConfig`` with ``store_bits < 32``)
+the ring holds **quantized** rows instead: per-leaf flat int8 payloads plus
+per-tile f32 scales, quantized inside the append jit with deterministic
+nearest rounding and dequantized on every read. At int8 the device-resident
+history shrinks ~4x (the ROADMAP's million-user target multiplies this by
+``capacity``). Reads are *lossy* (one quantization step per coordinate) —
+this is an explicit opt-in trade, documented in docs/compression.md; the
+default ``store_bits=32`` keeps the exact ring, and spill/gather semantics
+are unchanged either way (spilled rows hold the quantized payload, so
+spilled reads equal in-window reads bit-for-bit).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, Optional, Sequence
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantize import (QuantConfig, dequant_flat, leaf_payload_bytes,
+                                 quantize_leaf_jnp)
+
 
 class VersionStore:
     """Ring buffer of global-param versions with host spill for the tail."""
 
-    def __init__(self, template: Any, capacity: int = 64, spill: bool = True):
+    def __init__(self, template: Any, capacity: int = 64, spill: bool = True,
+                 quant: Optional[QuantConfig] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
         self.spill = bool(spill)
+        self.quant = quant if (quant is not None and quant.store_bits < 32) \
+            else None
         self._n = 0
         self._spilled: Dict[int, Any] = {}      # version -> host (np) pytree
+        # donation updates the ring in place (no-op + warning on CPU hosts,
+        # so only donate off-CPU — same policy as the segmented GI executor)
+        donate_ok = jax.default_backend() != "cpu"
+        if self.quant is not None:
+            self._init_quant(template, donate_ok)
+            return
         self._ring = jax.tree_util.tree_map(
             lambda l: jnp.zeros((self.capacity,) + tuple(jnp.shape(l)),
                                 jnp.asarray(l).dtype), template)
-        # donation updates the ring in place (no-op + warning on CPU hosts,
-        # so only donate off-CPU — same policy as the segmented GI executor)
-        donate = () if jax.default_backend() == "cpu" else (0,)
+        donate = (0,) if donate_ok else ()
 
         def _append(ring, params, slot):
             return jax.tree_util.tree_map(
@@ -63,6 +84,47 @@ class VersionStore:
                     b, p.astype(b.dtype), slot, 0), ring, params)
 
         self._append_fn = jax.jit(_append, donate_argnums=donate)
+
+    def _init_quant(self, template: Any, donate_ok: bool) -> None:
+        """Quantized-ring layout: parallel per-leaf flat payload and scale
+        rings (int8 ``(capacity, n)`` + f32 ``(capacity, tiles)``)."""
+        q = self.quant
+        leaves, self._treedef = jax.tree_util.tree_flatten(template)
+        self._shapes: List[Tuple[int, ...]] = [tuple(jnp.shape(l))
+                                               for l in leaves]
+        self._dtypes = [jnp.asarray(l).dtype for l in leaves]
+        self._sizes = [int(np.prod(sh) or 1) for sh in self._shapes]
+        tiles = [-(-n // q.tile) for n in self._sizes]
+        self._qring = [jnp.zeros((self.capacity, n), jnp.int8)
+                       for n in self._sizes]
+        self._sring = [jnp.zeros((self.capacity, tt), jnp.float32)
+                       for tt in tiles]
+        bits, tile = q.store_bits, q.tile
+        donate = (0, 1) if donate_ok else ()
+
+        def _append(qring, sring, params, slot):
+            qs, ss = [], []
+            for qb, sb, p in zip(qring, sring,
+                                 jax.tree_util.tree_leaves(params)):
+                qq, s = quantize_leaf_jnp(
+                    p.astype(jnp.float32).reshape(-1), tile, bits)
+                qs.append(jax.lax.dynamic_update_index_in_dim(
+                    qb, qq, slot, 0))
+                ss.append(jax.lax.dynamic_update_index_in_dim(
+                    sb, s, slot, 0))
+            return qs, ss
+
+        self._append_fn = jax.jit(_append, donate_argnums=donate)
+
+    def _deq_tree(self, q_leaves, s_leaves, batch_shape: Tuple[int, ...]
+                  ) -> Any:
+        """Dequantize flat ring rows back into the template structure."""
+        out = []
+        for qq, s, sh, dt in zip(q_leaves, s_leaves, self._shapes,
+                                 self._dtypes):
+            x = dequant_flat(qq, s, self.quant.tile)
+            out.append(x.reshape(batch_shape + sh).astype(dt))
+        return jax.tree_util.tree_unflatten(self._treedef, out)
 
     # ------------------------------------------------------------------ #
     def __len__(self) -> int:
@@ -80,6 +142,9 @@ class VersionStore:
     @property
     def device_bytes(self) -> int:
         """Bytes held by the device ring — constant once constructed."""
+        if self.quant is not None:
+            return sum(l.size * l.dtype.itemsize
+                       for l in self._qring + self._sring)
         return sum(l.size * l.dtype.itemsize
                    for l in jax.tree_util.tree_leaves(self._ring))
 
@@ -90,11 +155,22 @@ class VersionStore:
         slot = v % self.capacity
         if v >= self.capacity and self.spill:
             # the row being overwritten holds version v - capacity: copy it
-            # to host first so old versions stay exactly recoverable
-            self._spilled[v - self.capacity] = jax.tree_util.tree_map(
-                lambda b: np.asarray(b[slot]), self._ring)
-        self._ring = self._append_fn(self._ring, params,
-                                     jnp.asarray(slot, jnp.int32))
+            # to host first so old versions stay exactly recoverable (the
+            # quantized ring spills its payload rows — a spilled read equals
+            # the in-window read it replaces, bit for bit)
+            if self.quant is not None:
+                self._spilled[v - self.capacity] = (
+                    [np.asarray(b[slot]) for b in self._qring],
+                    [np.asarray(b[slot]) for b in self._sring])
+            else:
+                self._spilled[v - self.capacity] = jax.tree_util.tree_map(
+                    lambda b: np.asarray(b[slot]), self._ring)
+        if self.quant is not None:
+            self._qring, self._sring = self._append_fn(
+                self._qring, self._sring, params, jnp.asarray(slot, jnp.int32))
+        else:
+            self._ring = self._append_fn(self._ring, params,
+                                         jnp.asarray(slot, jnp.int32))
         self._n += 1
         return v
 
@@ -110,12 +186,19 @@ class VersionStore:
         v = self._check(v)
         if v >= self.window_start:
             slot = v % self.capacity
+            if self.quant is not None:
+                return self._deq_tree([b[slot] for b in self._qring],
+                                      [b[slot] for b in self._sring], ())
             return jax.tree_util.tree_map(lambda b: b[slot], self._ring)
         host = self._spilled.get(v)
         if host is None:
             raise KeyError(
                 f"version {v} was evicted (capacity {self.capacity}, "
                 f"spill disabled)")
+        if self.quant is not None:
+            qs, ss = host
+            return self._deq_tree([jnp.asarray(q) for q in qs],
+                                  [jnp.asarray(s) for s in ss], ())
         return jax.tree_util.tree_map(jnp.asarray, host)
 
     def __iter__(self) -> Iterator[Any]:
@@ -130,7 +213,10 @@ class VersionStore:
         spilled rows are stitched in exactly from the host copies with one
         scatter per leaf. The result rows are bit-for-bit the params
         appended as those versions — the contract the fused aggregation
-        round's equivalence oracle rests on.
+        round's equivalence oracle rests on. (With a quantized ring the
+        rows are the *dequantized* payloads instead — still identical
+        across in-window/spilled reads and across repeated gathers, but
+        one deterministic quantization step away from what was appended.)
         """
         vs = np.asarray(versions, np.int64).reshape(-1)
         if vs.size and (vs.min() < 0 or vs.max() >= self._n):
@@ -138,15 +224,29 @@ class VersionStore:
         ws = self.window_start
         slots = jnp.asarray(np.where(vs >= ws, vs % self.capacity, 0)
                             .astype(np.int32))
-        out = jax.tree_util.tree_map(
-            lambda b: jnp.take(b, slots, axis=0), self._ring)
         old = np.flatnonzero(vs < ws)
         if old.size:
-            missing = [int(vs[r]) for r in old if int(vs[r]) not in self._spilled]
+            missing = [int(vs[r]) for r in old
+                       if int(vs[r]) not in self._spilled]
             if missing:
                 raise KeyError(
                     f"versions {missing} were evicted (capacity "
                     f"{self.capacity}, spill disabled)")
+        if self.quant is not None:
+            qrows = [jnp.take(b, slots, axis=0) for b in self._qring]
+            srows = [jnp.take(b, slots, axis=0) for b in self._sring]
+            if old.size:
+                rows = jnp.asarray(old)
+                host = [self._spilled[int(vs[r])] for r in old]
+                for li in range(len(qrows)):
+                    hq = jnp.asarray(np.stack([h[0][li] for h in host]))
+                    hs = jnp.asarray(np.stack([h[1][li] for h in host]))
+                    qrows[li] = qrows[li].at[rows].set(hq)
+                    srows[li] = srows[li].at[rows].set(hs)
+            return self._deq_tree(qrows, srows, (int(vs.size),))
+        out = jax.tree_util.tree_map(
+            lambda b: jnp.take(b, slots, axis=0), self._ring)
+        if old.size:
             rows = jnp.asarray(old)
             host = [self._spilled[int(vs[r])] for r in old]
             stacked_old = jax.tree_util.tree_map(

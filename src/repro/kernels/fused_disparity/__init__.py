@@ -1,6 +1,10 @@
 from repro.kernels.fused_disparity.kernel import (  # noqa: F401
-    l1_terms_pallas, masked_cosine_terms_pallas, masked_l1_terms_pallas)
+    l1_terms_dq_pallas, l1_terms_pallas, masked_cosine_terms_dq_pallas,
+    masked_cosine_terms_pallas, masked_l1_terms_dq_pallas,
+    masked_l1_terms_pallas)
 from repro.kernels.fused_disparity.ops import (  # noqa: F401
-    masked_cosine_terms, masked_l1_terms)
+    masked_cosine_terms, masked_cosine_terms_dq, masked_l1_terms,
+    masked_l1_terms_dq)
 from repro.kernels.fused_disparity.ref import (  # noqa: F401
-    cosine_distance_reference, l1_disparity_reference)
+    cosine_distance_dequant_reference, cosine_distance_reference,
+    l1_disparity_dequant_reference, l1_disparity_reference)

@@ -68,6 +68,45 @@ def _cos_kernel_nomask(a_ref, b_ref, d_ref, na_ref, nb_ref):
     nb_ref[0, 0] = jnp.sum(b * b)
 
 
+# --------------------------------------------------------------------------- #
+# Dequant-fused variants: the b operand arrives as an int8 payload tile plus
+# one f32 scale per 128-lane row (core.quantize tile == LANES), and q*s is
+# reconstructed in-register — the quantized GI target never exists as an
+# fp32 buffer in HBM. int8 rows are a quarter of the f32 read traffic, which
+# is the point at B=128 cohorts.
+# --------------------------------------------------------------------------- #
+
+
+def _l1_dq_kernel(a_ref, q_ref, s_ref, m_ref, s_out, c_out):
+    b = q_ref[...].astype(jnp.float32) * s_ref[...]   # (br,128) * (br,1)
+    d = jnp.abs(a_ref[...] - b)
+    m = m_ref[...]
+    s_out[0, 0] = jnp.sum(d * m)
+    c_out[0, 0] = jnp.sum(m)
+
+
+def _l1_dq_kernel_nomask(a_ref, q_ref, s_ref, s_out):
+    b = q_ref[...].astype(jnp.float32) * s_ref[...]
+    s_out[0, 0] = jnp.sum(jnp.abs(a_ref[...] - b))
+
+
+def _cos_dq_kernel(a_ref, q_ref, s_ref, m_ref, d_ref, na_ref, nb_ref):
+    m = m_ref[...]
+    am = a_ref[...] * m
+    bm = q_ref[...].astype(jnp.float32) * s_ref[...] * m
+    d_ref[0, 0] = jnp.sum(am * bm)
+    na_ref[0, 0] = jnp.sum(am * am)
+    nb_ref[0, 0] = jnp.sum(bm * bm)
+
+
+def _cos_dq_kernel_nomask(a_ref, q_ref, s_ref, d_ref, na_ref, nb_ref):
+    a = a_ref[...]
+    b = q_ref[...].astype(jnp.float32) * s_ref[...]
+    d_ref[0, 0] = jnp.sum(a * b)
+    na_ref[0, 0] = jnp.sum(a * a)
+    nb_ref[0, 0] = jnp.sum(b * b)
+
+
 def _tile_call(kernel, inputs, n_out: int, *, block_rows: int,
                interpret: bool):
     """Run ``kernel`` over row tiles of the 2-D inputs; returns ``n_out``
@@ -91,14 +130,48 @@ def _tile_call(kernel, inputs, n_out: int, *, block_rows: int,
 
 
 def _tiled(v: jax.Array, block_rows: int) -> jax.Array:
-    """Zero-pad a flat f32 vector to a (R, 128) tile view with R a multiple
-    of ``block_rows`` (zeros are term-neutral for every kernel above)."""
+    """Zero-pad a flat vector (f32, or int8 payload) to a (R, 128) tile view
+    with R a multiple of ``block_rows`` (zeros are term-neutral for every
+    kernel above: padded scales are zero too, so padded dequant is 0*0)."""
     n = v.shape[0]
     per_tile = block_rows * LANES
     pad = (-n) % per_tile
     if pad:
         v = jnp.pad(v, (0, pad))
     return v.reshape(-1, LANES)
+
+
+def _tiled_scales(s: jax.Array, rows: int) -> jax.Array:
+    """Zero-pad per-128-lane-row scales ``(t,)`` to an ``(R, 1)`` column
+    matching a ``_tiled`` payload view with R rows (R >= t always: R is t
+    rounded up to the block grid)."""
+    pad = rows - s.shape[0]
+    if pad:
+        s = jnp.pad(s, (0, pad))
+    return s.reshape(-1, 1)
+
+
+def _tile_call_dq(kernel, a, q, s, extra, n_out: int, *, block_rows: int,
+                  interpret: bool):
+    """`_tile_call` for dequant kernels: the scale operand blocks as
+    ``(br, 1)`` columns while payload/mask operands block as ``(br, 128)``."""
+    R, lanes = a.shape
+    br = min(block_rows, R)
+    nr = pl.cdiv(R, br)
+    inputs = [a, q, s] + list(extra)
+    widths = [lanes, lanes, 1] + [lanes] * len(extra)
+    scalar = functools.partial(pl.BlockSpec, (1, 1), lambda i: (i, 0),
+                               memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nr,),
+        in_specs=[pl.BlockSpec((br, w), lambda i: (i, 0)) for w in widths],
+        out_specs=tuple(scalar() for _ in range(n_out)),
+        out_shape=tuple(jax.ShapeDtypeStruct((nr, 1), jnp.float32)
+                        for _ in range(n_out)),
+        interpret=interpret,
+    )(*inputs)
+    return tuple(o.reshape(-1) for o in out)
 
 
 def masked_l1_terms_pallas(a: jax.Array, b: jax.Array, m: jax.Array, *,
@@ -135,4 +208,47 @@ def masked_cosine_terms_pallas(a: jax.Array, b: jax.Array,
         args = [_tiled(v, block_rows) for v in (a, b, m)]
         d, na, nb = _tile_call(_cos_kernel, args, 3, block_rows=block_rows,
                                interpret=interpret)
+    return jnp.sum(d), jnp.sum(na), jnp.sum(nb)
+
+
+def masked_l1_terms_dq_pallas(a: jax.Array, q: jax.Array, s: jax.Array,
+                              m: jax.Array, *, block_rows: int = 256,
+                              interpret: bool = False
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """(sum |a - q*s|*m, sum m): b is an int8 payload with one f32 scale per
+    128 coordinates (core.quantize tile == LANES), dequantized in-register."""
+    at, qt, mt = (_tiled(v, block_rows) for v in (a, q, m))
+    st = _tiled_scales(s, at.shape[0])
+    ps, pc = _tile_call_dq(_l1_dq_kernel, at, qt, st, [mt], 2,
+                           block_rows=block_rows, interpret=interpret)
+    return jnp.sum(ps), jnp.sum(pc)
+
+
+def l1_terms_dq_pallas(a: jax.Array, q: jax.Array, s: jax.Array, *,
+                       block_rows: int = 256,
+                       interpret: bool = False) -> jax.Array:
+    """Unmasked ``sum |a - q*s|`` (the count is ``a.size``, static)."""
+    at, qt = _tiled(a, block_rows), _tiled(q, block_rows)
+    st = _tiled_scales(s, at.shape[0])
+    (ps,) = _tile_call_dq(_l1_dq_kernel_nomask, at, qt, st, [], 1,
+                          block_rows=block_rows, interpret=interpret)
+    return jnp.sum(ps)
+
+
+def masked_cosine_terms_dq_pallas(a: jax.Array, q: jax.Array, s: jax.Array,
+                                  m: Optional[jax.Array], *,
+                                  block_rows: int = 256,
+                                  interpret: bool = False
+                                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(sum am*bm, sum am^2, sum bm^2) with b = q*s dequantized in-register
+    (m=None -> unmasked)."""
+    at, qt = _tiled(a, block_rows), _tiled(q, block_rows)
+    st = _tiled_scales(s, at.shape[0])
+    if m is None:
+        d, na, nb = _tile_call_dq(_cos_dq_kernel_nomask, at, qt, st, [], 3,
+                                  block_rows=block_rows, interpret=interpret)
+    else:
+        mt = _tiled(m, block_rows)
+        d, na, nb = _tile_call_dq(_cos_dq_kernel, at, qt, st, [mt], 3,
+                                  block_rows=block_rows, interpret=interpret)
     return jnp.sum(d), jnp.sum(na), jnp.sum(nb)

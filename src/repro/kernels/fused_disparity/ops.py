@@ -31,10 +31,13 @@ from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.fused_disparity.kernel import (l1_terms_pallas,
-                                                  masked_cosine_terms_pallas,
-                                                  masked_l1_terms_pallas)
+from repro.core.quantize import QuantizedTree, dequant_flat
+from repro.kernels.fused_disparity.kernel import (
+    LANES, l1_terms_dq_pallas, l1_terms_pallas, masked_cosine_terms_dq_pallas,
+    masked_cosine_terms_pallas, masked_l1_terms_dq_pallas,
+    masked_l1_terms_pallas)
 
 # below this many coordinates a leaf stays in plain jnp even in kernel mode
 # (same rationale as repro.core.sparsify.KERNEL_MIN_SIZE: the launch costs
@@ -189,6 +192,143 @@ _cos_terms.defvjp(_cos_terms_fwd, _cos_terms_bwd)
 
 
 # --------------------------------------------------------------------------- #
+# Dequant-fused terms: the b operand is a quantized payload (int8 leaves +
+# per-tile f32 scales). Neither direction materializes the dequantized fp32
+# tree: the forward reconstructs q*s in-register (Pallas) or as a fused
+# elementwise chain (jnp fallback), and the custom_vjp's residuals keep the
+# *int8* payload — at B=128 cohorts that is the HBM saving, since the plain
+# path would otherwise hold fp32 dequant buffers live across fwd->bwd.
+# The payload gets a float0 cotangent (integer primal, nothing to
+# differentiate); scales get symbolic zeros (the GI loss only
+# differentiates the estimate side).
+# --------------------------------------------------------------------------- #
+
+
+def _use_kernel_dq(leaf: jax.Array, static) -> bool:
+    use_kernel, _, tile = static
+    # the Pallas dq kernels hard-wire one scale per 128-lane row; any other
+    # tile stays on the (exact) jnp fallback
+    return use_kernel and tile == LANES and leaf.shape[-1] >= KERNEL_MIN_SIZE
+
+
+def _float0_like(leaves: List[jax.Array]) -> List[np.ndarray]:
+    """Symbolic-zero cotangents for integer payload leaves."""
+    return [np.zeros(q.shape, jax.dtypes.float0) for q in leaves]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _l1_terms_dq(static, a_leaves, q_leaves, s_leaves, m_leaves):
+    """(sum |a - q*s|*m, sum m) over flat leaf lists; m_leaves=None -> m=1
+    and the count term is the static coordinate total."""
+    _, interpret, tile = static
+    s = jnp.zeros((), jnp.float32)
+    c = jnp.zeros((), jnp.float32)
+    total = 0
+    for i, (a, q) in enumerate(zip(a_leaves, q_leaves)):
+        total += a.shape[-1]
+        sc = s_leaves[i]
+        m = None if m_leaves is None else m_leaves[i]
+        if _use_kernel_dq(a, static):
+            if m is None:
+                s = s + l1_terms_dq_pallas(a, q, sc, interpret=interpret)
+            else:
+                ls, lc = masked_l1_terms_dq_pallas(a, q, sc, m,
+                                                   interpret=interpret)
+                s, c = s + ls, c + lc
+        else:
+            d = jnp.abs(a - dequant_flat(q, sc, tile))
+            if m is None:
+                s = s + jnp.sum(d)
+            else:
+                s = s + jnp.sum(d * m)
+                c = c + jnp.sum(m)
+    if m_leaves is None:
+        c = jnp.asarray(float(total), jnp.float32)
+    return s, c
+
+
+def _l1_terms_dq_fwd(static, a_leaves, q_leaves, s_leaves, m_leaves):
+    return _l1_terms_dq(static, a_leaves, q_leaves, s_leaves, m_leaves), \
+        (a_leaves, q_leaves, s_leaves, m_leaves)
+
+
+def _l1_terms_dq_bwd(static, res, cts):
+    a_leaves, q_leaves, s_leaves, m_leaves = res
+    _, _, tile = static
+    gs, gc = cts
+    da, dm = [], []
+    for i, (a, q) in enumerate(zip(a_leaves, q_leaves)):
+        diff = a - dequant_flat(q, s_leaves[i], tile)  # recomputed, fused
+        sign = jnp.sign(diff)
+        if m_leaves is None:
+            da.append(gs * sign)
+        else:
+            m = m_leaves[i]
+            da.append(gs * sign * m)
+            dm.append(gs * jnp.abs(diff) + gc)
+    return (da, _float0_like(q_leaves),
+            [jnp.zeros_like(s) for s in s_leaves],
+            (None if m_leaves is None else dm))
+
+
+_l1_terms_dq.defvjp(_l1_terms_dq_fwd, _l1_terms_dq_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cos_terms_dq(static, a_leaves, q_leaves, s_leaves, m_leaves):
+    """(sum am*bm, sum am^2, sum bm^2) with b = q*s over flat leaf lists."""
+    _, interpret, tile = static
+    d = jnp.zeros((), jnp.float32)
+    na = jnp.zeros((), jnp.float32)
+    nb = jnp.zeros((), jnp.float32)
+    for i, (a, q) in enumerate(zip(a_leaves, q_leaves)):
+        sc = s_leaves[i]
+        m = None if m_leaves is None else m_leaves[i]
+        if _use_kernel_dq(a, static):
+            ld, lna, lnb = masked_cosine_terms_dq_pallas(
+                a, q, sc, m, interpret=interpret)
+        else:
+            b = dequant_flat(q, sc, tile)
+            am = a if m is None else a * m
+            bm = b if m is None else b * m
+            ld = jnp.sum(am * bm)
+            lna = jnp.sum(am * am)
+            lnb = jnp.sum(bm * bm)
+        d, na, nb = d + ld, na + lna, nb + lnb
+    return d, na, nb
+
+
+def _cos_terms_dq_fwd(static, a_leaves, q_leaves, s_leaves, m_leaves):
+    return _cos_terms_dq(static, a_leaves, q_leaves, s_leaves, m_leaves), \
+        (a_leaves, q_leaves, s_leaves, m_leaves)
+
+
+def _cos_terms_dq_bwd(static, res, cts):
+    a_leaves, q_leaves, s_leaves, m_leaves = res
+    _, _, tile = static
+    gd, gna, _gnb = cts
+    da, dm = [], []
+    for i, (a, q) in enumerate(zip(a_leaves, q_leaves)):
+        b = dequant_flat(q, s_leaves[i], tile)
+        m = None if m_leaves is None else m_leaves[i]
+        am = a if m is None else a * m
+        bm = b if m is None else b * m
+        ga = gd * bm + 2.0 * gna * am           # d/d(am), then chain by m
+        if m is None:
+            da.append(ga)
+        else:
+            gb = gd * am + 2.0 * _gnb * bm
+            da.append(ga * m)
+            dm.append(a * ga + b * gb)
+    return (da, _float0_like(q_leaves),
+            [jnp.zeros_like(s) for s in s_leaves],
+            (None if m_leaves is None else dm))
+
+
+_cos_terms_dq.defvjp(_cos_terms_dq_fwd, _cos_terms_dq_bwd)
+
+
+# --------------------------------------------------------------------------- #
 # Public pytree-level API
 # --------------------------------------------------------------------------- #
 
@@ -221,3 +361,33 @@ def masked_cosine_terms(tree_a: Any, tree_b: Any,
     la, lb = _flat_leaves(tree_a), _flat_leaves(tree_b)
     lm = _mask_slices(mask, la)
     return _cos_terms((bool(use_kernel), bool(interpret)), la, lb, lm)
+
+
+def masked_l1_terms_dq(tree_a: Any, qt: QuantizedTree,
+                       mask: Optional[jax.Array] = None,
+                       use_kernel: Optional[bool] = None,
+                       interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """``masked_l1_terms`` with the b operand as a quantized payload —
+    b is never materialized in fp32. Differentiable in ``tree_a``/``mask``;
+    the payload/scales get zero cotangents."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    la = _flat_leaves(tree_a)
+    lm = _mask_slices(mask, la)
+    return _l1_terms_dq((bool(use_kernel), bool(interpret), int(qt.tile)),
+                        la, list(qt.q), list(qt.s), lm)
+
+
+def masked_cosine_terms_dq(tree_a: Any, qt: QuantizedTree,
+                           mask: Optional[jax.Array] = None,
+                           use_kernel: Optional[bool] = None,
+                           interpret: bool = False
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``masked_cosine_terms`` with the b operand as a quantized payload."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    la = _flat_leaves(tree_a)
+    lm = _mask_slices(mask, la)
+    return _cos_terms_dq((bool(use_kernel), bool(interpret), int(qt.tile)),
+                         la, list(qt.q), list(qt.s), lm)

@@ -41,3 +41,20 @@ def cosine_distance_reference(a: Any, b: Any,
         va, vb = va * m, vb * m
     return 1.0 - jnp.dot(va, vb) / jnp.maximum(
         jnp.linalg.norm(va) * jnp.linalg.norm(vb), 1e-12)
+
+
+def l1_disparity_dequant_reference(a: Any, qt: Any,
+                                   mask: Optional[jax.Array] = None
+                                   ) -> jax.Array:
+    """Dequantize-then-fp32 oracle for the dequant-fused l1 terms: the
+    quantized payload is fully materialized as an fp32 pytree, then reduced
+    through the historic concat path — the traffic the fused variants
+    avoid, and the "dequant" side of the ``quant/`` benchmark rows."""
+    return l1_disparity_reference(a, qt.to_tree(), mask)
+
+
+def cosine_distance_dequant_reference(a: Any, qt: Any,
+                                      mask: Optional[jax.Array] = None
+                                      ) -> jax.Array:
+    """Dequantize-then-fp32 oracle for the dequant-fused cosine terms."""
+    return cosine_distance_reference(a, qt.to_tree(), mask)

@@ -2,10 +2,10 @@
 
 One row = one JSON object with a ``kind`` discriminator. This schema
 replaces the two ad-hoc wall-row formats that used to live in
-``sim/bridge.py`` (``ServerBridge.rows``) and ``repro.sweep``
-(``step_walls``): both now emit/consume these rows, and ``read_rows``
-still loads the legacy trajectory JSONs (the old keys are aliases for one
-release — see ``_normalize_legacy``).
+``sim/bridge.py`` (``ServerBridge.rows``) and ``repro.sweep``: both emit
+and consume these rows. (The transitional ``step_walls`` trajectory alias
+shipped for exactly one release, as promised, and is gone — trajectory
+JSONs carry their kind-tagged rows under ``metrics``.)
 
 Row kinds (producers in parentheses; every kind may carry extra fields —
 readers must ignore unknown keys):
@@ -32,9 +32,10 @@ readers must ignore unknown keys):
     Per-wave dispatch/upload batch sizes: ``wave`` (dispatch|upload),
     ``time, n``.
 
-Compatibility: a trajectory JSON's ``step_walls`` list (the legacy
-bridge-row format, which is a strict subset of ``server_step``) loads via
-``read_rows`` and is tagged ``kind: server_step`` on the way in.
+Trajectory JSONs (``repro.sweep``) load via ``read_rows`` too: their
+``metrics`` list is already kind-tagged, and the per-round
+``server_metrics`` list (accuracy/gamma rows without a ``kind``) is
+tagged ``server_metric`` on the way in — see ``_normalize_trajectory``.
 """
 
 from __future__ import annotations
@@ -60,14 +61,10 @@ def write_jsonl(rows: Iterable[Dict[str, Any]], path: str) -> int:
     return n
 
 
-def _normalize_legacy(doc: Dict[str, Any]) -> List[Dict[str, Any]]:
-    """Rows from a trajectory JSON (legacy ``step_walls`` +
-    ``server_metrics``) — the one-release alias path."""
-    rows: List[Dict[str, Any]] = []
-    for r in doc.get("step_walls", []) or []:
-        row = dict(r)
-        row.setdefault("kind", "server_step")
-        rows.append(row)
+def _normalize_trajectory(doc: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Rows from a trajectory JSON: the kind-tagged ``metrics`` list plus
+    the per-round ``server_metrics`` rows tagged ``server_metric``."""
+    rows: List[Dict[str, Any]] = [dict(r) for r in doc.get("metrics") or []]
     for r in doc.get("server_metrics", []) or []:
         row = dict(r)
         row.setdefault("kind", "server_metric")
@@ -80,7 +77,7 @@ def read_rows(path: str) -> List[Dict[str, Any]]:
 
     * ``*.jsonl`` — the canonical stream (schema header line optional);
     * a JSON object with a ``metrics`` or ``rows`` list of kind-tagged rows;
-    * a legacy trajectory JSON (``step_walls``/``server_metrics`` keys).
+    * a trajectory JSON (``metrics`` + per-round ``server_metrics`` keys).
     """
     if path.endswith(".jsonl"):
         rows = []
@@ -98,8 +95,8 @@ def read_rows(path: str) -> List[Dict[str, Any]]:
         doc = json.load(f)
     if isinstance(doc, list):
         return doc
-    if "step_walls" in doc or "server_metrics" in doc:
-        return _normalize_legacy(doc)
+    if "server_metrics" in doc:
+        return _normalize_trajectory(doc)
     for key in ("metrics", "rows"):
         if isinstance(doc.get(key), list):
             return doc[key]

@@ -6,7 +6,7 @@
 
 Accepts any artifact the obs layer (or its predecessors) writes: a Chrome
 trace exported by ``repro.obs.export``, an ``obs-metrics-v1`` JSONL
-stream, or a legacy trajectory JSON (``step_walls`` alias). Prints one row
+stream, or a ``repro.sweep`` trajectory JSON. Prints one row
 per aggregation round — wall time, cohort composition (fresh/stale split,
 base-round scatter), realized staleness, GI occupancy — followed by the
 span-time breakdown and counters when the source carries spans.
@@ -59,9 +59,8 @@ def load_any(path: str) -> Tuple[List[Dict[str, Any]], Dict[str, float],
         doc = json.load(f)
     if _is_chrome_trace(doc):
         return _from_chrome(doc)
-    if isinstance(doc, dict) and ("step_walls" in doc
-                                  or "server_metrics" in doc):
-        return obs_metrics._normalize_legacy(doc), {}, {}
+    if isinstance(doc, dict) and "server_metrics" in doc:
+        return obs_metrics._normalize_trajectory(doc), {}, {}
     if isinstance(doc, dict):
         for key in ("metrics", "rows"):
             if isinstance(doc.get(key), list):

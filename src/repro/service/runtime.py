@@ -40,6 +40,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.quantize import tree_payload_bytes
 from repro.obs import tracer
 from repro.service.admission import AdmissionQueue, StreamArrival
 from repro.service.stream import UploadLog
@@ -75,6 +76,7 @@ class _InFlight:
     dispatch_t: float
     duration: float
     job_id: int
+    payload_bytes: int = 0
 
 
 class StreamingService:
@@ -98,7 +100,14 @@ class StreamingService:
         self._inflight: Dict[int, _InFlight] = {}
         self.counters: Dict[str, int] = {
             "dispatches": 0, "arrivals": 0, "aggregations": 0,
-            "empty_triggers": 0, "superseded": 0, "disseminated": 0}
+            "empty_triggers": 0, "superseded": 0, "disseminated": 0,
+            "payload_bytes": 0}
+        # wire size of one upload under the server's quant config (exact
+        # packed accounting: bits/8 per coordinate + one f32 scale per
+        # tile; plain 4 bytes/coordinate at bits=32) — used for jobs whose
+        # log rows carry no explicit payload size
+        self._upload_bytes = tree_payload_bytes(server.global_params,
+                                                server.cfg.quant)
         # event stream for the determinism digest (same line format as the
         # sim engines' trace)
         self.events: List[Tuple[float, str, int, str]] = []
@@ -168,7 +177,8 @@ class StreamingService:
         self._seq += 1
 
     def _on_dispatch(self, heap, t: float, job) -> None:
-        fl = _InFlight(job.client, self.version, t, job.duration, job.job_id)
+        fl = _InFlight(job.client, self.version, t, job.duration, job.job_id,
+                       payload_bytes=getattr(job, "payload_bytes", 0))
         self._inflight[job.job_id] = fl
         self.counters["dispatches"] += 1
         self._trace(t, "dispatch", job.client, f"v{self.version}")
@@ -177,6 +187,9 @@ class StreamingService:
     def _on_arrival(self, t: float, fl: _InFlight) -> None:
         del self._inflight[fl.job_id]
         self.counters["arrivals"] += 1
+        # bytes hit the wire whether or not admission keeps the upload
+        self.counters["payload_bytes"] += (fl.payload_bytes
+                                           or self._upload_bytes)
         arrival = StreamArrival(fl.client, fl.base_version, fl.dispatch_t,
                                 t, fl.job_id)
         action = self.queue.offer(arrival)
@@ -275,6 +288,11 @@ class StreamingService:
             "wall_s": wall,
             "uploads_per_sec": (self.counters["arrivals"] / wall
                                 if wall > 0 else 0.0),
+            "bytes_per_sec": (self.counters["payload_bytes"] / wall
+                              if wall > 0 else 0.0),
+            "bytes_per_upload": (self.counters["payload_bytes"]
+                                 / self.counters["arrivals"]
+                                 if self.counters["arrivals"] else 0.0),
             "trigger_wall_p50_ms": float(np.percentile(walls, 50) * 1e3),
             "trigger_wall_p99_ms": float(np.percentile(walls, 99) * 1e3),
             "trigger_wall_mean_ms": float(walls.mean() * 1e3),
@@ -300,17 +318,22 @@ def build_service(seed: int = 0, strategy: str = "ours",
                   n_clients: int = 10, n_slow: int = 3, gi_iters: int = 6,
                   segment_iters: int = 3, max_lanes: int = 8,
                   fused_step: bool = True, mesh=None,
+                  quant_bits: int = 32,
                   cfg: Optional[ServiceConfig] = None) -> StreamingService:
     """A ready service over the stock small-scale FL setup
     (``sim.scenarios.fl_setup``). ``segment_iters > 0`` (the default)
     selects the segmented GI executor so triggers share the resident
     ``LanePool``; ``fused_step=False`` builds the loop-mode oracle the
-    bit-for-bit replay tests compare against."""
+    bit-for-bit replay tests compare against. ``quant_bits`` (32/8/4)
+    selects the upload wire format (docs/compression.md) — the event
+    stream and digest are invariant to it; only the model trajectory and
+    the bytes-on-wire counters change."""
     from repro.sim.scenarios import fl_setup
 
     server, _, _ = fl_setup(seed, strategy=strategy, n_clients=n_clients,
                             n_slow=n_slow, gi_iters=gi_iters,
                             eval_every=10 ** 9, mesh=mesh,
                             segment_iters=segment_iters,
-                            max_lanes=max_lanes, fused_step=fused_step)
+                            max_lanes=max_lanes, fused_step=fused_step,
+                            quant_bits=quant_bits)
     return StreamingService(server, cfg)

@@ -40,11 +40,18 @@ SCHEMA = "upload-log-v1"
 @dataclasses.dataclass(frozen=True)
 class UploadJob:
     """One client job: dispatched at ``dispatch_t``, arrives ``duration``
-    later. ``job_id`` is the log-order index (assigned by UploadLog)."""
+    later. ``job_id`` is the log-order index (assigned by UploadLog).
+    ``payload_bytes`` optionally records the wire size of the upload
+    (0 = unknown: the service falls back to the model-derived size for its
+    bytes-on-wire counters). Payload size is carried in the log but kept
+    OUT of :func:`UploadLog.digest` — replay identity is about the arrival
+    process, and recompressing a log must not change which aggregations
+    fire."""
     client: int
     dispatch_t: float
     duration: float
     job_id: int = 0
+    payload_bytes: int = 0
 
     @property
     def arrival_t(self) -> float:
@@ -89,8 +96,12 @@ class UploadLog:
                                 "n_clients": self.n_clients,
                                 "meta": self.meta}) + "\n")
             for j in self.jobs:
-                f.write(json.dumps({"c": j.client, "t": j.dispatch_t,
-                                    "d": j.duration}) + "\n")
+                row = {"c": j.client, "t": j.dispatch_t, "d": j.duration}
+                if j.payload_bytes:
+                    # only written when known, so logs from builds that
+                    # never set it stay byte-identical
+                    row["b"] = j.payload_bytes
+                f.write(json.dumps(row) + "\n")
 
 
 def read_upload_log(path: str) -> UploadLog:
@@ -98,7 +109,8 @@ def read_upload_log(path: str) -> UploadLog:
         header = json.loads(f.readline())
         if header.get("schema") != SCHEMA:
             raise ValueError(f"{path}: not an {SCHEMA} document")
-        jobs = [UploadJob(int(r["c"]), float(r["t"]), float(r["d"]))
+        jobs = [UploadJob(int(r["c"]), float(r["t"]), float(r["d"]),
+                          payload_bytes=int(r.get("b", 0)))
                 for r in map(json.loads, f) if r]
     return UploadLog(jobs, header["n_clients"], header.get("meta"))
 

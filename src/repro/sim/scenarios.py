@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.client import LocalProgram
 from repro.core.gradient_inversion import GIConfig
+from repro.core.quantize import QuantConfig
 from repro.core.server import FLConfig, Server
 from repro.data.partition import (client_label_histograms, dirichlet_partition,
                                   pad_client_shards)
@@ -99,7 +100,8 @@ def build(name: str, seed: int = 0, horizon: Optional[float] = None,
 def fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
              n_slow: int = 3, tau=3, gi_iters: int = 8,
              eval_every: int = 5, mesh=None, segment_iters: int = 0,
-             max_lanes: int = 0, fused_step: bool = True):
+             max_lanes: int = 0, fused_step: bool = True,
+             quant_bits: int = 32):
     """``mesh`` is a (pod, data) cohort mesh from
     ``repro.launch.mesh.make_server_mesh``: the scenario's Server then runs
     its batched hot path sharded (every stock scenario accepts ``mesh=`` as
@@ -108,7 +110,11 @@ def fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
     ``segment_iters``/``max_lanes`` select the segmented continuous-batching
     GI executor (the resident ``LanePool``) and ``fused_step=False`` the
     per-client loop oracle — ``repro.service`` builds both its streaming
-    server and its bit-for-bit replay oracle through these overrides."""
+    server and its bit-for-bit replay oracle through these overrides.
+
+    ``quant_bits`` (32/8/4) selects the upload wire format
+    (``core.quantize``; 32 = the exact fp32 identity) — ``repro.sweep
+    --quant-bits`` fans this axis and every stock scenario forwards it."""
     x, y = make_feature_dataset(20, n_classes=N_CLASSES,
                                 n_features=N_FEATURES, seed=seed)
     tx, ty = make_feature_dataset(8, n_classes=N_CLASSES,
@@ -123,7 +129,8 @@ def fl_setup(seed: int, strategy: str = "ours", n_clients: int = 10,
                                segment_iters=segment_iters,
                                max_lanes=max_lanes),
                    fused_step=fused_step,
-                   eval_every=eval_every, seed=seed)
+                   eval_every=eval_every, seed=seed,
+                   quant=QuantConfig(bits=int(quant_bits)))
     server = Server(mlp3(n_features=N_FEATURES, n_classes=N_CLASSES,
                          hidden=24),
                     prog, cfg, cx, cy, cm, sched, tx, ty, mesh=mesh)

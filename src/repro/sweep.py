@@ -13,10 +13,17 @@ evaluated in ONE sharded computation: the per-run parameters, test inputs
 and labels stack on a run axis that shard_maps over the same (pod, data)
 mesh — the sweep-level analogue of the server's cohort axis.
 
+``--quant-bits 32,8,4`` fans the upload wire format as an extra axis:
+every (scenario, seed) runs once per bitwidth (``core.quantize`` int8/int4
+stochastic quantization with error feedback; 32 = exact fp32 identity),
+rows and trajectory files gain a ``_q<bits>`` suffix, and each row's
+metrics carry the bytes actually put on the wire — the accuracy-vs-bits
+sweep behind docs/compression.md.
+
 Outputs:
 * ``<out>/trajectory_<scenario>_seed<k>.json`` — per-seed trajectory
   (summary + eval curve + per-aggregation ``server_step`` rows in the
-  obs-metrics-v1 schema; ``step_walls`` kept as a one-release alias);
+  obs-metrics-v1 schema under ``metrics``);
 * ``<out>/metrics_<scenario>_seed<k>.jsonl`` — the same per-aggregation
   rows as an ``obs-metrics-v1`` JSONL stream (``repro.obs.report`` input);
 * ``<out>/sweep.json`` — merged rows in the same ``bench-v1`` schema that
@@ -104,6 +111,9 @@ def main(argv=None) -> int:
     ap.add_argument("--horizon", type=float, default=None)
     ap.add_argument("--strategy", default=None)
     ap.add_argument("--gi-iters", type=int, default=None)
+    ap.add_argument("--quant-bits", default=None,
+                    help="comma-separated upload bitwidths to fan over "
+                         "(e.g. 32,8,4); omitted = fp32 uploads, no suffix")
     ap.add_argument("--mesh", default="auto",
                     help="'auto' (all devices), 'none', or a device count "
                          "for the (pod, data) cohort mesh")
@@ -122,6 +132,15 @@ def main(argv=None) -> int:
     if args.seeds < 1:
         print("--seeds must be >= 1", file=sys.stderr)
         return 2
+    # None = no quant axis (fp32, unsuffixed names — the historic layout)
+    qbits: List[Optional[int]] = [None]
+    if args.quant_bits:
+        qbits = [int(b) for b in args.quant_bits.split(",") if b]
+        bad = [b for b in qbits if b not in (4, 8, 32)]
+        if bad:
+            print(f"--quant-bits must be from 4/8/32, got {bad}",
+                  file=sys.stderr)
+            return 2
 
     mesh = _build_mesh(args.mesh)
     overrides: Dict[str, Any] = {"mesh": mesh}
@@ -134,47 +153,58 @@ def main(argv=None) -> int:
     runs, rows = [], []
     for scen in names:
         for seed in range(args.seeds):
-            t0 = time.perf_counter()
-            run = scenarios.build(scen, seed=seed, horizon=args.horizon,
-                                  **overrides)
-            summary = run.run()
-            wall = time.perf_counter() - t0
-            runs.append(run)
-            # per-aggregation rows in the shared obs-metrics-v1 schema
-            # (bridge rows carry kind="server_step"); "step_walls" is a
-            # one-release alias of "metrics" for saved-trajectory loaders
-            step_rows = getattr(run.engine.aggregator, "rows", [])
-            traj = {
-                "scenario": scen, "seed": seed, "wall_s": wall,
-                "summary": summary,
-                "evals": [{"time": t, "version": v, "acc": a}
-                          for t, v, a in run.engine.evals],
-                "server_metrics": run.server.metrics,
-                "metrics": step_rows,
-                "step_walls": step_rows,
-            }
-            tpath = os.path.join(args.out,
-                                 f"trajectory_{scen}_seed{seed}.json")
-            with open(tpath, "w") as f:
-                json.dump(traj, f, indent=2, default=float)
-            if step_rows:
-                from repro.obs import write_jsonl
-                write_jsonl(step_rows, os.path.join(
-                    args.out, f"metrics_{scen}_seed{seed}.jsonl"))
-            rows.append({
-                "name": f"sweep/{scen}_seed{seed}",
-                "us_per_call": wall * 1e6,
-                "derived": (f"acc={summary['final_acc']:.3f} "
-                            f"aggs={summary['aggregations']} "
-                            f"mean_tau={summary['mean_realized_tau']:.2f} "
-                            f"digest={summary['trace_digest']}"),
-                "metrics": {"final_acc": summary["final_acc"],
-                            "aggregations": summary["aggregations"],
-                            "mean_realized_tau":
-                                summary["mean_realized_tau"]},
-            })
-            print(f"{rows[-1]['name']},{rows[-1]['us_per_call']:.1f},"
-                  f"{rows[-1]['derived']}", flush=True)
+            for bits in qbits:
+                tag = "" if bits is None else f"_q{bits}"
+                kw = dict(overrides)
+                if bits is not None:
+                    kw["quant_bits"] = bits
+                t0 = time.perf_counter()
+                run = scenarios.build(scen, seed=seed, horizon=args.horizon,
+                                      **kw)
+                summary = run.run()
+                wall = time.perf_counter() - t0
+                runs.append(run)
+                # per-aggregation rows in the shared obs-metrics-v1 schema
+                # (bridge rows carry kind="server_step")
+                step_rows = getattr(run.engine.aggregator, "rows", [])
+                traj = {
+                    "scenario": scen, "seed": seed, "wall_s": wall,
+                    "summary": summary,
+                    "evals": [{"time": t, "version": v, "acc": a}
+                              for t, v, a in run.engine.evals],
+                    "server_metrics": run.server.metrics,
+                    "metrics": step_rows,
+                }
+                tpath = os.path.join(
+                    args.out, f"trajectory_{scen}_seed{seed}{tag}.json")
+                with open(tpath, "w") as f:
+                    json.dump(traj, f, indent=2, default=float)
+                if step_rows:
+                    from repro.obs import write_jsonl
+                    write_jsonl(step_rows, os.path.join(
+                        args.out, f"metrics_{scen}_seed{seed}{tag}.jsonl"))
+                srv = summary.get("server") or {}
+                metrics = {"final_acc": summary["final_acc"],
+                           "aggregations": summary["aggregations"],
+                           "mean_realized_tau":
+                               summary["mean_realized_tau"]}
+                derived = (f"acc={summary['final_acc']:.3f} "
+                           f"aggs={summary['aggregations']} "
+                           f"mean_tau={summary['mean_realized_tau']:.2f} "
+                           f"digest={summary['trace_digest']}")
+                if bits is not None:
+                    metrics["quant_bits"] = srv.get("quant_bits", bits)
+                    metrics["wire_bytes"] = srv.get("wire_bytes", 0)
+                    derived += (f" bits={bits} "
+                                f"wire={metrics['wire_bytes']}B")
+                rows.append({
+                    "name": f"sweep/{scen}_seed{seed}{tag}",
+                    "us_per_call": wall * 1e6,
+                    "derived": derived,
+                    "metrics": metrics,
+                })
+                print(f"{rows[-1]['name']},{rows[-1]['us_per_call']:.1f},"
+                      f"{rows[-1]['derived']}", flush=True)
 
     t0 = time.perf_counter()
     accs = _stacked_eval(runs, mesh)
@@ -202,7 +232,8 @@ def main(argv=None) -> int:
     merged = {"schema": SCHEMA, "generated_by": "repro.sweep",
               "config": {"scenarios": names, "seeds": args.seeds,
                          "horizon": args.horizon, "strategy": args.strategy,
-                         "gi_iters": args.gi_iters, "mesh": args.mesh},
+                         "gi_iters": args.gi_iters, "mesh": args.mesh,
+                         "quant_bits": args.quant_bits},
               "rows": rows, "final_accs": per_run}
     mpath = os.path.join(args.out, "sweep.json")
     with open(mpath, "w") as f:

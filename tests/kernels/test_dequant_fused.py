@@ -1,0 +1,160 @@
+"""Dequant-fused disparity terms: the kernels (interpret mode) and jnp
+fallbacks consume an int8 payload + per-tile scales directly; forward AND
+gradients must match dequantizing to fp32 first and running the concat
+oracle — on sizes that do and don't divide the 128-lane tile grid."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.disparity import l1_disparity, masked_cosine_distance
+from repro.core.quantize import QuantizedTree, quantize_flat
+from repro.kernels.fused_disparity import (
+    cosine_distance_dequant_reference, l1_disparity_dequant_reference,
+    masked_cosine_terms_dq, masked_l1_terms_dq)
+
+KEY = jax.random.PRNGKey(31)
+
+
+def _tree(sizes, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {f"l{i}": jax.random.normal(jax.random.fold_in(k, i), (n,))
+            for i, n in enumerate(sizes)}
+
+
+def _quantize_tree(tree, bits=8, tile=128):
+    """Host-quantize a pytree into an unbatched QuantizedTree payload."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    qs, ss, shapes = [], [], []
+    for l in leaves:
+        q, s = quantize_flat(np.asarray(l).reshape(-1), bits, tile)
+        qs.append(jnp.asarray(q))
+        ss.append(jnp.asarray(s))
+        shapes.append(tuple(l.shape))
+    return QuantizedTree(qs, ss, bits, tile, treedef, shapes)
+
+
+# aligned, non-multiple-of-128, non-multiple-of-tile, tiny (always jnp)
+SIZES = [(4096,), (1000, 4097), (130,), (256 * 128, 5000, 7)]
+
+
+@pytest.mark.parametrize("sizes", SIZES)
+@pytest.mark.parametrize("masked", [False, True])
+def test_l1_dq_kernel_and_fallback_match_reference(sizes, masked):
+    a = _tree(sizes)
+    qt = _quantize_tree(_tree(sizes, seed=1))
+    n = sum(sizes)
+    mask = ((jax.random.uniform(KEY, (n,)) > 0.4) if masked else None)
+    want = l1_disparity_dequant_reference(a, qt, mask)
+    s, c = masked_l1_terms_dq(a, qt, mask, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(s / jnp.maximum(c, 1.0)),
+                               np.asarray(want), rtol=1e-6)
+    s2, c2 = masked_l1_terms_dq(a, qt, mask, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(s2 / jnp.maximum(c2, 1.0)),
+                               np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("sizes", SIZES)
+@pytest.mark.parametrize("masked", [False, True])
+def test_cos_dq_kernel_and_fallback_match_reference(sizes, masked):
+    a = _tree(sizes, seed=4)
+    qt = _quantize_tree(_tree(sizes, seed=5))
+    n = sum(sizes)
+    mask = ((jax.random.uniform(KEY, (n,)) > 0.4) if masked else None)
+    want = cosine_distance_dequant_reference(a, qt, mask)
+    dot, na2, nb2 = masked_cosine_terms_dq(a, qt, mask, use_kernel=True,
+                                           interpret=True)
+    got = 1.0 - dot / jnp.maximum(jnp.sqrt(na2) * jnp.sqrt(nb2), 1e-12)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("masked", [False, True])
+def test_l1_dq_grad_parity(masked, use_kernel):
+    """custom_vjp backward (recompute a - q*s) == autodiff of the
+    dequant-then-concat oracle; int8 payload leaves take float0
+    cotangents, so grad(a) is the only one requested."""
+    a = _tree((5000, 333), seed=7)
+    qt = _quantize_tree(_tree((5000, 333), seed=8))
+    mask = ((jax.random.uniform(KEY, (5333,)) > 0.5) if masked else None)
+
+    def fused(t):
+        s, c = masked_l1_terms_dq(t, qt, mask, use_kernel=use_kernel,
+                                  interpret=use_kernel)
+        return s / jnp.maximum(c, 1.0)
+
+    g = jax.grad(fused)(a)
+    g_ref = jax.grad(
+        lambda t: l1_disparity_dequant_reference(t, qt, mask))(a)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(g[k]), np.asarray(g_ref[k]),
+                                   rtol=1e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("masked", [False, True])
+def test_cos_dq_grad_parity(masked, use_kernel):
+    a = _tree((4097, 200), seed=9)
+    qt = _quantize_tree(_tree((4097, 200), seed=10))
+    mask = ((jax.random.uniform(KEY, (4297,)) > 0.5) if masked else None)
+
+    def fused(t):
+        dot, na2, nb2 = masked_cosine_terms_dq(
+            t, qt, mask, use_kernel=use_kernel, interpret=use_kernel)
+        return 1.0 - dot / jnp.maximum(jnp.sqrt(na2) * jnp.sqrt(nb2),
+                                       1e-12)
+
+    g = jax.grad(fused)(a)
+    g_ref = jax.grad(
+        lambda t: cosine_distance_dequant_reference(t, qt, mask))(a)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(g[k]), np.asarray(g_ref[k]),
+                                   rtol=1e-4, atol=1e-7)
+
+
+def test_nondefault_tile_takes_fallback_and_matches():
+    """tile != 128 can't map onto the kernel lanes — the dq terms must
+    silently take the exact jnp fallback even with use_kernel=True."""
+    a = _tree((5000,), seed=11)
+    qt = _quantize_tree(_tree((5000,), seed=12), tile=64)
+    want = l1_disparity_dequant_reference(a, qt)
+    s, c = masked_l1_terms_dq(a, qt, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(s / jnp.maximum(c, 1.0)),
+                               np.asarray(want), rtol=1e-6)
+
+
+def test_disparity_dispatch_on_quantized_payload():
+    """core.disparity's public metrics accept a QuantizedTree second
+    argument and equal their fp32 forms on the dequantized tree."""
+    a = _tree((1000, 300), seed=13)
+    qt = _quantize_tree(_tree((1000, 300), seed=14))
+    np.testing.assert_allclose(
+        np.asarray(l1_disparity(a, qt)),
+        np.asarray(l1_disparity(a, qt.to_tree())), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(masked_cosine_distance(a, qt)),
+        np.asarray(masked_cosine_distance(a, qt.to_tree())), rtol=1e-5)
+
+
+def test_vmap_over_payload_rows():
+    """A stacked (B, n) payload vmaps row-wise: vmapped value_and_grad
+    equals the per-row loop — the GI while_loop's consumption shape."""
+    B, sizes = 3, (600, 137)
+    rows_a = [_tree(sizes, seed=20 + b) for b in range(B)]
+    rows_q = [_quantize_tree(_tree(sizes, seed=30 + b)) for b in range(B)]
+    a = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *rows_a)
+    qt = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *rows_q)
+
+    def loss(a_row, qt_row):
+        return l1_disparity(a_row, qt_row)
+
+    vals, grads = jax.jit(jax.vmap(jax.value_and_grad(loss)))(a, qt)
+    for b in range(B):
+        want_v, want_g = jax.value_and_grad(loss)(rows_a[b], rows_q[b])
+        np.testing.assert_allclose(np.asarray(vals[b]), np.asarray(want_v),
+                                   rtol=1e-6)
+        for k in want_g:
+            np.testing.assert_allclose(np.asarray(grads[k][b]),
+                                       np.asarray(want_g[k]), rtol=1e-5,
+                                       atol=1e-8)

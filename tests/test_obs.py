@@ -10,8 +10,8 @@ Pins the two contracts the subsystem ships on:
   on a stock scenario with tracing on vs off.
 
 Plus the recording/export layer (span nesting, interning, Chrome trace
-structure, JSONL round trip incl. the legacy ``step_walls`` alias, report
-CLI) and the server's per-client GI stop-reason telemetry.
+structure, JSONL round trip, trajectory-JSON loading, report CLI) and the
+server's per-client GI stop-reason telemetry.
 """
 
 import gc
@@ -175,16 +175,27 @@ def test_jsonl_roundtrip(tmp_path):
     assert obs.rows_of_kind(back, "wave") == [rows[1]]
 
 
-def test_legacy_trajectory_aliases_still_load(tmp_path):
-    # pre-obs trajectory JSON: step_walls/server_metrics, no kind fields
-    legacy = {"scenario": "x", "step_walls": [
-        {"version": 0, "n_fresh": 2, "n_stale": 1, "wall_s": 0.1}],
+def test_trajectory_json_loads_combined_rows(tmp_path):
+    # a repro.sweep trajectory: kind-tagged "metrics" rows plus untagged
+    # per-round "server_metrics" rows, combined by read_rows
+    traj = {"scenario": "x", "metrics": [
+        {"kind": "server_step", "version": 0, "n_fresh": 2, "n_stale": 1,
+         "wall_s": 0.1}],
         "server_metrics": [{"round": 0, "n_fast": 2}]}
     path = tmp_path / "trajectory_x_seed0.json"
-    path.write_text(json.dumps(legacy))
+    path.write_text(json.dumps(traj))
     rows = obs.read_rows(str(path))
     steps = obs.rows_of_kind(rows, "server_step")
     assert len(steps) == 1 and steps[0]["version"] == 0
+    assert obs.rows_of_kind(rows, "server_metric") == [
+        {"round": 0, "n_fast": 2, "kind": "server_metric"}]
+
+    # the one-release "step_walls" alias is gone: a step_walls-only doc no
+    # longer resolves to rows
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"step_walls": [{"version": 0}]}))
+    with pytest.raises(ValueError):
+        obs.read_rows(str(stale))
 
 
 def test_report_cli_renders_all_formats(tmp_path, capsys):
@@ -199,10 +210,12 @@ def test_report_cli_renders_all_formats(tmp_path, capsys):
     jsonl = tmp_path / "metrics.jsonl"
     obs.write_chrome_trace(t, str(trace))
     obs.write_jsonl(t.metrics, str(jsonl))
-    legacy = tmp_path / "trajectory.json"
-    legacy.write_text(json.dumps({"step_walls": [
-        {"version": 0, "n_fresh": 1, "n_stale": 2, "wall_s": 0.25}]}))
-    for path in (trace, jsonl, legacy):
+    traj = tmp_path / "trajectory.json"
+    traj.write_text(json.dumps({
+        "metrics": [{"kind": "server_step", "version": 0, "n_fresh": 1,
+                     "n_stale": 2, "wall_s": 0.25}],
+        "server_metrics": [{"round": 0, "acc": 0.5}]}))
+    for path in (trace, jsonl, traj):
         assert obs_report.main([str(path)]) == 0
         out = capsys.readouterr().out
         assert "round" in out and "wall_ms" in out

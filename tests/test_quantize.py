@@ -1,0 +1,290 @@
+"""The quantized upload wire format (core.quantize) end to end.
+
+Pins the contracts the compression axis ships on:
+
+* **replay determinism** — quantization is a pure function of the upload's
+  identity (seed, client, round): re-quantizing, re-batching, or replaying
+  a whole EF chain yields bitwise-identical payloads;
+* **error feedback** — the residual ``delta - deq(quant(delta))`` carried
+  per client bounds the *running-sum* error at one quantization step, so
+  constant deltas drain to the truth at O(1/T);
+* **round-trip bounds** — per-coordinate error is at most one per-tile
+  quantization step, at int8 and int4, for f32 and bf16 leaves;
+* **bits=32 is the identity** — the default config equals the explicit
+  fp32 config and the quantizer refuses to run on it;
+* **integration** — fused and loop aggregation see the same wire bytes and
+  (to float tolerance) the same trajectory at int8; the streaming
+  service's replay digest is invariant to the wire format while bytes on
+  the wire shrink >= 3.5x; the VersionStore's quantized ring shrinks the
+  resident history ~4x with reads equal across in-window/spilled/gather.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import (ErrorFeedback, QuantConfig,
+                                 dequantize_flat_np, leaf_payload_bytes,
+                                 quantize_delta_stack, quantize_flat,
+                                 tree_payload_bytes)
+from repro.core.versions import VersionStore
+
+
+def _stack(B, sizes, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {f"l{i}": jax.random.normal(jax.random.fold_in(k, i), (B, n))
+            for i, n in enumerate(sizes)}
+
+
+def _rows_equal(qt_a, qt_b, row_a, row_b):
+    for qa, qb in zip(qt_a.q, qt_b.q):
+        np.testing.assert_array_equal(np.asarray(qa[row_a]),
+                                      np.asarray(qb[row_b]))
+    for sa, sb in zip(qt_a.s, qt_b.s):
+        np.testing.assert_array_equal(np.asarray(sa[row_a]),
+                                      np.asarray(sb[row_b]))
+
+
+# --------------------------------------------------------------------------- #
+# Config + payload accounting
+# --------------------------------------------------------------------------- #
+
+
+def test_config_validation_and_identity():
+    assert not QuantConfig().enabled
+    assert QuantConfig(bits=8).qmax == 127
+    assert QuantConfig(bits=4).qmax == 7
+    assert QuantConfig(bits=32) == QuantConfig()
+    with pytest.raises(ValueError):
+        QuantConfig(bits=16)
+    with pytest.raises(ValueError):
+        QuantConfig(store_bits=2)
+    with pytest.raises(ValueError):
+        quantize_delta_stack(_stack(1, (64,)), [0], 0, QuantConfig())
+
+
+def test_payload_bytes_accounting():
+    int8 = QuantConfig(bits=8)
+    # 437 coords: 437 payload bytes + 4 tiles of f32 scale
+    assert leaf_payload_bytes(437, int8) == 437 + 4 * 4
+    assert leaf_payload_bytes(437, QuantConfig()) == 4 * 437
+    # int4 packs two coords per byte on the wire
+    assert leaf_payload_bytes(256, QuantConfig(bits=4)) == 128 + 4 * 2
+    tpl = {"w": jnp.zeros((256, 392)), "b": jnp.zeros((1568,))}
+    ratio = (tree_payload_bytes(tpl, QuantConfig())
+             / tree_payload_bytes(tpl, int8))
+    assert ratio >= 3.5, ratio
+    # and the stack quantizer reports exactly B x the per-row bytes
+    B = 3
+    qt, _, nbytes = quantize_delta_stack(_stack(B, (437, 90)), [5, 1, 2],
+                                         0, int8)
+    per_row = (leaf_payload_bytes(437, int8)
+               + leaf_payload_bytes(90, int8))
+    assert nbytes == B * per_row == B * qt.wire_bytes_per_row
+
+
+# --------------------------------------------------------------------------- #
+# Round-trip bounds
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_round_trip_bounded_by_one_step(bits, dtype):
+    """|x - deq(quant(x))| <= the tile's quantization step (max|x|/qmax),
+    stochastic and nearest, including a ragged tail tile."""
+    tile, n = 128, 1000
+    rng = np.random.default_rng(3)
+    x = np.asarray(jnp.asarray(rng.normal(size=n) * 5.0, dtype),
+                   np.float32)
+    qmax = (1 << (bits - 1)) - 1
+    for u in (None, rng.random(n)):
+        q, s = quantize_flat(x, bits, tile, u)
+        assert q.dtype == np.int8 and np.abs(q).max() <= qmax
+        err = np.abs(x - dequantize_flat_np(q, s, tile))
+        t = s.shape[0]
+        step = np.repeat(s, tile)[:n]
+        assert np.all(err <= step * (1 + 1e-5) + 1e-12), err.max()
+        assert t == -(-n // tile)
+
+
+def test_zero_tiles_quantize_exactly():
+    x = np.zeros(300, np.float32)
+    q, s = quantize_flat(x, 8, 128, np.random.default_rng(0).random(300))
+    assert not q.any() and not s.any()
+    np.testing.assert_array_equal(dequantize_flat_np(q, s, 128), x)
+
+
+# --------------------------------------------------------------------------- #
+# Replay determinism + error feedback
+# --------------------------------------------------------------------------- #
+
+
+def test_replay_is_bitwise_identical_and_batching_invariant():
+    cfg = QuantConfig(bits=8)
+    stack = _stack(4, (437, 90), seed=1)
+    clients = [3, 1, 2, 0]
+    qt1, deq1, _ = quantize_delta_stack(stack, clients, 7, cfg)
+    qt2, deq2, _ = quantize_delta_stack(stack, clients, 7, cfg)
+    for a, b in zip(qt1.q + qt1.s, qt2.q + qt2.s):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        deq1, deq2)
+    # batching invariance: quantizing clients [3,1] and [2,0] separately
+    # yields the same per-row payloads (streams are per-upload, not
+    # per-cohort)
+    half_a = {k: v[:2] for k, v in stack.items()}
+    half_b = {k: v[2:] for k, v in stack.items()}
+    qa, _, _ = quantize_delta_stack(half_a, clients[:2], 7, cfg)
+    qb, _, _ = quantize_delta_stack(half_b, clients[2:], 7, cfg)
+    _rows_equal(qt1, qa, 0, 0)
+    _rows_equal(qt1, qa, 1, 1)
+    _rows_equal(qt1, qb, 2, 0)
+    _rows_equal(qt1, qb, 3, 1)
+    # a different round draws a different rounding stream
+    qt3, _, _ = quantize_delta_stack(stack, clients, 8, cfg)
+    assert any(np.asarray(a).tobytes() != np.asarray(b).tobytes()
+               for a, b in zip(qt1.q, qt3.q))
+
+
+def test_ef_chain_replay_is_bitwise_identical():
+    """Two independent replays of a 3-round EF chain produce the same
+    quantized stream byte for byte — the soak/replay contract."""
+    cfg = QuantConfig(bits=8)
+    streams = []
+    for _ in range(2):
+        ef = ErrorFeedback()
+        out = []
+        for t in range(3):
+            qt, _, _ = quantize_delta_stack(_stack(2, (200,), seed=t),
+                                            [0, 1], t, cfg, ef)
+            out.append(b"".join(np.asarray(x).tobytes()
+                                for x in qt.q + qt.s))
+        assert len(ef) == 2
+        streams.append(b"".join(out))
+    assert streams[0] == streams[1]
+
+
+def test_ef_drains_constant_deltas():
+    """With EF the running sum of dequantized uploads tracks the true sum
+    to within ONE quantization step, independent of T — so the mean
+    converges at O(1/T). Without EF the bias accumulates freely."""
+    for bits in (8, 4):
+        cfg = QuantConfig(bits=bits, stochastic=False)
+        d = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(5), (256,)), np.float32)
+        stack = {"l": jnp.asarray(d)[None, :]}
+        T = 8
+        ef = ErrorFeedback()
+        total = np.zeros_like(d)
+        for t in range(T):
+            _, deq, _ = quantize_delta_stack(stack, [0], t, cfg, ef)
+            total += np.asarray(deq["l"][0])
+        step = 2.0 * np.abs(d).max() / cfg.qmax
+        err_sum = np.abs(total - T * d).max()
+        assert err_sum <= step, (bits, err_sum, step)
+        assert ef.residual_norm(0) <= step
+        # the residual IS the sum error: e_T = T*d - sum(deq)
+        np.testing.assert_allclose(ef.residual(0), T * d - total,
+                                   atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# Integration: server paths, service digest, VersionStore ring
+# --------------------------------------------------------------------------- #
+
+
+def test_fused_and_loop_see_same_wire_at_int8():
+    """The fused stacked round and the per-client loop oracle quantize the
+    same uploads: equal bytes-on-wire, trajectories equal to float
+    tolerance (the quantized streams are identical; only fp32 reduction
+    order differs)."""
+    from repro.sim import scenarios
+
+    finals, wires = [], []
+    for fused in (True, False):
+        run = scenarios.build("degenerate_sync", seed=0, horizon=3.0,
+                              gi_iters=2, mesh=None, fused_step=fused,
+                              quant_bits=8)
+        s = run.run()
+        finals.append(jax.tree_util.tree_map(np.asarray,
+                                             run.server.global_params))
+        wires.append(s["server"]["wire_bytes"])
+        assert s["server"]["quant_bits"] == 8
+    assert wires[0] == wires[1] > 0
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5), *finals)
+
+
+def test_quant_bits_32_is_the_default_identity():
+    from repro.sim.scenarios import fl_setup
+
+    server, _, _ = fl_setup(0, gi_iters=2, quant_bits=32)
+    assert server.cfg.quant == QuantConfig()
+    assert not server.cfg.quant.enabled
+
+
+def test_service_digest_invariant_to_wire_format():
+    """fp32 and int8 services replay the same log to the SAME event
+    digest (compression never changes which aggregations fire) while the
+    int8 service puts >= 3.5x fewer bytes on the wire."""
+    from repro.service import ServiceConfig, build_service, synthetic_log
+
+    log = synthetic_log(n_clients=6, horizon=3.0, seed=0, slow_ids=(0, 1))
+    cfg = ServiceConfig(trigger="fedbuff", k=3, queue_capacity=8,
+                        admission="coalesce", max_cohort=4)
+    out = {}
+    for bits in (32, 8):
+        svc = build_service(seed=0, strategy="ours", gi_iters=2,
+                            segment_iters=0, max_lanes=0, cfg=cfg,
+                            quant_bits=bits)
+        svc.run_log(log)
+        out[bits] = (svc.digest(), svc.counters["payload_bytes"],
+                     svc.counters["arrivals"])
+    assert out[32][0] == out[8][0]
+    assert out[32][2] == out[8][2] > 0
+    assert out[32][1] / out[8][1] >= 3.5
+
+
+def test_versionstore_quantized_ring():
+    """store_bits=8: ~4x smaller resident ring; reads are within one
+    deterministic quantization step; spilled reads and gathers equal the
+    in-window read path bit for bit."""
+    tpl = {"w": jnp.zeros((40, 13), jnp.float32),
+           "b": jnp.zeros((29,), jnp.float32)}
+    cfg = QuantConfig(store_bits=8)
+    vs = VersionStore(tpl, capacity=4, spill=True, quant=cfg)
+    exact = VersionStore(tpl, capacity=4, spill=True)
+    assert exact.device_bytes / vs.device_bytes >= 3.5
+    versions = []
+    for v in range(7):
+        k = jax.random.PRNGKey(v)
+        p = {"w": jax.random.normal(k, (40, 13)),
+             "b": jax.random.normal(jax.random.fold_in(k, 1), (29,))}
+        versions.append(p)
+        assert vs.append(p) == v
+    assert vs.n_spilled == 3
+    for v, p in enumerate(versions):
+        got = vs[v]
+        for key in p:
+            x = np.asarray(p[key])
+            err = np.abs(np.asarray(got[key]) - x)
+            bound = np.abs(x).max() / 127 * (1 + 1e-5)
+            assert err.max() <= bound, (v, key, err.max(), bound)
+    # gather (spilled + in-window rows) == itemized reads, bitwise
+    rows = [0, 2, 5, 6]
+    g = vs.gather(rows)
+    for j, v in enumerate(rows):
+        one = vs[v]
+        for key in one:
+            np.testing.assert_array_equal(
+                np.asarray(g[key][j]), np.asarray(one[key]))
+
+
+def test_unquantized_store_ignores_fp32_quant_config():
+    tpl = {"w": jnp.zeros((8, 3))}
+    vs = VersionStore(tpl, capacity=2, quant=QuantConfig(bits=8))
+    assert vs.quant is None  # store_bits=32: the ring stays exact

@@ -328,7 +328,8 @@ def test_sweep_runner_merged_json(tmp_path):
             (tmp_path / f"trajectory_degenerate_sync_seed{seed}.json")
             .read_text())
         assert traj["summary"]["aggregations"] >= 1
-        assert traj["step_walls"], "bridge wall-time rows missing"
+        assert traj["metrics"], "bridge wall-time rows missing"
+        assert "step_walls" not in traj   # one-release alias, now removed
 
     rc = sweep.main(["--scenario", "nope_not_real", "--seeds", "1",
                      "--out", str(tmp_path)])
